@@ -1,0 +1,55 @@
+"""Paper Fig. 4 column 1 — choosing the fastest insertion algorithm.
+
+Protocol (scaled for CPU): start with a static array of N elements and
+duplicate its size per wave by inserting N more with each algorithm:
+``atomic`` (serialized counter), ``scan`` (cumsum / warp-shuffle analog),
+``matmul`` (the tensor-core scan algorithm in XLA ops).  The paper's claims
+under test: shuffle-scan fastest, atomic slowest, tensor-core competitive
+but workload-starved at 1 element/thread.
+
+The serialized ``atomic`` path is capped at 2^15-element waves (it is the
+paper's pathological baseline; CPU wall-clock past that adds minutes, not
+information) — capping is logged per the no-silent-caps rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core.insertion import insertion_offsets
+from repro.kernels.scan_mxu import ref as mxu_ref
+
+from benchmarks.common import emit, timeit
+
+START = 1 << 12
+DUPS = 7
+ATOMIC_CAP = 1 << 15
+
+
+def _insert_with(method: str, mask: jax.Array) -> jax.Array:
+    if method == "matmul":
+        m = mask.astype(jnp.int32)
+        inc = mxu_ref.row_scan_matmul(m)
+        return inc - m, inc[:, -1]
+    return insertion_offsets(mask, method=method)
+
+
+def main() -> None:
+    for method in ("atomic", "scan", "matmul"):
+        size = START
+        for wave in range(DUPS):
+            if method == "atomic" and size > ATOMIC_CAP:
+                emit(f"fig4.insertion.{method}.n{size}", float("nan"),
+                     "capped: serialized baseline beyond 2^15 (logged, not silent)")
+                size *= 2
+                continue
+            mask = jnp.ones((1, size), bool)
+            fn = jax.jit(lambda m=mask, meth=method: _insert_with(meth, m))
+            us = timeit(fn, repeats=3, warmup=1)
+            emit(f"fig4.insertion.{method}.n{size}", us, f"elements={size}")
+            size *= 2
+
+
+if __name__ == "__main__":
+    main()

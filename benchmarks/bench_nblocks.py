@@ -1,0 +1,48 @@
+"""Paper Fig. 4 columns 2–3 — choosing the optimal number of LFVectors.
+
+Sweeps nblocks ∈ {8, 32, 128, 512}: time one duplication (grow + insert) and
+read/write passes in both access modes (rw_g global binary search, rw_b
+per-block).  Paper claims under test: few blocks → slow growth (no insert
+parallelism); ≥32 blocks → rw_b faster and improving with block count;
+rw_g pays the search overhead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ggarray as gg
+
+from benchmarks.common import emit, timeit
+
+TOTAL = 1 << 17  # elements in the array before the timed duplication
+
+
+def main() -> None:
+    for nblocks in (8, 32, 128, 512):
+        per_block = TOTAL // nblocks
+        arr = gg.init(nblocks, b0=max(per_block // 8, 1))
+        arr = gg.ensure_capacity(arr, per_block)
+        elems = jnp.ones((nblocks, per_block), jnp.float32)
+        arr, _ = gg.push_back(arr, elems)
+
+        # grow + insert one duplication (returns buckets: keep writes live)
+        def dup(a=arr, e=elems):
+            a2 = gg.ensure_capacity(a, e.shape[1])
+            a2, _ = gg.push_back(a2, e)
+            return a2.buckets
+
+        emit(f"fig4.grow_insert.blocks{nblocks}", timeit(dup, repeats=3), f"n={TOTAL}->{2*TOTAL}")
+
+        # rw_b: one fused pass per bucket, no search
+        rw_b = jax.jit(lambda a: gg.map_elements(a, lambda x: x + 1.0).buckets)
+        emit(f"fig4.rw_b.blocks{nblocks}", timeit(lambda: rw_b(arr), repeats=3), f"n={TOTAL}")
+
+        # rw_g: global index + binary search per element
+        idx = jnp.arange(TOTAL, dtype=jnp.int32)
+        rw_g = jax.jit(lambda a, i: gg.write_global(a, i, gg.read_global(a, i) + 1.0).buckets)
+        emit(f"fig4.rw_g.blocks{nblocks}", timeit(lambda: rw_g(arr, idx), repeats=3), f"n={TOTAL}")
+
+
+if __name__ == "__main__":
+    main()

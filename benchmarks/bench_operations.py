@@ -1,0 +1,70 @@
+"""Paper Table II / Fig. 5 — grow / insert / read-write across structures.
+
+Structures: static (pre-allocated), semistatic-realloc (doubling + copy),
+semistatic-memMap (doubling, allocation timed, copy excluded — the CUDA VMM
+remap has no XLA analog, see core/baselines.py), GGArray32, GGArray512.
+The read/write op is the paper's kernel: add +1, 30 times, to every element.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core import ggarray as gg
+from repro.configs.ggarray_demo import CONFIG as DEMO
+
+from benchmarks.common import emit, timeit
+
+N = 1 << 17  # scaled stand-in for the paper's 5.12e8 final size
+REPEATS = DEMO.rw_op_repeats
+
+
+def _work(x):
+    for _ in range(REPEATS):
+        x = x + 1.0
+    return x
+
+
+def main() -> None:
+    elems_flat = jnp.ones((N,), jnp.float32)
+
+    # ---- static ----
+    st = bl.static_init(2 * N)
+    st, _ = bl.static_push_back(st, elems_flat)
+    emit("table2.static.grow", 0.0, "no grow operation exists")
+    ins = jax.jit(lambda a, e: bl.static_push_back(a, e)[0].data)
+    emit("table2.static.insert", timeit(lambda: ins(st, elems_flat), repeats=3), f"n={N}")
+    rw = jax.jit(lambda a: _work(a.data))
+    emit("table2.static.rw", timeit(lambda: rw(st), repeats=3), f"n={N} x{REPEATS}")
+
+    # ---- semistatic: realloc (timed copy) vs memMap (alloc only) ----
+    semi = bl.SemiStaticArray.create(N)
+    semi.push_back(elems_flat)
+    emit("table2.semistatic_realloc.grow", timeit(lambda: semi.grow_alloc_only().at[:N].set(semi.arr.data), repeats=3), "alloc+copy")
+    emit("table2.memMap.grow", timeit(lambda: semi.grow_alloc_only() + 0.0, repeats=3), "alloc only (VMM remap analog)")
+    semi.ensure_capacity(N)
+    emit("table2.memMap.insert", timeit(lambda: ins(semi.arr, elems_flat), repeats=3), f"n={N}")
+    emit("table2.memMap.rw", timeit(lambda: rw(semi.arr), repeats=3), f"n={N} x{REPEATS}")
+
+    # ---- GGArray 32 / 512 blocks ----
+    for nblocks in (32, 512):
+        per_block = N // nblocks
+        arr = gg.init(nblocks, b0=max(per_block // 8, 1))
+        arr = gg.ensure_capacity(arr, per_block)
+        arr, _ = gg.push_back(arr, jnp.ones((nblocks, per_block), jnp.float32))
+        emit(
+            f"table2.ggarray{nblocks}.grow",
+            timeit(lambda a=arr: gg.grow(a).buckets[-1], repeats=3),
+            "bucket alloc, copy-free",
+        )
+        arr2 = gg.grow(arr)
+        ins_g = jax.jit(lambda a, e: gg.push_back(a, e)[0].buckets)
+        e2 = jnp.ones((nblocks, per_block), jnp.float32)
+        emit(f"table2.ggarray{nblocks}.insert", timeit(lambda: ins_g(arr2, e2), repeats=3), f"n={N}")
+        rw_b = jax.jit(lambda a: gg.map_elements(a, _work).buckets)
+        emit(f"table2.ggarray{nblocks}.rw", timeit(lambda: rw_b(arr2), repeats=3), f"n={N} x{REPEATS} (rw_b)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 6 — two-phase application: GGArray speedup over memMap.
+
+Grow phase: waves of insertions (size doubles per wave).  Work phase: the
+paper's kernel (+1, 30×) applied W ∈ {1, 10, 100, 1000} times.  GGArray path
+inserts into buckets then **flattens once** and works on the flat array; the
+memMap path works directly on its contiguous buffer but pays host-resize on
+every growth.  Claim under test: the dynamic structure's overhead is
+amortized as W grows (speedup → ~1 and the crossover is visible).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core import ggarray as gg
+
+from benchmarks.common import emit, timeit
+
+START = 1 << 12
+WAVES = 4
+NBLOCKS = 32
+
+
+def _work_once(x):
+    for _ in range(30):
+        x = x + 1.0
+    return x
+
+
+def _ggarray_run(W: int) -> None:
+    per0 = START // NBLOCKS
+    arr = gg.init(NBLOCKS, b0=max(per0 // 2, 1))
+    size = START
+    for wave in range(WAVES):
+        per = size // NBLOCKS
+        arr = gg.ensure_capacity(arr, per)
+        arr, _ = gg.push_back(arr, jnp.ones((NBLOCKS, per), jnp.float32))
+        size *= 2
+    flat, n = gg.flatten(arr)
+    work = jax.jit(lambda x: jax.lax.fori_loop(0, W, lambda _, y: _work_once(y), x))
+    jax.block_until_ready(work(flat))
+
+
+def _memmap_run(W: int) -> None:
+    semi = bl.SemiStaticArray.create(START)
+    size = START
+    for wave in range(WAVES):
+        semi.push_back(jnp.ones((size,), jnp.float32))  # doubles + copies
+        size *= 2
+    work = jax.jit(lambda x: jax.lax.fori_loop(0, W, lambda _, y: _work_once(y), x))
+    jax.block_until_ready(work(semi.arr.data))
+
+
+def main() -> None:
+    for W in (1, 10, 100, 1000):
+        t_gg = timeit(lambda: _ggarray_run(W), repeats=3, warmup=1)
+        t_mm = timeit(lambda: _memmap_run(W), repeats=3, warmup=1)
+        emit(f"fig6.two_phase.W{W}", t_gg, f"speedup_vs_memMap={t_mm / t_gg:.3f}")
+
+
+if __name__ == "__main__":
+    main()

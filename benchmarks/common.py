@@ -1,0 +1,38 @@
+"""Benchmark harness utilities: timing + the run.py CSV contract.
+
+CSV contract (assignment): every benchmark emits ``name,us_per_call,derived``
+rows.  All wall-clock numbers here are CPU-relative — the claims under test
+are *orderings and asymptotics* from the paper (atomic ≪ scan, GGArray r/w
+slower than static, memory ≤ 2×), not absolute ms (EXPERIMENTS.md §Method).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["timeit", "emit", "Row"]
+
+
+def timeit(fn: Callable[[], Any], *, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time in µs (blocks on all returned jax arrays)."""
+    def once() -> float:
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) * 1e6
+
+    for _ in range(warmup):
+        once()
+    times = sorted(once() for _ in range(repeats))
+    return times[len(times) // 2]
+
+
+class Row:
+    rows: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    Row.rows.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md §Roofline / §Dry-run tables from results/dryrun/*.json.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline_table [--mesh pod16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh_tag: str) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh_tag}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def render(mesh_tag: str) -> str:
+    rows = load(mesh_tag)
+    out = [
+        f"### Mesh {rows[0]['mesh'] if rows else mesh_tag} ({rows[0]['chips'] if rows else '?'} chips)",
+        "",
+        "| arch × shape | HBM/dev | compute | memory | collective | bound | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        name = f"{r['arch']} × {r['shape']}"
+        if r["status"] == "skipped":
+            out.append(f"| {name} | — | — | — | — | skip | — | {r['skip_reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {name} | ERROR | | | | | | {r['error'][:60]} |")
+            continue
+        t = r["roofline"]
+        mf = r["model_flops"]
+        # roofline fraction: useful model flops at peak vs the step lower bound
+        ideal = mf["model_flops_per_device"] / 197e12
+        frac = ideal / t["step_s_lower_bound"] if t["step_s_lower_bound"] else 0.0
+        out.append(
+            f"| {name} | {r['memory']['hbm_used_bytes'] / 1e9:.1f}GB"
+            f"{'' if r['memory']['fits_16gb'] else ' ⚠'} "
+            f"| {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} "
+            f"| {fmt_s(t['collective_s'])} | {t['bound']} "
+            f"| {r['useful_flop_ratio']:.2f} | {frac:.1%} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, choices=["pod16x16", "pod2x16x16"])
+    args = ap.parse_args()
+    tags = [args.mesh] if args.mesh else ["pod16x16", "pod2x16x16"]
+    for tag in tags:
+        if glob.glob(os.path.join(RESULTS, f"*__{tag}.json")):
+            print(render(tag))
+            print()
+
+
+if __name__ == "__main__":
+    main()

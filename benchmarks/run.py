@@ -1,0 +1,44 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (assignment contract).  Roofline
+numbers come from the dry-run artifacts (benchmarks/roofline_table.py), not
+from CPU wall-clock.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_insertion,
+        bench_kvcache,
+        bench_memory,
+        bench_nblocks,
+        bench_operations,
+        bench_two_phase,
+    )
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (
+        bench_memory,       # Fig. 3 (fast, analytic)
+        bench_insertion,    # Fig. 4 col 1
+        bench_nblocks,      # Fig. 4 cols 2-3
+        bench_operations,   # Table II / Fig. 5
+        bench_two_phase,    # Fig. 6
+        bench_kvcache,      # beyond-paper serving payoff
+    ):
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

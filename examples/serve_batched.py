@@ -1,0 +1,50 @@
+"""Batched serving example (deliverable b): GGArray KV cache end to end.
+
+Serves a small model with batched requests of different lengths, comparing
+the three cache policies on the same prompts: identical outputs, different
+growth behavior (copy-free vs copying vs worst-case pre-allocation).
+
+    PYTHONPATH=src python examples/serve_batched.py --new-tokens 24
+"""
+import argparse
+import time
+
+import jax
+
+from repro import configs
+from repro.models import transformer
+from repro.serving.engine import Engine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch, cache_b0=8)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[1, 2, 3, 4, 5, 6, 7], [11, 12, 13], [21, 22, 23, 24], [31, 32]]
+
+    outputs = {}
+    for policy in ("ggarray", "semistatic", "static"):
+        eng = Engine(params, cfg, policy=policy, max_len=256)
+        t0 = time.perf_counter()
+        outputs[policy] = eng.generate(prompts, max_new_tokens=args.new_tokens)
+        dt = time.perf_counter() - t0
+        s = eng.stats
+        print(
+            f"{policy:10s}: {len(prompts) * args.new_tokens / dt:7.1f} tok/s  "
+            f"grows={s.grow_events}  copied={s.copied_bytes / 1e3:.1f}KB  "
+            f"allocated={s.allocated_bytes / 1e3:.1f}KB  recompiles={s.compiles}"
+        )
+
+    assert outputs["ggarray"] == outputs["semistatic"] == outputs["static"], (
+        "all cache policies must produce identical tokens"
+    )
+    print("✓ identical generations across policies")
+    print("sample:", outputs["ggarray"][0][:12], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end training driver example (deliverable b).
+
+Trains a small qwen-family model for a few hundred steps with the full
+substrate: deterministic data, AdamW + warmup-cosine, checkpointing, resume.
+Default is a fast CPU preset; ``--model-size 100m --steps 300`` reproduces
+the assignment's ~100M-parameter run on real hardware.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --model-size 100m --steps 300
+"""
+import argparse
+
+from repro import configs
+from repro.train import loop as loop_mod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model-size", default="10m", choices=["2m", "10m", "100m"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    dims = {
+        "2m": dict(d_model=128, n_layers=4, n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=4096),
+        "10m": dict(d_model=256, n_layers=6, n_heads=8, n_kv_heads=4, d_ff=1024, vocab_size=8192),
+        "100m": dict(d_model=768, n_layers=12, n_heads=12, n_kv_heads=4, d_ff=3072, vocab_size=32768),
+    }[args.model_size]
+    cfg = configs.reduced("qwen2.5-3b", **dims)
+    print(f"model: {cfg.param_counts()['total'] / 1e6:.1f}M params")
+
+    losses = []
+    out = loop_mod.run(
+        cfg,
+        loop_mod.LoopConfig(
+            steps=args.steps,
+            batch=args.batch,
+            seq=args.seq,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=50,
+            async_ckpt=True,
+            warmup=20,
+            lr=3e-4,
+            log_every=20,
+        ),
+        on_metrics=lambda it, m: losses.append(float(m["loss"])),
+    )
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"loss: {first:.3f} → {last:.3f} over {len(out['losses'])} steps "
+          f"(resumed from {out['start_step']})")
+    assert last < first, "training should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — GGArray (CS.DC 2022) as a TPU-native substrate for a multi-pod
+JAX LM framework. See README.md / DESIGN.md for the map."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from repro.analysis import roofline
+
+__all__ = ["roofline"]

@@ -1,0 +1,115 @@
+"""Scan-aware FLOP / HBM-traffic counting over jaxprs.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` (scan) body **once**,
+which undercounts a 64-layer scanned model by ~64× (verified empirically in
+the dry-run).  This module walks the *jaxpr* instead: ``scan`` multiplies its
+body cost by trip count, remat recompute appears explicitly (so the
+MODEL_FLOPS/HLO ratio still exposes remat waste), and the numbers are
+backend-independent.
+
+Conventions:
+- ``flops``: matmul/conv only (2·M·N·K), the MFU convention.
+- ``hbm_bytes``: an *unfused traffic model* — every eqn's output bytes, plus
+  operand bytes for data-moving/contracting ops (dot, conv, gather, scatter,
+  reduce, sort).  Fusion makes real traffic lower; the model is consistent
+  across before/after comparisons, which is what the §Perf loop needs.
+  XLA's own (scan-once) numbers are recorded alongside in the dry-run JSON.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["count_fn", "count_jaxpr"]
+
+_CONTRACTING = {
+    "dot_general", "conv_general_dilated", "gather", "scatter", "scatter-add",
+    "scatter_add", "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "reduce_and", "reduce_or", "argmax", "argmin", "sort", "cumsum",
+    "cumlogsumexp", "cummax", "cumprod", "dynamic_slice", "dynamic_update_slice",
+}
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr", "body_jaxpr")
+
+
+def _aval_bytes(v) -> int:
+    aval = v.aval
+    if not hasattr(aval, "shape"):
+        return 0
+    return int(np.prod(aval.shape, dtype=np.int64)) * aval.dtype.itemsize if aval.shape else aval.dtype.itemsize
+
+
+def _dot_flops(eqn) -> int:
+    (lhs, rhs) = eqn.invars[:2]
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    lshape = lhs.aval.shape
+    batch = int(np.prod([lshape[i] for i in lb], dtype=np.int64)) if lb else 1
+    k = int(np.prod([lshape[i] for i in lc], dtype=np.int64)) if lc else 1
+    m = int(np.prod([d for i, d in enumerate(lshape) if i not in lc and i not in lb], dtype=np.int64))
+    rshape = rhs.aval.shape
+    n = int(np.prod([d for i, d in enumerate(rshape) if i not in rc and i not in rb], dtype=np.int64))
+    return 2 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    out_elems = int(np.prod(out.shape, dtype=np.int64))
+    # flops per output element ≈ 2 × (kernel spatial × in-channels)
+    kernel = int(np.prod(rhs.shape, dtype=np.int64)) // max(rhs.shape[-1], 1)
+    return 2 * out_elems * kernel
+
+
+def count_jaxpr(jaxpr, mult: int = 1) -> dict[str, float]:
+    flops = 0.0
+    byts = 0.0
+    notes: list[str] = []
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        sub = None
+        submult = mult
+        if prim == "scan":
+            sub = eqn.params["jaxpr"].jaxpr
+            submult = mult * int(eqn.params["length"])
+        elif prim == "while":
+            sub = eqn.params["body_jaxpr"].jaxpr
+            notes.append("while:trip-count-unknown(counted once)")
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            costs = [count_jaxpr(b.jaxpr, mult) for b in branches]
+            best = max(costs, key=lambda c: c["flops"])
+            flops += best["flops"]
+            byts += best["hbm_bytes"]
+            continue
+        else:
+            for key in _SUBJAXPR_PARAMS:
+                if key in eqn.params:
+                    cj = eqn.params[key]
+                    sub = cj.jaxpr if hasattr(cj, "jaxpr") else cj
+                    break
+        if sub is not None:
+            inner = count_jaxpr(sub, submult)
+            flops += inner["flops"]
+            byts += inner["hbm_bytes"]
+            notes.extend(inner.get("notes", []))
+            continue
+        out_bytes = sum(_aval_bytes(v) for v in eqn.outvars)
+        byts += mult * out_bytes
+        if prim == "dot_general":
+            flops += mult * _dot_flops(eqn)
+            byts += mult * sum(_aval_bytes(v) for v in eqn.invars)
+        elif prim == "conv_general_dilated":
+            flops += mult * _conv_flops(eqn)
+            byts += mult * sum(_aval_bytes(v) for v in eqn.invars)
+        elif prim in _CONTRACTING or prim.startswith(("reduce", "cum")):
+            byts += mult * sum(_aval_bytes(v) for v in eqn.invars)
+    return {"flops": flops, "hbm_bytes": byts, "notes": notes}
+
+
+def count_fn(fn, *args, **kwargs) -> dict[str, float]:
+    """Trace ``fn`` (ShapeDtypeStruct args fine) and count its jaxpr."""
+    jaxpr = jax.make_jaxpr(fn, **kwargs)(*args)
+    return count_jaxpr(jaxpr.jaxpr)

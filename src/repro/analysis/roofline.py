@@ -1,0 +1,225 @@
+"""Roofline extraction from compiled dry-run artifacts (assignment §Roofline).
+
+Terms per (arch × shape × mesh) cell, all in seconds per step:
+
+  compute    = FLOPs_per_device / peak_FLOPs            (197 TFLOP/s bf16)
+  memory     = bytes_per_device / HBM_bw                (819 GB/s)
+  collective = Σ collective_bytes_per_device × traffic_factor / link_bw
+                                                        (50 GB/s/link ICI)
+
+``cost_analysis()`` on the SPMD-partitioned executable reports **per-device**
+FLOPs/bytes (verified empirically), so no chip division is needed.
+Collective bytes are not in cost_analysis: we parse the post-SPMD HLO text
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, weighting by the standard ring traffic
+factors — all-reduce 2(n−1)/n, all-gather & reduce-scatter (n−1)/n,
+all-to-all (n−1)/n, permute 1 — with n = participants per replica group
+(parsed from the op's ``replica_groups``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+
+# TPU v5e per chip (assignment constants)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO result type (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_SHAPE_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2
+
+
+def _traffic_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def _parse_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Split HLO text into {computation_name: [lines]}."""
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in hlo_text.splitlines():
+        # computation headers: `%name (args...) -> ret {` — args/ret may nest
+        # parens/brackets (tuples), so match greedily up to the trailing `{`.
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$", line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+_CALL_RE = re.compile(r"(?:to_apply|body|calls)=%?([\w.\-]+)")
+_COND_REF_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"direction=LT")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _while_trip_count(cond_lines: list[str], body_lines: list[str]) -> int:
+    """Best-effort trip count: LT-compare against a constant in the condition."""
+    consts = []
+    for line in cond_lines:
+        if "compare" in line and _TRIP_RE.search(line):
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+    for line in cond_lines:  # constants defined on their own lines
+        if "constant(" in line and "s32" in line:
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device weighted collective bytes by op kind, **loop-aware**.
+
+    XLA prints each while body once; collectives inside execute trip-count
+    times.  We walk the computation call graph from ENTRY, multiplying by
+    parsed trip counts (best-effort: unparsed loops count once and are
+    flagged in ``unparsed_loops``).
+    """
+    comps = _parse_computations(hlo_text)
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    out: dict[str, float] = {"total_weighted": 0.0, "total_raw": 0.0, "unparsed_loops": 0.0}
+    seen_stack: set[str] = set()
+
+    def walk(name: str, mult: float) -> None:
+        if name not in comps or name in seen_stack:
+            return
+        seen_stack.add(name)
+        for line in comps[name]:
+            m = _COLL_RE.match(line)
+            if m:
+                type_str, op = m.group(1), m.group(2)
+                raw = _shape_bytes(type_str)
+                n = _group_size(line)
+                w = raw * _traffic_factor(op, n)
+                out[op] = out.get(op, 0.0) + w * mult
+                out["total_weighted"] += w * mult
+                out["total_raw"] += raw * mult
+            if " while(" in line or line.strip().startswith("while("):
+                body = _CALL_RE.search(line)
+                cond = _COND_REF_RE.search(line)
+                trips = 1
+                if body and cond and cond.group(1) in comps:
+                    trips = _while_trip_count(comps[cond.group(1)], comps.get(body.group(1), []))
+                    if trips <= 1:
+                        out["unparsed_loops"] += 1
+                if body:
+                    walk(body.group(1), mult * max(trips, 1))
+                continue
+            for callee in _CALL_RE.findall(line):
+                walk(callee, mult)
+        seen_stack.discard(name)
+
+    if entry:
+        walk(entry, 1.0)
+    return out
+
+
+def roofline_terms(
+    cost: dict[str, Any], coll: dict[str, float], hw: HW = HW()
+) -> dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("total_weighted", 0.0))
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    coll_s = cbytes / hw.ici_bw
+    bound = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+        key=lambda kv: kv[1],
+    )[0]
+    step_s = max(compute_s, memory_s, coll_s)
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": cbytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "bound": bound,
+        "step_s_lower_bound": step_s,
+    }
+
+
+def model_flops(cfg, shape, chips: int) -> dict[str, float]:
+    """Useful-model-FLOPs convention (assignment §Roofline):
+    train: 6·N_active·D tokens; prefill: 2·N_active·D; decode: 2·N_active·B."""
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    if shape.kind == "train":
+        total = 6.0 * n_active * shape.seq_len * shape.global_batch
+    elif shape.kind == "prefill":
+        total = 2.0 * n_active * shape.seq_len * shape.global_batch
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return {
+        "model_flops_total": total,
+        "model_flops_per_device": total / chips,
+        "params_total": counts["total"],
+        "params_active": n_active,
+    }

@@ -1,0 +1,7 @@
+from repro.configs.base import SHAPES, ModelConfig, MoEConfig, ShapeConfig, SSMConfig, sub_quadratic_ready
+from repro.configs.registry import ARCH_NAMES, get, reduced
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+    "sub_quadratic_ready", "ARCH_NAMES", "get", "reduced",
+]

@@ -1,0 +1,29 @@
+"""GGArray core — the paper's contribution as a composable JAX module."""
+from repro.core.ggarray import (
+    GGArray,
+    block_starts,
+    ensure_capacity,
+    flatten,
+    from_flat,
+    gather_block,
+    grow,
+    init,
+    map_elements,
+    memory_elems,
+    needs_grow,
+    push_back,
+    read_global,
+    total_size,
+    write_global,
+)
+from repro.core.baselines import SemiStaticArray, StaticArray, static_init, static_push_back
+from repro.core.insertion import INSERTION_METHODS, insertion_offsets
+from repro.core.lfvector import LFVector
+
+__all__ = [
+    "GGArray", "init", "push_back", "grow", "needs_grow", "ensure_capacity",
+    "flatten", "from_flat", "read_global", "write_global", "gather_block",
+    "map_elements", "total_size", "memory_elems", "block_starts",
+    "StaticArray", "SemiStaticArray", "static_init", "static_push_back",
+    "insertion_offsets", "INSERTION_METHODS", "LFVector",
+]

@@ -1,0 +1,121 @@
+"""Comparison structures from the paper (§III.A): static and semi-static arrays.
+
+``StaticArray``
+    Flat pre-allocated buffer (cudaMalloc-at-start analog).  Insertions run on
+    device with the same parallel insertion algorithms; no resize exists — the
+    caller must pre-size for the worst case (the memory cost Fig. 3 quantifies).
+
+``SemiStaticArray``
+    Flat buffer resized from the host by doubling.  ``copy_on_grow=True`` is
+    classic realloc (allocate 2×, copy everything).  The paper's ``memMap``
+    variant uses the CUDA virtual-memory API to *remap* pages so growth skips
+    the copy; XLA exposes no user-level VMM, so the benchmark harness models
+    memMap by timing allocation only (``grow_alloc_only``) while the data copy
+    still happens for correctness outside the timed region (EXPERIMENTS.md
+    records this explicitly).  GGArray's buckets are the TPU-native way to get
+    the same copy-free growth *without* pretending pages can be remapped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.insertion import insertion_offsets
+
+__all__ = ["StaticArray", "SemiStaticArray", "static_init", "static_push_back"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StaticArray:
+    data: jax.Array  # (capacity, *item_shape)
+    size: jax.Array  # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+
+def static_init(
+    capacity: int, item_shape: Sequence[int] = (), dtype: Any = jnp.float32
+) -> StaticArray:
+    return StaticArray(
+        data=jnp.zeros((capacity, *item_shape), dtype=dtype),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("method",))
+def static_push_back(
+    arr: StaticArray,
+    elems: jax.Array,
+    mask: jax.Array | None = None,
+    method: str = "scan",
+) -> tuple[StaticArray, jax.Array]:
+    """Parallel insertion into a flat array (one global index space)."""
+    if mask is None:
+        mask = jnp.ones(elems.shape[:1], dtype=bool)
+    offsets, count = insertion_offsets(mask[None], method=method)
+    pos = arr.size + offsets[0]
+    tgt = jnp.where(mask, pos, arr.capacity)
+    data = arr.data.at[tgt].set(elems, mode="drop")
+    new = StaticArray(data=data, size=arr.size + count[0])
+    return new, jnp.where(mask, pos, -1)
+
+
+@dataclasses.dataclass
+class SemiStaticArray:
+    """Host-resizable flat array (doubling), paper's semi-static/memMap."""
+
+    arr: StaticArray
+    copy_on_grow: bool = True  # False ≙ memMap accounting (see module docstring)
+
+    @classmethod
+    def create(
+        cls,
+        capacity: int,
+        item_shape: Sequence[int] = (),
+        dtype: Any = jnp.float32,
+        copy_on_grow: bool = True,
+    ) -> "SemiStaticArray":
+        return cls(static_init(capacity, item_shape, dtype), copy_on_grow)
+
+    @property
+    def capacity(self) -> int:
+        return self.arr.capacity
+
+    @property
+    def size(self) -> int:
+        return int(jax.device_get(self.arr.size))
+
+    # -- host-driven growth (the paper's host-synchronized resize) -------
+    def grow_alloc_only(self) -> jax.Array:
+        """Allocate the doubled buffer (the part memMap pays for)."""
+        d = self.arr.data
+        return jnp.zeros((d.shape[0] * 2, *d.shape[1:]), dtype=d.dtype)
+
+    def grow(self) -> None:
+        """Double capacity. realloc copies; memMap remaps (copy untimed)."""
+        new = self.grow_alloc_only()
+        new = jax.lax.dynamic_update_slice_in_dim(new, self.arr.data, 0, axis=0)
+        self.arr = StaticArray(data=new, size=self.arr.size)
+
+    def ensure_capacity(self, n_new: int) -> int:
+        """Grow until ``n_new`` more fit. Returns number of doublings done."""
+        grows = 0
+        while self.size + n_new > self.capacity:
+            self.grow()
+            grows += 1
+        return grows
+
+    def push_back(
+        self, elems: jax.Array, mask: jax.Array | None = None, method: str = "scan"
+    ) -> jax.Array:
+        n = elems.shape[0]
+        self.ensure_capacity(n)
+        self.arr, pos = static_push_back(self.arr, elems, mask, method=method)
+        return pos

@@ -1,0 +1,315 @@
+"""GGArray — a dynamically growable array for TPU/XLA (paper §IV, TPU-adapted).
+
+Structure: ``nblocks`` LFVectors, each a chain of geometric buckets (bucket
+``b`` holds ``B0 * 2**b`` items).  Growth appends a bucket level **without
+copying** any existing element — the property the paper contrasts against
+doubling reallocation.  On TPU, bucket allocation happens at the program
+boundary (XLA has no in-kernel malloc, DESIGN.md §2) but remains copy-free;
+``push_back`` — the hot path — runs fully on device with *no cross-block
+communication*, preserving the paper's block-local synchronization domain
+(block ↦ mesh shard under ``shard_map``).
+
+The pytree has one array per bucket level, shaped ``(nblocks, B0*2**b, *item)``
+(uniform-level allocation; see DESIGN.md §2 for the skew analysis), plus a
+``sizes: (nblocks,)`` vector.  ``len(buckets)`` is static per compiled program;
+geometric growth means only O(log n) distinct structures ever exist.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import indexing
+from repro.core.insertion import insertion_offsets
+
+__all__ = [
+    "GGArray",
+    "init",
+    "push_back",
+    "grow",
+    "needs_grow",
+    "ensure_capacity",
+    "flatten",
+    "from_flat",
+    "read_global",
+    "write_global",
+    "gather_block",
+    "map_elements",
+    "total_size",
+    "memory_elems",
+    "block_starts",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GGArray:
+    """Array of LFVectors (Fig. 2 of the paper)."""
+
+    buckets: tuple[jax.Array, ...]  # level b: (nblocks, B0*2**b, *item_shape)
+    sizes: jax.Array  # (nblocks,) int32 — per-LFVector element count
+    b0: int = dataclasses.field(metadata=dict(static=True), default=8)
+
+    # ---- static geometry ------------------------------------------------
+    @property
+    def nblocks(self) -> int:
+        return self.buckets[0].shape[0]
+
+    @property
+    def nbuckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def item_shape(self) -> tuple[int, ...]:
+        return self.buckets[0].shape[2:]
+
+    @property
+    def dtype(self):
+        return self.buckets[0].dtype
+
+    @property
+    def capacity_per_block(self) -> int:
+        return indexing.capacity(self.b0, self.nbuckets)
+
+    @property
+    def capacity(self) -> int:
+        return self.nblocks * self.capacity_per_block
+
+
+def init(
+    nblocks: int,
+    b0: int = 8,
+    item_shape: Sequence[int] = (),
+    dtype: Any = jnp.float32,
+    nbuckets: int = 1,
+) -> GGArray:
+    """Fresh empty GGArray with ``nbuckets`` pre-allocated levels."""
+    if nbuckets < 1:
+        raise ValueError("need at least one bucket level")
+    buckets = tuple(
+        jnp.zeros((nblocks, sz, *item_shape), dtype=dtype)
+        for sz in indexing.bucket_sizes(b0, nbuckets)
+    )
+    return GGArray(buckets=buckets, sizes=jnp.zeros((nblocks,), jnp.int32), b0=b0)
+
+
+# --------------------------------------------------------------------------
+# Growth (paper Alg. 2 — new_bucket). Copy-free by construction.
+# --------------------------------------------------------------------------
+
+def grow(gg: GGArray, levels: int = 1) -> GGArray:
+    """Append ``levels`` new bucket levels. Never touches existing buckets.
+
+    The TPU analog of ``new_bucket``: runs at the program boundary (allocation
+    is an XLA runtime concern), costs one allocation + (rarely, O(log n) times
+    total) one executable-cache miss downstream. No data movement.
+    """
+    new_sizes = indexing.bucket_sizes(gg.b0, gg.nbuckets + levels)[gg.nbuckets :]
+    new = tuple(
+        jnp.zeros((gg.nblocks, sz, *gg.item_shape), dtype=gg.dtype) for sz in new_sizes
+    )
+    return dataclasses.replace(gg, buckets=gg.buckets + new)
+
+
+def needs_grow(gg: GGArray, n_new_per_block: jax.Array | int) -> jax.Array:
+    """True if any block would overflow after inserting ``n_new_per_block``."""
+    return jnp.any(gg.sizes + n_new_per_block > gg.capacity_per_block)
+
+
+def ensure_capacity(gg: GGArray, n_new_per_block: int) -> GGArray:
+    """Host-side growth loop: grow until every block fits ``n_new_per_block`` more."""
+    max_size = int(jax.device_get(jnp.max(gg.sizes)))
+    nb = gg.nbuckets
+    while indexing.capacity(gg.b0, nb) < max_size + n_new_per_block:
+        nb += 1
+    if nb > gg.nbuckets:
+        gg = grow(gg, nb - gg.nbuckets)
+    return gg
+
+
+# --------------------------------------------------------------------------
+# push_back (paper Alg. 1) — block-local, zero collectives.
+# --------------------------------------------------------------------------
+
+def _scatter_positions(
+    buckets: tuple[jax.Array, ...],
+    b0: int,
+    pos: jax.Array,  # (nblocks, m) target in-block positions
+    valid: jax.Array,  # (nblocks, m) bool
+    elems: jax.Array,  # (nblocks, m, *item)
+) -> tuple[jax.Array, ...]:
+    """Scatter ``elems`` at in-block ``pos`` across bucket levels."""
+    nbuckets = len(buckets)
+    starts = indexing.bucket_starts(b0, nbuckets)
+    sizes = indexing.bucket_sizes(b0, nbuckets)
+    nblocks = pos.shape[0]
+    rows = jnp.arange(nblocks, dtype=jnp.int32)[:, None]
+    out = []
+    for b in range(nbuckets):
+        li = pos - starts[b]
+        in_level = valid & (li >= 0) & (li < sizes[b])
+        # mode="drop": out-of-level / masked-out entries use an OOB index.
+        li = jnp.where(in_level, li, sizes[b])
+        out.append(buckets[b].at[rows, li].set(elems, mode="drop"))
+    return tuple(out)
+
+
+@partial(jax.jit, static_argnames=("method",))
+def push_back(
+    gg: GGArray,
+    elems: jax.Array,
+    mask: jax.Array | None = None,
+    method: str = "scan",
+) -> tuple[GGArray, jax.Array]:
+    """Parallel push_back of up to ``m`` elements per block (paper Alg. 1).
+
+    ``elems: (nblocks, m, *item_shape)``; ``mask: (nblocks, m)`` selects which
+    lanes insert (all, if None).  Returns the updated array and the assigned
+    in-block positions ``(nblocks, m)`` (−1 where masked out).  Capacity must
+    already suffice (``ensure_capacity``) — mirroring the paper, where
+    ``new_bucket`` precedes the write.  Entirely block-local: the lowered HLO
+    contains no cross-block collective.
+    """
+    if elems.ndim < 2 or elems.shape[0] != gg.nblocks:
+        raise ValueError(f"elems must be (nblocks={gg.nblocks}, m, ...), got {elems.shape}")
+    if mask is None:
+        mask = jnp.ones(elems.shape[:2], dtype=bool)
+    offsets, counts = insertion_offsets(mask, method=method)
+    pos = gg.sizes[:, None] + offsets
+    buckets = _scatter_positions(gg.buckets, gg.b0, pos, mask, elems)
+    new = dataclasses.replace(gg, buckets=buckets, sizes=gg.sizes + counts)
+    return new, jnp.where(mask, pos, -1)
+
+
+# --------------------------------------------------------------------------
+# Element access — rw_g (global, binary search) and rw_b (per-block).
+# --------------------------------------------------------------------------
+
+def block_starts(gg: GGArray) -> jax.Array:
+    """The paper's global prefix-sum index table."""
+    return indexing.block_starts(gg.sizes)
+
+
+def _gather_inblock(gg: GGArray, block: jax.Array, pos: jax.Array) -> jax.Array:
+    """Gather elements at per-block positions — walks the bucket chain.
+
+    This is the paper's 'multiple pointers to reach an element': an O(log n)
+    select chain, the structural reason GGArray r/w trails a flat array.
+    """
+    starts = indexing.bucket_starts(gg.b0, gg.nbuckets)
+    sizes = indexing.bucket_sizes(gg.b0, gg.nbuckets)
+    out = jnp.zeros((*pos.shape, *gg.item_shape), dtype=gg.dtype)
+    for b in range(gg.nbuckets):
+        li = (pos - starts[b]).clip(0, sizes[b] - 1)
+        in_level = (pos >= starts[b]) & (pos < starts[b] + sizes[b])
+        vals = gg.buckets[b][block, li]
+        cond = in_level.reshape(in_level.shape + (1,) * len(gg.item_shape))
+        out = jnp.where(cond, vals, out)
+    return out
+
+
+@jax.jit
+def read_global(gg: GGArray, idx: jax.Array) -> jax.Array:
+    """rw_g: read by global index (block-major order) via binary search."""
+    starts = block_starts(gg)
+    block = indexing.find_block(starts, idx)
+    return _gather_inblock(gg, block, idx - starts[block])
+
+
+@jax.jit
+def write_global(gg: GGArray, idx: jax.Array, vals: jax.Array) -> GGArray:
+    """rw_g write: scatter by global index via binary search."""
+    starts = block_starts(gg)
+    block = indexing.find_block(starts, idx)
+    pos = idx - starts[block]
+    nbuckets, b0 = gg.nbuckets, gg.b0
+    bstarts = indexing.bucket_starts(b0, nbuckets)
+    bsizes = indexing.bucket_sizes(b0, nbuckets)
+    buckets = []
+    for b in range(nbuckets):
+        li = pos - bstarts[b]
+        in_level = (li >= 0) & (li < bsizes[b])
+        li = jnp.where(in_level, li, bsizes[b])
+        buckets.append(gg.buckets[b].at[block, li].set(vals, mode="drop"))
+    return dataclasses.replace(gg, buckets=tuple(buckets))
+
+
+@jax.jit
+def gather_block(gg: GGArray, block: jax.Array, pos: jax.Array) -> jax.Array:
+    """rw_b read: caller already knows the owning block (no search)."""
+    return _gather_inblock(gg, block, pos)
+
+
+def map_elements(gg: GGArray, fn: Callable[[jax.Array], jax.Array]) -> GGArray:
+    """rw_b: apply ``fn`` to every *live* element, bucket-parallel.
+
+    One fused elementwise pass per bucket level with a validity mask — the
+    block-structured access mode (one GPU block per array block in the paper).
+    """
+    starts = indexing.bucket_starts(gg.b0, gg.nbuckets)
+    sizes = indexing.bucket_sizes(gg.b0, gg.nbuckets)
+    buckets = []
+    for b in range(gg.nbuckets):
+        posn = starts[b] + jnp.arange(sizes[b], dtype=jnp.int32)[None, :]
+        live = posn < gg.sizes[:, None]
+        live = live.reshape(live.shape + (1,) * len(gg.item_shape))
+        buckets.append(jnp.where(live, fn(gg.buckets[b]), gg.buckets[b]))
+    return dataclasses.replace(gg, buckets=tuple(buckets))
+
+
+# --------------------------------------------------------------------------
+# Flatten — the two-phase pattern's bridge to a contiguous array (§VI.D).
+# --------------------------------------------------------------------------
+
+@jax.jit
+def flatten(gg: GGArray) -> tuple[jax.Array, jax.Array]:
+    """Emit a contiguous (capacity-sized) array in block-major global order.
+
+    Returns ``(flat, total)`` where ``flat[:total]`` are the live elements in
+    global order.  Capacity-shaped (XLA static shapes); slots ≥ total are 0.
+    """
+    starts = block_starts(gg)
+    cap = gg.capacity
+    flat = jnp.zeros((cap, *gg.item_shape), dtype=gg.dtype)
+    bstarts = indexing.bucket_starts(gg.b0, gg.nbuckets)
+    bsizes = indexing.bucket_sizes(gg.b0, gg.nbuckets)
+    for b in range(gg.nbuckets):
+        posn = bstarts[b] + jnp.arange(bsizes[b], dtype=jnp.int32)[None, :]
+        live = posn < gg.sizes[:, None]
+        tgt = jnp.where(live, starts[:, None] + posn, cap)
+        flat = flat.at[tgt].set(gg.buckets[b], mode="drop")
+    return flat, jnp.sum(gg.sizes)
+
+
+def from_flat(
+    flat: jax.Array,
+    n: int,
+    nblocks: int,
+    b0: int = 8,
+) -> GGArray:
+    """Distribute ``flat[:n]`` evenly into a fresh GGArray (phase transition)."""
+    per_block = -(-n // nblocks)  # ceil
+    nbuckets = indexing.min_buckets_for(b0, per_block)
+    gg = init(nblocks, b0, flat.shape[1:], flat.dtype, nbuckets=max(nbuckets, 1))
+    src = jnp.arange(nblocks * per_block, dtype=jnp.int32).reshape(nblocks, per_block)
+    mask = src < n
+    elems = flat[src.clip(0, flat.shape[0] - 1)]
+    gg, _ = push_back(gg, elems, mask)
+    return gg
+
+
+# --------------------------------------------------------------------------
+# Introspection.
+# --------------------------------------------------------------------------
+
+def total_size(gg: GGArray) -> jax.Array:
+    return jnp.sum(gg.sizes)
+
+
+def memory_elems(gg: GGArray) -> int:
+    """Allocated element slots (the §V memory-usage metric)."""
+    return gg.capacity

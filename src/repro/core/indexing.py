@@ -1,0 +1,83 @@
+"""Bucket geometry + global indexing for GGArray.
+
+The LFVector layout (Dechev et al. 2006, as used by GGArray §IV): bucket ``b``
+holds ``B0 * 2**b`` elements, so the first ``nb`` buckets cover positions
+``[0, B0*(2**nb - 1))``.  Growth appends the next bucket — existing buckets are
+never moved (the copy-free property the paper contrasts against doubling
+reallocation).
+
+Global indexing (paper §IV): a prefix-sum table over per-block sizes gives the
+first global index owned by each block; binary search over it locates the block
+that owns a global index (``rw_g``).  All functions here are shape-polymorphic
+pure JAX and safe under ``jit``/``vmap``/``shard_map``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "bucket_sizes",
+    "bucket_starts",
+    "capacity",
+    "bucket_of_position",
+    "local_offset",
+    "block_starts",
+    "find_block",
+    "min_buckets_for",
+]
+
+
+def bucket_sizes(b0: int, nbuckets: int) -> tuple[int, ...]:
+    """Size of each bucket level: ``B0 * 2**b`` (paper Alg. 2)."""
+    return tuple(b0 * (1 << b) for b in range(nbuckets))
+
+
+def bucket_starts(b0: int, nbuckets: int) -> tuple[int, ...]:
+    """First in-block position covered by each bucket: ``B0*(2**b - 1)``."""
+    return tuple(b0 * ((1 << b) - 1) for b in range(nbuckets))
+
+
+def capacity(b0: int, nbuckets: int) -> int:
+    """Total per-block capacity with ``nbuckets`` levels: ``B0*(2**nb - 1)``."""
+    return b0 * ((1 << nbuckets) - 1)
+
+
+def min_buckets_for(b0: int, n: int) -> int:
+    """Smallest number of bucket levels whose capacity holds ``n`` elements."""
+    nb = 0
+    while capacity(b0, nb) < n:
+        nb += 1
+    return nb
+
+
+def bucket_of_position(pos: jax.Array, b0: int, nbuckets: int) -> jax.Array:
+    """Bucket level that owns in-block position ``pos``.
+
+    Uses exact integer comparisons against the (static, tiny) start table
+    rather than float ``log2`` — ``nbuckets`` is O(log n) so this unrolls to a
+    handful of vectorized compares.
+    """
+    starts = bucket_starts(b0, nbuckets)
+    level = jnp.zeros(jnp.shape(pos), dtype=jnp.int32)
+    for b in range(1, nbuckets):
+        level = level + (pos >= starts[b]).astype(jnp.int32)
+    return level
+
+
+def local_offset(pos: jax.Array, level: jax.Array, b0: int, nbuckets: int) -> jax.Array:
+    """Offset of in-block position ``pos`` inside its bucket ``level``."""
+    starts = jnp.asarray(bucket_starts(b0, nbuckets), dtype=jnp.int32)
+    return pos.astype(jnp.int32) - starts[level]
+
+
+def block_starts(sizes: jax.Array) -> jax.Array:
+    """Exclusive prefix sum of per-block sizes — the paper's global index table."""
+    return jnp.cumsum(sizes) - sizes
+
+
+def find_block(starts: jax.Array, global_idx: jax.Array) -> jax.Array:
+    """Binary search (paper §IV): block owning ``global_idx`` given start table."""
+    return (
+        jnp.searchsorted(starts, global_idx, side="right").astype(jnp.int32) - 1
+    ).clip(0)

@@ -1,0 +1,68 @@
+"""Single LFVector — the per-block unit of GGArray (paper Algs. 1–2).
+
+A standalone one-block view used by the unit tests and the quickstart example
+to mirror the paper's pseudocode directly.  ``GGArray`` is *not* built on top
+of this class (it vectorizes over blocks natively); this exists so the
+Algorithm 1/2 semantics are testable in isolation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ggarray as gg_ops
+from repro.core.ggarray import GGArray
+
+__all__ = ["LFVector"]
+
+
+@dataclasses.dataclass
+class LFVector:
+    """One LFVector: geometric buckets + a size counter (host-side wrapper)."""
+
+    _gg: GGArray
+
+    @classmethod
+    def create(
+        cls,
+        b0: int = 8,
+        item_shape: Sequence[int] = (),
+        dtype: Any = jnp.float32,
+    ) -> "LFVector":
+        return cls(gg_ops.init(1, b0, item_shape, dtype))
+
+    # -- paper Alg. 1: push_back -----------------------------------------
+    def push_back(self, elems: jax.Array, method: str = "scan") -> jax.Array:
+        """Insert a batch of elements; grows (Alg. 2) if needed. Returns indices."""
+        elems = jnp.atleast_1d(elems)
+        self._gg = gg_ops.ensure_capacity(self._gg, elems.shape[0])
+        self._gg, pos = gg_ops.push_back(self._gg, elems[None], method=method)
+        return pos[0]
+
+    # -- element access ----------------------------------------------------
+    def __getitem__(self, idx) -> jax.Array:
+        idx = jnp.asarray(idx)
+        return gg_ops.gather_block(self._gg, jnp.zeros_like(idx), idx)
+
+    def __setitem__(self, idx, val) -> None:
+        idx = jnp.asarray(idx)
+        self._gg = gg_ops.write_global(self._gg, idx, jnp.asarray(val))
+
+    def __len__(self) -> int:
+        return int(jax.device_get(self._gg.sizes[0]))
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self._gg.capacity_per_block
+
+    @property
+    def nbuckets(self) -> int:
+        return self._gg.nbuckets
+
+    def to_array(self) -> jax.Array:
+        flat, _ = gg_ops.flatten(self._gg)
+        return flat[: len(self)]

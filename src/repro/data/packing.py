@@ -1,0 +1,67 @@
+"""Token packing with GGArray push_back semantics (DESIGN.md §3 touchpoint 3).
+
+Variable-length documents are pushed into per-block sequence buffers; when a
+training batch is due, ``flatten`` emits the packed token stream — the
+paper's two-phase pattern (grow → flatten → static work) as a data pipeline.
+Block-local insertion means parallel workers pack without coordination; the
+prefix-sum table gives global sample offsets for sequence-boundary masks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ggarray as gg
+
+__all__ = ["Packer"]
+
+
+@dataclasses.dataclass
+class Packer:
+    """Greedy block-local document packer over a GGArray token buffer."""
+
+    nblocks: int = 8
+    b0: int = 256
+
+    def __post_init__(self):
+        self._arr = gg.init(self.nblocks, self.b0, dtype=jnp.int32)
+        self._bounds = gg.init(self.nblocks, max(self.b0 // 16, 1), dtype=jnp.int32)
+        self._next_block = 0
+
+    @property
+    def total_tokens(self) -> int:
+        return int(jax.device_get(gg.total_size(self._arr)))
+
+    def add_document(self, tokens: list[int] | np.ndarray) -> None:
+        """Push one document into the least-loaded block (greedy balance)."""
+        toks = np.asarray(tokens, np.int32)
+        sizes = np.asarray(jax.device_get(self._arr.sizes))
+        block = int(np.argmin(sizes))
+        self._arr = gg.ensure_capacity(self._arr, len(toks))
+        elems = np.zeros((self.nblocks, len(toks)), np.int32)
+        mask = np.zeros((self.nblocks, len(toks)), bool)
+        elems[block] = toks
+        mask[block] = True
+        self._arr, _ = gg.push_back(self._arr, jnp.asarray(elems), jnp.asarray(mask))
+        # record the document end position (per-block boundary list)
+        self._bounds = gg.ensure_capacity(self._bounds, 1)
+        bval = np.zeros((self.nblocks, 1), np.int32)
+        bmask = np.zeros((self.nblocks, 1), bool)
+        bval[block] = int(sizes[block]) + len(toks)
+        bmask[block] = True
+        self._bounds, _ = gg.push_back(self._bounds, jnp.asarray(bval), jnp.asarray(bmask))
+
+    def pack(self, batch: int, seq: int, pad_id: int = 0) -> dict:
+        """Flatten → (batch, seq) token matrix + loss mask (phase transition)."""
+        flat, total = gg.flatten(self._arr)
+        n = int(jax.device_get(total))
+        need = batch * seq
+        stream = np.full((need,), pad_id, np.int32)
+        take = min(n, need)
+        stream[:take] = np.asarray(jax.device_get(flat))[:take]
+        tokens = stream.reshape(batch, seq)
+        mask = (np.arange(need) < take).reshape(batch, seq)
+        return {"tokens": jnp.asarray(tokens), "loss_mask": jnp.asarray(mask)}

@@ -1,0 +1,111 @@
+"""Activation-sharding context: model code asks, the launcher decides.
+
+Model modules call ``constrain(x, ("batch", "seq", None))`` with *logical*
+axis names; when a launcher has activated a mesh context the names resolve to
+mesh axes (with per-dim divisibility checks), otherwise the call is a no-op —
+so the same model code runs on a laptop CPU and a 512-chip mesh.
+
+Logical activation axes:
+  batch   → ('pod', 'data')                       (DP)
+  seq     → 'model'                               (sequence parallelism: the
+            period-boundary residual stream is seq-sharded, which is what
+            keeps 64-layer × 1M-token activations inside HBM)
+  tokens  → ('pod', 'data', 'model')              (flattened B·S, MoE routing)
+  experts → 'model'                               (EP)
+  heads   → 'model'
+  kv_seq  → 'model'                               (decode cache seq dim)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_mesh", "constrain", "active_mesh", "LOGICAL_AXES"]
+
+LOGICAL_AXES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": "model",
+    "tokens": ("pod", "data", "model"),
+    "experts": "model",
+    # flattened E·C dim, expert-major: E over 'model' (EP), capacity over the
+    # data axes — one (expert-shard, capacity-shard) tile per device, so the
+    # expert FFN intermediates scale down with the FULL mesh, not just EP.
+    "expert_slots": ("model", "pod", "data"),
+    "expert_cap": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "ssm_inner": "model",
+    "kv_seq": "model",
+    # logits vocab dim: sharding V over 'model' keeps the unembed backward's
+    # per-device partial d(table) at (V/16, D) instead of a full (V, D) f32
+    # partial per device (≈3 GB each on 150k vocabs; caught by the dry-run)
+    "vocab": "model",
+}
+
+_STATE = threading.local()
+
+
+def active_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh | None):
+    """Activate ``mesh`` for constrain() calls within the block."""
+    prev = active_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    out = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return 0  # axis absent on this mesh → cannot shard
+        out *= mesh.shape[a]
+    return out
+
+
+def constrain_tree(tree, specs_tree):
+    """with_sharding_constraint a pytree against PartitionSpecs; no-op
+    without an active mesh. Used to pin gradient/accumulator shardings to
+    the parameter layout (unconstrained f32 accumulators otherwise replicate
+    and drag full param-shaped all-reduces into every microbatch)."""
+    mesh = active_mesh()
+    if mesh is None or specs_tree is None:
+        return tree
+    return jax.tree.map(
+        lambda x, spec: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec)
+        ),
+        tree,
+        specs_tree,
+    )
+
+
+def constrain(x: jax.Array, axes: tuple) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, name in zip(x.shape, axes):
+        mesh_axis = LOGICAL_AXES.get(name) if name else None
+        if isinstance(mesh_axis, tuple):
+            mesh_axis = tuple(a for a in mesh_axis if a in mesh.shape) or None
+        size = _axis_size(mesh, mesh_axis)
+        spec.append(mesh_axis if mesh_axis and size > 0 and dim % size == 0 else None)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,198 @@
+"""Sharding rules: parameter-name → logical axes → mesh PartitionSpec.
+
+Scheme (DESIGN.md §4):
+- **TP** over ``'model'``: d_ff (all archs divide by 16), experts (all MoE
+  archs have exactly 16), padded vocab, attention heads *when divisible*
+  (else head_dim when divisible, else replicated — starcoder2's 24H and
+  llama4's 40H fall back to head_dim=128).
+- **FSDP** over ``'data'``: the d_model dim of every weight (all assigned
+  d_models divide by 16), which also shards AdamW moments (ZeRO).
+- **DP** over ``('pod', 'data')`` for the batch dim of activations.
+- Decode KV caches shard batch over ``'data'`` and the *sequence* dim over
+  ``'model'`` (flash-decode layout — a 32k×128-seq cache never fits
+  replicated).
+- Anything 1-D (norms, biases, scalars) is replicated.
+
+Rules attach to the *last* ndims of each leaf so period-stacked layer params
+(leading ``n_periods`` dim) reuse the per-layer rule unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "logical_rules",
+    "param_specs",
+    "param_shardings",
+    "batch_specs",
+    "data_axes",
+    "shard_if_divisible",
+]
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes carrying data parallelism: ('pod', 'data') on multi-pod meshes."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def shard_if_divisible(mesh: Mesh, dim_size: int, axis) -> Any:
+    """axis if dim divides over it, else None (replicate)."""
+    return axis if axis is not None and dim_size % _axis_size(mesh, axis) == 0 else None
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh) -> dict[str, Any]:
+    """Logical axis name → mesh axis (or None), with divisibility fallbacks."""
+    model = "model" if "model" in mesh.shape else None
+    fsdp = "data" if "data" in mesh.shape else None
+    msize = _axis_size(mesh, model)
+    heads_ok = model and cfg.n_heads % msize == 0
+    kv_ok = model and cfg.n_kv_heads % msize == 0
+    hd_ok = model and cfg.head_dim % msize == 0
+    rules: dict[str, Any] = {
+        "embed": shard_if_divisible(mesh, cfg.d_model, fsdp),
+        "vocab": shard_if_divisible(mesh, cfg.padded_vocab, model),
+        "ff": shard_if_divisible(mesh, cfg.d_ff, model) if cfg.d_ff else None,
+        "heads": model if heads_ok else None,
+        "head_dim": model if (not heads_ok and hd_ok) else None,
+        "kv_heads": model if kv_ok else None,
+        "kv_head_dim": model if (not kv_ok and hd_ok) else None,
+        "experts": None,
+        "ff_expert": None,
+        "ssm_inner": None,
+    }
+    if cfg.moe is not None:
+        rules["experts"] = shard_if_divisible(mesh, cfg.moe.n_experts, model)
+        if rules["experts"] is None:  # fall back to TP inside each expert
+            rules["ff_expert"] = shard_if_divisible(mesh, cfg.moe.d_ff_expert, model)
+    if cfg.ssm is not None:
+        rules["ssm_inner"] = shard_if_divisible(
+            mesh, cfg.ssm.d_inner(cfg.d_model), model
+        )
+    return rules
+
+
+# parameter name → logical axes of its *trailing* dims
+_NAME_AXES: dict[str, tuple[str | None, ...]] = {
+    "embed": ("vocab", "embed"),
+    "unembed": ("vocab", "embed"),
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv_heads", "kv_head_dim"),
+    "wv": ("embed", "kv_heads", "kv_head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+    "w_gate": ("embed", "ff"),
+    "w_up": ("embed", "ff"),
+    "w_down": ("ff", "embed"),
+    "router": ("embed", None),
+    "wz": ("embed", "ssm_inner"),
+    "wx": ("embed", "ssm_inner"),
+    "wBC": ("embed", None),
+    "wdt": ("embed", None),
+    "out_proj": ("ssm_inner", "embed"),
+}
+# MoE expert tensors carry a leading experts dim
+_MOE_NAME_AXES: dict[str, tuple[str | None, ...]] = {
+    "w_gate": ("experts", "embed", "ff_expert"),
+    "w_up": ("experts", "embed", "ff_expert"),
+    "w_down": ("experts", "ff_expert", "embed"),
+}
+
+
+def _leaf_spec(path, leaf, rules) -> P:
+    keys = [p.key for p in path if hasattr(p, "key")]
+    name = keys[-1] if keys else ""
+    in_moe = "moe" in keys
+    axes = (_MOE_NAME_AXES if in_moe and name in _MOE_NAME_AXES else _NAME_AXES).get(name)
+    if axes is None or leaf.ndim < len(axes):
+        return P()  # norms, biases, scalars, conv — replicated
+    mesh_axes = tuple(rules.get(a) if a else None for a in axes)
+    pad = (None,) * (leaf.ndim - len(mesh_axes))  # period-stacked leading dims
+    return P(*pad, *mesh_axes)
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree matching ``params`` (also fits AdamW m/v, EF)."""
+    rules = logical_rules(cfg, mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, rules), params
+    )
+
+
+def constrain_param_tree(tree, cfg: ModelConfig):
+    """Pin a (sub)tree of parameters to its rule shardings, ambient-mesh.
+
+    Called INSIDE the period-scan body on the sliced layer params: the
+    transpose of with_sharding_constraint is itself, so this also pins the
+    per-period parameter *cotangents* inside the scan backward — without it
+    GSPMD computes replicated f32 dW and all-reduces full param-shaped
+    tensors over the TP axis every (microbatch × period) (§Perf).
+    """
+    from repro.distributed.context import active_mesh
+
+    mesh = active_mesh()
+    if mesh is None:
+        return tree
+    rules = logical_rules(cfg, mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, _leaf_spec(path, leaf, rules))
+        ),
+        tree,
+    )
+
+
+def param_shardings(params, cfg: ModelConfig, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(params, cfg, mesh)
+    )
+
+
+def cache_specs(caches_like, cfg: ModelConfig, mesh: Mesh):
+    """Decode-cache PartitionSpecs: batch→data, seq→model (flash-decode
+    layout), mamba heads/channels→model — each with divisibility fallback."""
+    dp = data_axes(mesh)
+    model = "model" if "model" in mesh.shape else None
+
+    def spec(path, leaf) -> P:
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1] if keys else ""
+        b_axis = dp if dp and leaf.shape[1] % _axis_size(mesh, dp) == 0 else None
+        if name == "conv":  # (P, B, W, CH)
+            ch = shard_if_divisible(mesh, leaf.shape[-1], model)
+            return P(None, b_axis, None, ch)
+        if name == "ssd":  # (P, B, NH, HD, N)
+            nh = shard_if_divisible(mesh, leaf.shape[2], model)
+            return P(None, b_axis, nh, None, None)
+        # k/v levels (P, B, L, KH, Dh) and their scale tensors (P, B, L, KH)
+        seq = shard_if_divisible(mesh, leaf.shape[2], model)
+        spec = (None, b_axis, seq) + (None,) * (leaf.ndim - 3)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec, caches_like)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_size: int) -> dict[str, P]:
+    """Input batch specs: batch dim over ('pod','data') when divisible."""
+    dp = data_axes(mesh)
+    b_axis = dp if dp and batch_size % _axis_size(mesh, dp) == 0 else None
+    out = {"tokens": P(b_axis, None)}
+    if cfg.n_enc_layers:
+        out["frames"] = P(b_axis, None, None)
+    elif cfg.n_prefix_embeds:
+        out["prefix_embeds"] = P(b_axis, None, None)
+    return out

@@ -1,0 +1,33 @@
+"""Shared kernel utilities: interpret-mode policy and padding helpers.
+
+All kernels target TPU (``pl.pallas_call`` + explicit ``BlockSpec`` VMEM
+tiling).  On non-TPU backends (this container is CPU) they execute in
+``interpret=True`` mode, which runs the kernel body as traced JAX ops — the
+correctness oracle path used by the test suite.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["should_interpret", "pad_to", "MXU_LANE"]
+
+MXU_LANE = 128  # MXU systolic dimension / VREG lane count
+
+
+def should_interpret(interpret: bool | None) -> bool:
+    """Resolve the interpret flag: explicit wins, else interpret off-TPU."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jax.Array, multiple: int, axis: int, value=0) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple (VMEM tile alignment)."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)

@@ -1,0 +1,100 @@
+"""Flash-decode kernel — one-token attention against a long KV cache.
+
+Decode attention is memory-bound (the whole KV cache streams through once per
+token), so the kernel's job is to keep the MXU row dimension non-degenerate
+and never re-read KV.  GQA makes that natural on TPU: the ``group`` query
+heads that share a KV head are packed into the matmul row dimension, giving
+``(group, D) × (D, BK)`` score tiles instead of vector–matrix products.
+
+Grid ``(batch, kv_heads, S/BK)``; the trailing axis is sequential, carrying
+the online-softmax state in VMEM scratch.  The live cache length arrives as a
+``(batch, 1)`` array (read per block) so one compiled kernel serves any fill
+level of the GGArray KV cache bucket it is pointed at.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+DEFAULT_BK = 512
+MASK_VALUE = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, sm_scale, bk, n_kv_blocks):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0, 0]
+    # Skip KV blocks entirely past the live length (GGArray tail buckets).
+    @pl.when(kb * bk < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (BK, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, MASK_VALUE)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,  # (B, KH, G, D) — query heads grouped under their KV head
+    k: jax.Array,  # (B, KH, S, D)
+    v: jax.Array,  # (B, KH, S, D)
+    lengths: jax.Array,  # (B, 1) int32 live cache lengths
+    *,
+    sm_scale: float | None = None,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KH, G, D = q.shape
+    S = k.shape[2]
+    if S % bk:
+        raise ValueError(f"unpadded KV length {S}; pad to {bk}")
+    sm_scale = D ** -0.5 if sm_scale is None else sm_scale
+    n_kv_blocks = S // bk
+    kernel = functools.partial(
+        _decode_kernel, sm_scale=sm_scale, bk=bk, n_kv_blocks=n_kv_blocks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KH, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, kb: (b, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, kb: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, kb: (b, h, kb, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, kb: (b, h, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, kb: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)

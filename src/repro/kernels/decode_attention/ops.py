@@ -1,0 +1,41 @@
+"""jit'd wrapper for the flash-decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.decode_attention import kernel as _kernel
+from repro.kernels.decode_attention import ref as _ref
+
+__all__ = ["decode_attention"]
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_ref", "bk"))
+def decode_attention(
+    q: jax.Array,  # (B, H, D) flat query heads
+    k: jax.Array,  # (B, KH, S, D)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,)
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+    bk: int | None = None,
+) -> jax.Array:
+    """One-token attention vs a (possibly partially filled) KV cache."""
+    B, H, D = q.shape
+    KH, S = k.shape[1], k.shape[2]
+    group = H // KH
+    qg = q.reshape(B, KH, group, D)
+    lengths = lengths.reshape(B, 1).astype(jnp.int32)
+    if use_ref:
+        return _ref.decode_attention(qg, k, v, lengths).reshape(B, H, D)
+    bk = min(_kernel.DEFAULT_BK, S) if bk is None else bk
+    kp = common.pad_to(k, bk, axis=2)
+    vp = common.pad_to(v, bk, axis=2)
+    out = _kernel.decode_attention_pallas(
+        qg, kp, vp, lengths, bk=bk, interpret=common.should_interpret(interpret)
+    )
+    return out.reshape(B, H, D)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash-decode: masked softmax attention, one query."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention"]
+
+
+def decode_attention(
+    q: jax.Array,  # (B, KH, G, D)
+    k: jax.Array,  # (B, KH, S, D)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) or (B, 1)
+    *,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    D = q.shape[-1]
+    S = k.shape[2]
+    sm_scale = D ** -0.5 if sm_scale is None else sm_scale
+    s = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    live = jnp.arange(S)[None, :] < lengths.reshape(-1, 1)  # (B, S)
+    s = jnp.where(live[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32)).astype(q.dtype)

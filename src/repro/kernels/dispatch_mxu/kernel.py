@@ -1,0 +1,114 @@
+"""One-hot dispatch/combine matmul kernels — push_back's write phase on MXU.
+
+After the insertion scan assigns each element a unique slot, the write itself
+is a scatter.  TPUs hate element-wise scatters but love matmuls, so we express
+the write as ``out = Pᵀ·X`` with ``P[t, s] = 1`` iff element ``t`` goes to slot
+``s`` — built on the fly from the slot vector, one VMEM tile at a time.  This
+is the same trick classic MoE layers use for token dispatch, which is why the
+MoE substrate (models/moe.py) and GGArray's bulk push_back share this kernel
+(DESIGN.md §3).
+
+``dispatch``: (T, D) values + (T,) slots → (S, D) buffer   (scatter, Pᵀ·X)
+``combine`` : (S, D) buffer + (T,) slots → (T, D) values   (gather,  P·B)
+
+Grid iterates destination tiles in the leading dim and accumulates over source
+tiles in the (sequential) trailing dim; negative slots are dropped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dispatch_pallas", "combine_pallas"]
+
+DEFAULT_T_TILE = 128
+DEFAULT_S_TILE = 128
+
+
+def _dispatch_kernel(pos_ref, x_ref, o_ref, *, s_tile):
+    s, t = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    pos = pos_ref[...]  # (T_tile, 1)
+    rel = pos - s * s_tile
+    slots = jax.lax.broadcasted_iota(jnp.int32, (pos.shape[0], s_tile), 1)
+    onehot = ((rel == slots) & (pos >= 0)).astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(onehot.T, x, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def _combine_kernel(pos_ref, buf_ref, o_ref, *, s_tile):
+    t, s = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    pos = pos_ref[...]  # (T_tile, 1)
+    rel = pos - s * s_tile
+    slots = jax.lax.broadcasted_iota(jnp.int32, (pos.shape[0], s_tile), 1)
+    onehot = ((rel == slots) & (pos >= 0)).astype(jnp.float32)
+    buf = buf_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(onehot, buf, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def dispatch_pallas(
+    x: jax.Array,  # (T, D)
+    pos: jax.Array,  # (T, 1) int32, -1 = drop
+    n_slots: int,
+    *,
+    t_tile: int = DEFAULT_T_TILE,
+    s_tile: int = DEFAULT_S_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    T, D = x.shape
+    if T % t_tile or n_slots % s_tile:
+        raise ValueError(f"unpadded: T={T} S={n_slots}; pad to ({t_tile},{s_tile})")
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_dispatch_kernel, s_tile=s_tile),
+        grid=(n_slots // s_tile, T // t_tile),
+        in_specs=[
+            pl.BlockSpec((t_tile, 1), lambda s, t: (t, 0)),
+            pl.BlockSpec((t_tile, D), lambda s, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((s_tile, D), lambda s, t: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_slots, D), x.dtype),
+        interpret=interpret,
+    )(pos, x)
+
+
+def combine_pallas(
+    buf: jax.Array,  # (S, D)
+    pos: jax.Array,  # (T, 1) int32, -1 = zeros
+    n_out: int,
+    *,
+    t_tile: int = DEFAULT_T_TILE,
+    s_tile: int = DEFAULT_S_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    S, D = buf.shape
+    if n_out % t_tile or S % s_tile:
+        raise ValueError(f"unpadded: T={n_out} S={S}; pad to ({t_tile},{s_tile})")
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_combine_kernel, s_tile=s_tile),
+        grid=(n_out // t_tile, S // s_tile),
+        in_specs=[
+            pl.BlockSpec((t_tile, 1), lambda t, s: (t, 0)),
+            pl.BlockSpec((s_tile, D), lambda t, s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_tile, D), lambda t, s: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, D), buf.dtype),
+        interpret=interpret,
+    )(pos, buf)

@@ -1,0 +1,57 @@
+"""jit'd wrappers for the one-hot dispatch/combine kernels."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.dispatch_mxu import kernel as _kernel
+from repro.kernels.dispatch_mxu import ref as _ref
+
+__all__ = ["dispatch", "combine"]
+
+
+@partial(jax.jit, static_argnames=("n_slots", "interpret", "use_ref"))
+def dispatch(
+    x: jax.Array,
+    pos: jax.Array,
+    n_slots: int,
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Scatter ``x: (T, D)`` rows to ``pos: (T,)`` slots of a (n_slots, D) buffer."""
+    if use_ref:
+        return _ref.dispatch(x, pos, n_slots)
+    T = x.shape[0]
+    xp = common.pad_to(x, _kernel.DEFAULT_T_TILE, axis=0)
+    pp = common.pad_to(pos.reshape(-1, 1).astype(jnp.int32), _kernel.DEFAULT_T_TILE, axis=0, value=-1)
+    s_pad = -(-n_slots // _kernel.DEFAULT_S_TILE) * _kernel.DEFAULT_S_TILE
+    out = _kernel.dispatch_pallas(
+        xp, pp, s_pad, interpret=common.should_interpret(interpret)
+    )
+    return out[:n_slots]
+
+
+@partial(jax.jit, static_argnames=("n_out", "interpret", "use_ref"))
+def combine(
+    buf: jax.Array,
+    pos: jax.Array,
+    n_out: int | None = None,
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Gather rows of ``buf: (S, D)`` at ``pos: (T,)`` (zeros where pos < 0)."""
+    n_out = pos.shape[0] if n_out is None else n_out
+    if use_ref:
+        return _ref.combine(buf, pos, n_out)
+    bp = common.pad_to(buf, _kernel.DEFAULT_S_TILE, axis=0)
+    pp = common.pad_to(pos.reshape(-1, 1).astype(jnp.int32), _kernel.DEFAULT_T_TILE, axis=0, value=-1)
+    t_pad = pp.shape[0]
+    out = _kernel.combine_pallas(
+        bp, pp, t_pad, interpret=common.should_interpret(interpret)
+    )
+    return out[:n_out]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for dispatch/combine (scatter-add / gather semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dispatch", "combine"]
+
+
+def dispatch(x: jax.Array, pos: jax.Array, n_slots: int) -> jax.Array:
+    """out[pos[t]] += x[t] for pos[t] >= 0 (matches the one-hot matmul)."""
+    pos = pos.reshape(-1)
+    tgt = jnp.where(pos >= 0, pos, n_slots)
+    out = jnp.zeros((n_slots, x.shape[1]), dtype=x.dtype)
+    return out.at[tgt].add(x, mode="drop")
+
+
+def combine(buf: jax.Array, pos: jax.Array, n_out: int) -> jax.Array:
+    """out[t] = buf[pos[t]] (zeros where pos < 0)."""
+    pos = pos.reshape(-1)[:n_out]
+    vals = buf[pos.clip(0, buf.shape[0] - 1)]
+    return jnp.where((pos >= 0)[:, None], vals, jnp.zeros_like(vals))

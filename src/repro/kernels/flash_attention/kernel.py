@@ -1,0 +1,109 @@
+"""Flash attention (prefill) — Pallas TPU kernel with online softmax.
+
+Grid ``(batch·q_heads, Sq/BQ, Skv/BK)``; the trailing KV axis is sequential on
+TPU, so the running max/denominator/accumulator live in VMEM scratch across KV
+steps.  GQA is handled in the BlockSpec index maps (query head ``h`` reads KV
+head ``h // group``) — no K/V repetition in HBM.  Causal masking skips fully
+masked KV blocks via ``pl.when`` (upper-triangular blocks cost no MXU work).
+
+This is the TPU hot path; the framework's dry-run/compile path uses the
+pure-JAX blockwise implementation in models/attention.py (same math, same
+oracle in ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+MASK_VALUE = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, sm_scale, causal, bq, bk, n_kv_blocks):
+    qb, kb = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal: KV block strictly above the diagonal touches nothing.
+    needed = (not causal) or (kb * bk <= qb * bq + bq - 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)  # (BK, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, MASK_VALUE)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)  # guard fully-masked rows
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, Sq, D)
+    k: jax.Array,  # (BH_kv, Skv, D)
+    v: jax.Array,  # (BH_kv, Skv, D)
+    *,
+    group: int = 1,  # q heads per kv head (GQA)
+    causal: bool = True,
+    sm_scale: float | None = None,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    _, Skv, _ = k.shape
+    if Sq % bq or Skv % bk:
+        raise ValueError(f"unpadded seq: Sq={Sq} Skv={Skv}; pad to ({bq},{bk})")
+    sm_scale = D ** -0.5 if sm_scale is None else sm_scale
+    n_kv_blocks = Skv // bk
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        bq=bq,
+        bk=bk,
+        n_kv_blocks=n_kv_blocks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, Sq // bq, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, qb, kb: (h, qb, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qb, kb, g=group: (h // g, kb, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qb, kb, g=group: (h // g, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, qb, kb: (h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""jit'd wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import common
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+__all__ = ["flash_attention"]
+
+
+@partial(jax.jit, static_argnames=("group", "causal", "interpret", "use_ref", "bq", "bk"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    group: int = 1,
+    causal: bool = True,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+    bq: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """Softmax attention over (BH, S, D) tensors; GQA via ``group``."""
+    if use_ref:
+        return _ref.attention(q, k, v, group=group, causal=causal)
+    Sq, Skv = q.shape[1], k.shape[1]
+    bq = min(_kernel.DEFAULT_BQ, Sq) if bq is None else bq
+    bk = min(_kernel.DEFAULT_BK, Skv) if bk is None else bk
+    return _kernel.flash_attention_pallas(
+        q, k, v,
+        group=group, causal=causal, bq=bq, bk=bk,
+        interpret=common.should_interpret(interpret),
+    )

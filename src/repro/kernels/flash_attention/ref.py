@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: exact softmax attention with GQA + causal masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention"]
+
+
+def attention(
+    q: jax.Array,  # (BH, Sq, D)
+    k: jax.Array,  # (BH_kv, Skv, D)
+    v: jax.Array,
+    *,
+    group: int = 1,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    sm_scale = D ** -0.5 if sm_scale is None else sm_scale
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * sm_scale
+    if causal:
+        Skv = k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,59 @@
+"""Bucket-compaction kernel — GGArray flatten's TPU hot phase (paper §VI.D).
+
+The two-phase pattern flattens the bucket chain into a contiguous array once
+per growth phase.  Per-block compaction is *fully static*: bucket level ``b``
+always lands at column ``B0·(2^b − 1)`` of the per-block row (the LFVector
+address map), so the kernel is a pure VMEM copy with static offsets — one
+grid step per block tile, all levels copied inside the body.  The dynamic
+part (block-major global ordering by the runtime prefix table) reuses the
+one-hot dispatch matmul kernel (kernels/dispatch_mxu), as push_back does.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import indexing
+
+__all__ = ["compact_blocks_pallas"]
+
+DEFAULT_BLOCK_TILE = 8
+
+
+def _compact_kernel(*refs, starts):
+    """refs = (*level_refs, out_ref); copy each level to its static columns."""
+    *levels, out = refs
+    for b, ref in enumerate(levels):
+        size = ref.shape[1]
+        out[:, starts[b] : starts[b] + size] = ref[...]
+
+
+def compact_blocks_pallas(
+    buckets: tuple[jax.Array, ...],  # level b: (nblocks, B0·2^b)
+    b0: int,
+    *,
+    block_tile: int = DEFAULT_BLOCK_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """→ (nblocks, capacity) row-compacted array (in-block positions)."""
+    nblocks = buckets[0].shape[0]
+    nbuckets = len(buckets)
+    if nblocks % block_tile:
+        raise ValueError(f"nblocks {nblocks} must divide by tile {block_tile}")
+    cap = indexing.capacity(b0, nbuckets)
+    starts = indexing.bucket_starts(b0, nbuckets)
+    sizes = indexing.bucket_sizes(b0, nbuckets)
+    kernel = functools.partial(_compact_kernel, starts=starts)
+    return pl.pallas_call(
+        kernel,
+        grid=(nblocks // block_tile,),
+        in_specs=[
+            pl.BlockSpec((block_tile, sz), lambda i, s=None: (i, 0)) for sz in sizes
+        ],
+        out_specs=pl.BlockSpec((block_tile, cap), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, cap), buckets[0].dtype),
+        interpret=interpret,
+    )(*buckets)

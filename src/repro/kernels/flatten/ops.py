@@ -1,0 +1,59 @@
+"""jit'd flatten: compact kernel + one-hot dispatch matmul for global order."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import indexing
+from repro.kernels import common
+from repro.kernels.dispatch_mxu import ops as dispatch_ops
+from repro.kernels.flatten import kernel as _kernel
+from repro.kernels.flatten import ref as _ref
+
+__all__ = ["compact_blocks", "flatten"]
+
+
+@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+def compact_blocks(
+    buckets: tuple[jax.Array, ...],
+    b0: int,
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    if use_ref:
+        return _ref.compact_blocks(buckets, b0)
+    nblocks = buckets[0].shape[0]
+    tile = _kernel.DEFAULT_BLOCK_TILE
+    pad = (-nblocks) % tile
+    if pad:
+        buckets = tuple(common.pad_to(b, tile, axis=0) for b in buckets)
+    out = _kernel.compact_blocks_pallas(
+        buckets, b0, interpret=common.should_interpret(interpret)
+    )
+    return out[:nblocks]
+
+
+@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+def flatten(
+    buckets: tuple[jax.Array, ...],
+    sizes: jax.Array,
+    b0: int,
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Full GGArray flatten on kernels: compact + dispatch scatter-matmul."""
+    compact = compact_blocks(buckets, b0, interpret=interpret, use_ref=use_ref)
+    nblocks, cap = compact.shape
+    starts = indexing.block_starts(sizes)
+    posn = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    live = posn < sizes[:, None]
+    pos = jnp.where(live, starts[:, None] + posn, -1).reshape(-1)
+    vals = compact.reshape(-1, 1)
+    out = dispatch_ops.dispatch(
+        vals, pos, nblocks * cap, interpret=interpret, use_ref=use_ref
+    )
+    return out[:, 0]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flatten kernels (mirrors core.ggarray.flatten)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import indexing
+
+__all__ = ["compact_blocks", "flatten_global"]
+
+
+def compact_blocks(buckets: tuple[jax.Array, ...], b0: int) -> jax.Array:
+    """(levels of (nblocks, size_b)) → (nblocks, capacity) row-major."""
+    return jnp.concatenate(buckets, axis=1)
+
+
+def flatten_global(compact: jax.Array, sizes: jax.Array) -> jax.Array:
+    """Row-compacted (nblocks, cap) → block-major global order (nblocks·cap,)."""
+    nblocks, cap = compact.shape
+    starts = indexing.block_starts(sizes)
+    posn = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    live = posn < sizes[:, None]
+    tgt = jnp.where(live, starts[:, None] + posn, nblocks * cap)
+    out = jnp.zeros((nblocks * cap,), compact.dtype)
+    return out.at[tgt].set(compact, mode="drop")

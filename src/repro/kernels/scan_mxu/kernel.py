@@ -1,0 +1,79 @@
+"""MXU matmul prefix-sum kernel — the tensor-core scan (§III.B.3) on TPU.
+
+Dakkak et al. (2019) phrase scan as matrix multiplication against triangular
+one-matrices on 16×16 tensor-core fragments.  The TPU MXU is a 128×128
+systolic array, so the construction re-blocks to 128-wide lanes:
+
+for each (row_tile, col_tile) VMEM block ``X`` of shape (R, 128):
+
+    Y = X · U            # U upper-triangular ones → per-row inclusive scan
+    out = Y + carry      # carry = running row totals of previous col tiles
+    carry += Y[:, -1:]   # tile totals ride the sequential TPU grid
+
+TPU grid steps execute **in order**, so the inter-tile carry lives in a VMEM
+scratch accumulator — no decoupled-lookback machinery (the GPU version's
+inter-block coordination) is needed.  This is the hardware adaptation recorded
+in DESIGN.md §2.
+
+The matmul runs in f32: per-tile partial sums are ≤ 128·max|x| (exact in f32
+for the insertion-mask use case where x ∈ {0,1}); the unbounded running carry
+is accumulated in the *output dtype* (int32 for masks) to stay exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import MXU_LANE
+
+__all__ = ["row_scan_pallas"]
+
+DEFAULT_ROW_TILE = 8  # f32 VREG sublane count
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref, *, acc_dtype):
+    """One (R, 128) tile: matmul scan + sequential-grid carry."""
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (MXU_LANE, MXU_LANE), 0)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (MXU_LANE, MXU_LANE), 1)
+    upper = (iota_r <= iota_c).astype(jnp.float32)
+    y = jnp.dot(x, upper, preferred_element_type=jnp.float32).astype(acc_dtype)
+    o_ref[...] = y + carry_ref[...]
+    carry_ref[...] += y[:, -1:]
+
+
+def row_scan_pallas(
+    x: jax.Array,
+    *,
+    row_tile: int = DEFAULT_ROW_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-row inclusive prefix sum of ``x: (rows, cols)`` via MXU matmuls.
+
+    ``rows`` must be a multiple of ``row_tile`` and ``cols`` of 128 (the
+    ``ops.row_scan`` wrapper pads).  Output dtype == input dtype.
+    """
+    rows, cols = x.shape
+    if rows % row_tile or cols % MXU_LANE:
+        raise ValueError(f"unpadded shape {x.shape}; pad to ({row_tile}, {MXU_LANE})")
+    acc_dtype = x.dtype
+    kernel = functools.partial(_scan_kernel, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // row_tile, cols // MXU_LANE),
+        in_specs=[pl.BlockSpec((row_tile, MXU_LANE), lambda r, c: (r, c))],
+        out_specs=pl.BlockSpec((row_tile, MXU_LANE), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((row_tile, 1), acc_dtype)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the MXU scan kernel (pads, dispatches, unpads)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.scan_mxu import kernel as _kernel
+from repro.kernels.scan_mxu import ref as _ref
+
+__all__ = ["row_scan"]
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_ref"))
+def row_scan(
+    x: jax.Array, *, interpret: bool | None = None, use_ref: bool = False
+) -> jax.Array:
+    """Inclusive per-row prefix sum of ``x: (rows, cols)``.
+
+    Pads rows to the sublane tile and cols to 128 lanes, runs the Pallas MXU
+    kernel (interpret mode off-TPU), slices the result back.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected (rows, cols), got {x.shape}")
+    if use_ref:
+        return _ref.row_scan(x)
+    rows, cols = x.shape
+    xp = common.pad_to(x, _kernel.DEFAULT_ROW_TILE, axis=0)
+    xp = common.pad_to(xp, common.MXU_LANE, axis=1)
+    out = _kernel.row_scan_pallas(xp, interpret=common.should_interpret(interpret))
+    return out[:rows, :cols]

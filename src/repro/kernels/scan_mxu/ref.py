@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the MXU scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["row_scan", "row_scan_matmul"]
+
+
+def row_scan(x: jax.Array) -> jax.Array:
+    """Per-row inclusive prefix sum (ground truth for kernels/scan_mxu)."""
+    return jnp.cumsum(x, axis=-1, dtype=x.dtype)
+
+
+def row_scan_matmul(x: jax.Array, tile: int = 128) -> jax.Array:
+    """The Dakkak matmul-scan *algorithm* in plain XLA ops.
+
+    Same tiling/carry structure as the Pallas kernel — used as a second
+    oracle and as the benchmarkable algorithm path on non-TPU backends
+    (interpret-mode kernel timings are meaningless on CPU).
+    """
+    rows, cols = x.shape
+    pad = (-cols) % tile
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    n_tiles = xp.shape[1] // tile
+    upper = jnp.triu(jnp.ones((tile, tile), jnp.float32))
+    xt = jnp.moveaxis(xp.reshape(rows, n_tiles, tile), 1, 0).astype(jnp.float32)
+
+    def body(carry, xtile):  # xtile: (rows, tile)
+        y = (xtile @ upper).astype(x.dtype) + carry
+        return y[:, -1:], y
+
+    _, out = jax.lax.scan(body, jnp.zeros((rows, 1), x.dtype), xt)
+    out = jnp.moveaxis(out, 0, 1).reshape(rows, n_tiles * tile)
+    return out[:, :cols]

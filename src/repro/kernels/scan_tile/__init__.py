@@ -1,0 +1,3 @@
+from repro.kernels.scan_tile import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,55 @@
+"""VPU tile prefix-sum kernel — the warp-shuffle scan (§III.B.2) on TPU.
+
+The GPU version scans within a warp via ``__shfl_up_sync`` and stitches warps
+with shared-memory partials + atomics.  On TPU the VPU computes a per-tile
+``cumsum`` over a VMEM block, and — because TPU grid steps execute in order —
+the inter-tile partial is a plain VMEM scratch carry, with no atomics and no
+inter-block handshake (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import MXU_LANE
+
+__all__ = ["row_scan_pallas"]
+
+DEFAULT_ROW_TILE = 8
+DEFAULT_COL_TILE = 512  # wider than the MXU kernel: VPU scans are lane-parallel
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    y = jnp.cumsum(x_ref[...], axis=-1)
+    o_ref[...] = y + carry_ref[...]
+    carry_ref[...] += y[:, -1:]
+
+
+def row_scan_pallas(
+    x: jax.Array,
+    *,
+    row_tile: int = DEFAULT_ROW_TILE,
+    col_tile: int = DEFAULT_COL_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-row inclusive prefix sum via VPU tile scans + sequential carry."""
+    rows, cols = x.shape
+    if rows % row_tile or cols % col_tile:
+        raise ValueError(f"unpadded shape {x.shape}; pad to ({row_tile}, {col_tile})")
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=(rows // row_tile, cols // col_tile),
+        in_specs=[pl.BlockSpec((row_tile, col_tile), lambda r, c: (r, c))],
+        out_specs=pl.BlockSpec((row_tile, col_tile), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        scratch_shapes=[pltpu.VMEM((row_tile, 1), x.dtype)],
+        interpret=interpret,
+    )(x)

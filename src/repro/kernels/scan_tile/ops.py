@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the VPU tile scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import common
+from repro.kernels.scan_tile import kernel as _kernel
+from repro.kernels.scan_tile import ref as _ref
+
+__all__ = ["row_scan"]
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_ref"))
+def row_scan(
+    x: jax.Array, *, interpret: bool | None = None, use_ref: bool = False
+) -> jax.Array:
+    if x.ndim != 2:
+        raise ValueError(f"expected (rows, cols), got {x.shape}")
+    if use_ref:
+        return _ref.row_scan(x)
+    rows, cols = x.shape
+    col_tile = min(_kernel.DEFAULT_COL_TILE, max(common.MXU_LANE, cols))
+    xp = common.pad_to(x, _kernel.DEFAULT_ROW_TILE, axis=0)
+    xp = common.pad_to(xp, col_tile, axis=1)
+    out = _kernel.row_scan_pallas(
+        xp, col_tile=col_tile, interpret=common.should_interpret(interpret)
+    )
+    return out[:rows, :cols]

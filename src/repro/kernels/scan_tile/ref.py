@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the VPU tile scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["row_scan"]
+
+
+def row_scan(x: jax.Array) -> jax.Array:
+    return jnp.cumsum(x, axis=-1, dtype=x.dtype)

@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY in this process (dry-run).
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input shape) cell, on the 16×16 single-pod mesh and
+the 2×16×16 multi-pod mesh:
+
+    with mesh:
+        lowered  = jax.jit(step).lower(*input_specs)   # sharded SDS, no alloc
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-bytes → results JSON
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective) are
+bugs in the framework.  Results are cached per cell under results/dryrun/ so
+the sweep is resumable; EXPERIMENTS.md §Dry-run / §Roofline read these files.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import flops as flops_mod
+from repro.analysis import roofline
+from repro.configs import SHAPES, get as get_cfg
+from repro.distributed.context import activation_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import Cell, build_cell, plan_cells
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def _result_path(cell: Cell, multi_pod: bool, opt: bool = False) -> str:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{mesh_tag}__opt" if opt else mesh_tag
+    return os.path.join(RESULTS_DIR, f"{cell.arch}__{cell.shape}__{tag}.json")
+
+
+def run_cell(cell: Cell, *, multi_pod: bool, force: bool = False, opt: bool = False) -> dict:
+    path = _result_path(cell, multi_pod, opt)
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+
+    out: dict = {
+        "cell": cell.name,
+        "arch": cell.arch,
+        "shape": cell.shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+    }
+    if cell.skip_reason:
+        out["status"] = "skipped"
+        out["skip_reason"] = cell.skip_reason
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        return out
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.monotonic()
+    try:
+        step, args, jit_kwargs = build_cell(cell, mesh, opt=opt)
+        with mesh, activation_mesh(mesh):
+            # scan-aware global FLOP/traffic count from the jaxpr (XLA's
+            # cost_analysis counts while bodies once — see analysis/flops.py)
+            jcount = flops_mod.count_fn(step, *args)
+            lowered = jax.jit(step, **jit_kwargs).lower(*args)
+            t_lower = time.monotonic() - t0
+            compiled = lowered.compile()
+            t_compile = time.monotonic() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        # keep the post-SPMD HLO for recompile-free re-analysis (§Perf)
+        with gzip.open(path.replace(".json", ".hlo.txt.gz"), "wt") as f:
+            f.write(hlo)
+        coll = roofline.collective_bytes(hlo)
+        per_dev = {
+            "flops": jcount["flops"] / out["chips"],
+            "bytes accessed": jcount["hbm_bytes"] / out["chips"],
+        }
+        terms = roofline.roofline_terms(per_dev, coll)
+        shape = SHAPES[cell.shape]
+        mf = roofline.model_flops(get_cfg(cell.arch), shape, out["chips"])
+        hbm_used = int(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                       + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        out.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=int(mem.argument_size_in_bytes),
+                output_bytes=int(mem.output_size_in_bytes),
+                temp_bytes=int(mem.temp_size_in_bytes),
+                alias_bytes=int(mem.alias_size_in_bytes),
+                hbm_used_bytes=hbm_used,
+                fits_16gb=bool(hbm_used < 16e9),
+            ),
+            cost_xla_scan_once={k: cost[k] for k in ("flops", "bytes accessed") if k in cost},
+            cost_jaxpr_global={"flops": jcount["flops"], "hbm_bytes": jcount["hbm_bytes"]},
+            collectives={k: round(v, 1) for k, v in coll.items()},
+            roofline=terms,
+            model_flops=mf,
+            useful_flop_ratio=(
+                mf["model_flops_per_device"] / terms["flops_per_device"]
+                if terms["flops_per_device"] else None
+            ),
+        )
+    except Exception as e:  # record the failure — these are framework bugs
+        out.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true", help="§Perf optimized variants")
+    args = ap.parse_args()
+
+    cells = plan_cells()
+    if not args.all:
+        cells = [
+            c for c in cells
+            if (not args.arch or c.arch == args.arch)
+            and (not args.shape or c.shape == args.shape)
+        ]
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    failures = 0
+    for cell in cells:
+        for multi_pod in meshes:
+            tag = "2x16x16" if multi_pod else "16x16"
+            r = run_cell(cell, multi_pod=multi_pod, force=args.force, opt=args.opt)
+            status = r["status"]
+            extra = ""
+            if status == "ok":
+                extra = (
+                    f" hbm/dev={r['memory']['hbm_used_bytes'] / 1e9:.2f}GB"
+                    f" bound={r['roofline']['bound']}"
+                    f" compile={r.get('compile_s', 0):.0f}s"
+                )
+            elif status == "error":
+                failures += 1
+                extra = " " + r["error"][:140]
+            print(f"[{status:7s}] {cell.name:44s} mesh={tag}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

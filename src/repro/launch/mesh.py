@@ -1,0 +1,26 @@
+"""Production mesh construction (assignment: MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state.  Single pod: 16×16 = 256 chips ('data', 'model'); multi-pod:
+2×16×16 = 512 chips ('pod', 'data', 'model').
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,195 @@
+"""Dry-run cell plan + step builders (assignment: MULTI-POD DRY-RUN steps 2–3).
+
+``plan_cells()`` enumerates all 40 (arch × shape) cells with skip annotations;
+``build_cell()`` returns a jit-able step function plus fully-sharded
+ShapeDtypeStruct arguments — weak-type-correct stand-ins, no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, sub_quadratic_ready
+from repro.data.synthetic import batch_spec
+from repro.distributed import sharding as sh
+from repro.models import encdec, transformer
+from repro.optim import adamw
+from repro.serving import steps as serve_steps
+from repro.train import step as train_mod
+
+__all__ = ["Cell", "plan_cells", "build_cell"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    skip_reason: str | None = None
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}×{self.shape}"
+
+
+def plan_cells() -> list[Cell]:
+    cells = []
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get(arch)
+        for shape_name, shape in SHAPES.items():
+            skip = None
+            if shape_name == "long_500k" and not sub_quadratic_ready(cfg):
+                skip = "pure full attention: 500k decode needs sub-quadratic (DESIGN.md §5)"
+            cells.append(Cell(arch, shape_name, skip))
+    return cells
+
+
+def _sds_with(tree_sds, tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, spec)),
+        tree_sds,
+        tree_specs,
+    )
+
+
+def _decode_length_hint(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    # serve_step: one new token with a cache of seq_len ⇒ capacity covers
+    # seq_len + 1 under the active policy.
+    return shape.seq_len + 1
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh, *, opt: bool = False) -> tuple:
+    """ShapeDtypeStruct stand-ins for every model input of one cell
+    (weak-type-correct, shardable, no device allocation) — assignment step 2."""
+    _, args, _ = build_cell(Cell(arch, shape_name), mesh, opt=opt)
+    return args
+
+
+def build_cell(cell: Cell, mesh: Mesh, *, opt: bool = False) -> tuple[Callable, tuple, dict]:
+    """→ (step_fn, sharded SDS args, jit kwargs) for jit(...).lower(*args).
+
+    Donation aliases the big in-place buffers (train state / decode caches);
+    prefill pins ``out_shardings`` for the emitted caches — the bucket slicing
+    is not tile-aligned, so without explicit output specs GSPMD replicates
+    the 32k KV cache across the model axis (18 GB/device, dry-run-caught).
+
+    ``opt=True`` applies the §Perf hillclimb variants: triangular causal
+    attention (prefill/train), int8 KV cache (decode), microbatches=2 (train).
+    """
+    cfg = configs.get(cell.arch)
+    shape = SHAPES[cell.shape]
+    microbatches = None
+    if opt:
+        if shape.kind == "decode":
+            cfg = dataclasses.replace(cfg, cache_quant=True)
+        else:
+            cfg = dataclasses.replace(
+                cfg, attention_impl="blockwise_tri", attention_chunk=2048
+            )
+        if shape.kind == "train":
+            microbatches = 2
+    if shape.kind == "train":
+        fn, args = _build_train(cfg, shape, mesh, microbatches=microbatches)
+        return fn, args, {"donate_argnums": (0,)}
+    if shape.kind == "prefill":
+        fn, args = _build_prefill(cfg, shape, mesh)
+        out_sds = jax.eval_shape(fn, *args)
+        logits_spec = P(sh.data_axes(mesh) or None, "model")
+        out_specs = (
+            NamedSharding(mesh, logits_spec),
+            jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                sh.cache_specs(out_sds[1], cfg, mesh),
+            ),
+        )
+        return fn, args, {"out_shardings": out_specs}
+    fn, args = _build_decode(cfg, shape, mesh)
+    return fn, args, {"donate_argnums": (2,)}
+
+
+# --------------------------------------------------------------------------
+
+TRAIN_MICROBATCHES = 8  # gradient accumulation: global 256 → 8 × 32-seq
+# microbatches; the standard memory/throughput trade at this batch size and
+# the overlap point for grad-reduction/backward (train/step.py).
+
+
+def _build_train(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, microbatches: int | None = None):
+    microbatches = TRAIN_MICROBATCHES if microbatches is None else microbatches
+    opt_cfg = adamw.AdamWConfig()
+    key = jax.random.PRNGKey(0)
+    state_sds = jax.eval_shape(
+        lambda k: train_mod.init_train_state(k, cfg), key
+    )
+    pspecs = sh.param_specs(state_sds.params, cfg, mesh)
+    state_specs = train_mod.TrainState(params=pspecs, opt=adamw.AdamWState(step=P(), m=pspecs, v=pspecs), ef=None)
+    state_in = _sds_with(state_sds, state_specs, mesh)
+
+    bs = batch_spec(cfg, shape.global_batch, shape.seq_len)
+    bspecs = sh.batch_specs(cfg, mesh, shape.global_batch)
+    batch_in = _sds_with(bs, bspecs, mesh)
+    lr = jax.ShapeDtypeStruct((), jnp.float32, sharding=NamedSharding(mesh, P()))
+
+    def step(state, batch, lr_scale):
+        new_state, metrics = train_mod.train_step(
+            state, batch, cfg, opt_cfg, lr_scale,
+            microbatches=microbatches, grad_specs=pspecs,
+        )
+        return new_state, metrics["loss"]
+
+    return step, (state_in, batch_in, lr)
+
+
+def _build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    bs = batch_spec(cfg, shape.global_batch, shape.seq_len)
+    bspecs = sh.batch_specs(cfg, mesh, shape.global_batch)
+    batch_in = _sds_with(bs, bspecs, mesh)
+
+    params_sds = jax.eval_shape(lambda k: transformer.init_params(k, cfg), jax.random.PRNGKey(0))
+    params_in = _sds_with(params_sds, sh.param_specs(params_sds, cfg, mesh), mesh)
+
+    def step(params, batch):
+        memory = None
+        kw = {}
+        if cfg.n_enc_layers:
+            memory = encdec.encode(params["encoder"], batch["frames"], cfg)
+            kw["memory"] = memory
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        logits, caches = serve_steps.prefill(
+            params, batch["tokens"], cfg, capacity_hint=shape.seq_len, **kw
+        )
+        return logits, caches
+
+    return step, (params_in, batch_in)
+
+
+def _build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B = shape.global_batch
+    hint = _decode_length_hint(cfg, shape)
+    params_sds = jax.eval_shape(lambda k: transformer.init_params(k, cfg), jax.random.PRNGKey(0))
+    params_in = _sds_with(params_sds, sh.param_specs(params_sds, cfg, mesh), mesh)
+
+    enc_len = shape.seq_len if cfg.n_enc_layers else None
+    caches_sds = jax.eval_shape(
+        lambda: serve_steps.init_decode_caches(cfg, B, hint, enc_len=enc_len)
+    )
+    caches_in = _sds_with(caches_sds, sh.cache_specs(caches_sds, cfg, mesh), mesh)
+
+    dp = sh.data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b_axis = dp if dp and B % dp_size == 0 else None
+    token_in = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=NamedSharding(mesh, P(b_axis)))
+    length_in = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+
+    def step(params, token, caches, length):
+        return serve_steps.decode_step(params, token, caches, length, cfg)
+
+    return step, (params_in, token_in, caches_in, length_in)

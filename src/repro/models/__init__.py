@@ -1,0 +1,3 @@
+from repro.models import attention, encdec, frontends, mlp, modules, moe, ssm, transformer
+
+__all__ = ["attention", "encdec", "frontends", "mlp", "modules", "moe", "ssm", "transformer"]

@@ -1,0 +1,51 @@
+"""Encoder stack for encoder-decoder archs (seamless-m4t backbone).
+
+The encoder consumes precomputed frame embeddings (the audio frontend is a
+stub per the assignment — ``input_specs()`` supplies the embeddings) and runs
+bidirectional attention layers; the decoder in models/transformer.py
+cross-attends to the encoder output via per-layer cross blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models.modules import Param, rms_norm
+
+__all__ = ["init_encoder", "encode"]
+
+
+def _init_enc_layer(key: jax.Array, cfg: ModelConfig, dtype) -> Param:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attention(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_mod.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+def init_encoder(key: jax.Array, cfg: ModelConfig, dtype) -> Param:
+    keys = jax.random.split(key, cfg.n_enc_layers)
+    layers = jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(keys)
+    return {"layers": layers, "final_norm": jnp.ones((cfg.d_model,), dtype)}
+
+
+def encode(enc_params: Param, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, S_enc, D) stub embeddings → encoder memory (B, S_enc, D)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        x = x + attn_mod.attention_block(lp["attn"], h, cfg, positions, causal=False)
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_block(lp["mlp"], h, cfg.activation)
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, enc_params["layers"])
+    return rms_norm(x, enc_params["final_norm"], cfg.norm_eps)

@@ -1,0 +1,32 @@
+"""Modality frontend stubs (assignment: [audio]/[vlm] specify the BACKBONE).
+
+``input_specs()`` supplies precomputed patch/frame embeddings; these helpers
+generate synthetic ones for smoke tests and examples, and document the split
+between the (stubbed) frontend and the (real) backbone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["synthetic_prefix_embeds", "synthetic_frames"]
+
+
+def synthetic_prefix_embeds(
+    key: jax.Array, cfg: ModelConfig, batch: int, dtype=None
+) -> jax.Array:
+    """ViT-patch-embedding stand-ins: (B, n_prefix, d_model)."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    return (
+        jax.random.normal(key, (batch, cfg.n_prefix_embeds, cfg.d_model)) * 0.02
+    ).astype(dtype)
+
+
+def synthetic_frames(
+    key: jax.Array, cfg: ModelConfig, batch: int, seq: int, dtype=None
+) -> jax.Array:
+    """Audio frame-embedding stand-ins: (B, S_enc, d_model)."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    return (jax.random.normal(key, (batch, seq, cfg.d_model)) * 0.02).astype(dtype)

@@ -1,0 +1,86 @@
+"""Shared model building blocks: norms, rotary embeddings, embeddings, init."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "embed",
+    "unembed",
+    "dense_init",
+    "Param",
+]
+
+Param = dict[str, Any]
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], dtype, fan_in: int | None = None):
+    """Scaled normal init (1/sqrt(fan_in))."""
+    fan_in = shape[0] if fan_in is None else fan_in
+    return (jax.random.normal(key, shape) * (fan_in ** -0.5)).astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with a hand-written VJP that keeps *boundary* dtypes at the
+    input dtype (bf16): the autodiff VJP of the internal f32 upcast emits
+    f32 x-sized cotangents, which ride every sequence-parallel collective at
+    2× payload (EXPERIMENTS.md §Perf B4/B6). Math inside stays f32."""
+    return _rms_fwd(x, weight, eps)[0]
+
+
+def _rms_fwd(x, weight, eps):
+    x32 = x.astype(jnp.float32)
+    rstd = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    y = (x32 * rstd * weight.astype(jnp.float32)).astype(x.dtype)
+    return y, (x, weight)
+
+
+def _rms_bwd(eps, res, dy):
+    x, weight = res
+    x32 = x.astype(jnp.float32)
+    dy32 = dy.astype(jnp.float32)
+    w32 = weight.astype(jnp.float32)
+    rstd = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    xhat = x32 * rstd
+    # dL/dw — reduce over all leading dims
+    dw = jnp.sum(dy32 * xhat, axis=tuple(range(dy.ndim - 1)))
+    # dL/dx = rstd * (g - xhat * mean(g * xhat)) with g = dy * w
+    g = dy32 * w32
+    dx = rstd * (g - xhat * jnp.mean(g * xhat, axis=-1, keepdims=True))
+    return dx.astype(x.dtype), dw.astype(weight.dtype)
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rope(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding at ``positions`` (..., seq)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, dim/2)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate head vectors. x: (..., seq, heads, head_dim); cos/sin (..., seq, hd/2)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., :, None, :]
+    sin = sin[..., :, None, :]
+    return jnp.concatenate((x1 * cos - x2 * sin, x2 * cos + x1 * sin), axis=-1).astype(dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Project to vocab logits (fp32 for a stable softmax/CE)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32))

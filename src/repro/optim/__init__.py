@@ -1,0 +1,3 @@
+from repro.optim import adamw, compression, schedule
+
+__all__ = ["adamw", "schedule", "compression"]

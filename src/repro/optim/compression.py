@@ -1,0 +1,55 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Per-tensor symmetric int8 quantization; the residual (quantization error) is
+carried in an error-feedback buffer and re-added next step, which keeps SGD
+convergence (1-bit-Adam lineage).  In a pod-level data-parallel reduction this
+cuts cross-pod all-reduce bytes 4× for bf16 grads (2× for f32 moments); the
+dry-run's collective-bytes accounting picks this up when enabled because the
+reduced tensors are physically int8 (see distributed/collectives.py
+``compressed_psum``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["EFState", "ef_init", "quantize", "dequantize", "compress_grads"]
+
+
+class EFState(NamedTuple):
+    residual: dict  # same tree as grads, fp32
+
+
+def ef_init(grads_like) -> EFState:
+    return EFState(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    )
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """fp → (int8, scale). Symmetric, per-tensor."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState) -> tuple[dict, EFState]:
+    """Quantize-dequantize each grad with error feedback → (grads', ef')."""
+
+    def one(g, r):
+        full = g.astype(jnp.float32) + r
+        q, scale = quantize(full)
+        deq = dequantize(q, scale)
+        return deq.astype(g.dtype), full - deq
+
+    pairs = jax.tree.map(one, grads, ef.residual)
+    new_g = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, EFState(residual=new_r)

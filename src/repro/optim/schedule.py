@@ -1,0 +1,14 @@
+"""LR schedule: linear warmup + cosine decay (the MaxText/llama default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    frac = (step - warmup) / jnp.maximum(total - warmup, 1)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(frac, 0, 1)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,3 @@
+from repro.serving import engine, kvcache, sampler, steps
+
+__all__ = ["engine", "kvcache", "sampler", "steps"]

@@ -1,0 +1,314 @@
+"""KV-cache policies — the paper's §III structures as serving substrate.
+
+Decode is a per-step ``push_back`` into per-layer K/V arrays whose final
+length is unknown at allocation time — exactly the paper's motivating
+scenario.  Three policies mirror its comparison (DESIGN.md §3):
+
+``static``      pre-allocate ``max_seq_len`` (paper's static array).  Fails
+                (truncates) past capacity; pays worst-case VRAM up front.
+``semistatic``  doubling buffer; **copies the whole cache** on growth (the
+                host-resize baseline; the paper's memMap variant remaps pages
+                instead — no XLA analog, so the copy is real here).
+``ggarray``     geometric seq-dim buckets (bucket b holds ``B0·2^b`` steps):
+                growth appends a bucket, never copies; capacity stays < 2×
+                the live context + B0.  Attention walks the bucket chain with
+                online-softmax merging — the rw_b access pattern.
+
+A cache *slot* (one attention layer kind) is a dict of arrays; the serving
+stack stacks slots over scan periods.  Bucket count is static per compiled
+step; growth events change the pytree structure at the program boundary
+(O(log n) recompiles total, warm-cached — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import indexing
+from repro.models.attention import MASK_VALUE
+
+__all__ = [
+    "init_cache",
+    "cache_capacity",
+    "append",
+    "attend",
+    "grow_ggarray",
+    "fill_from_prefill",
+    "needed_levels",
+    "cache_bytes",
+]
+
+Cache = dict[str, Any]
+
+
+def needed_levels(b0: int, length: int) -> int:
+    return max(indexing.min_buckets_for(b0, length), 1)
+
+
+def cache_capacity(cfg: ModelConfig, policy: str, length_hint: int) -> int:
+    if policy == "static":
+        return length_hint
+    if policy == "semistatic":
+        cap = max(cfg.cache_b0, 1)
+        while cap < length_hint:
+            cap *= 2
+        return cap
+    return indexing.capacity(cfg.cache_b0, needed_levels(cfg.cache_b0, length_hint))
+
+
+def _level_shapes(cfg: ModelConfig, nlevels: int) -> list[int]:
+    return list(indexing.bucket_sizes(cfg.cache_b0, nlevels))
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    length_hint: int,
+    policy: str | None = None,
+    *,
+    stack: int | None = None,
+    dtype=None,
+) -> Cache:
+    """Empty cache slot sized for ``length_hint`` under ``policy``.
+
+    ``stack``: leading periods dim (scan-over-layers stacking).
+    ``cfg.cache_quant``: int8 K/V with per-(token, kv-head) scales — halves
+    the decode memory-roofline term (the cache stream dominates it).
+    """
+    policy = cfg.cache_policy if policy is None else policy
+    quant = cfg.cache_quant
+    dtype = (jnp.int8 if quant else jnp.dtype(cfg.dtype)) if dtype is None else dtype
+    lead = (stack,) if stack else ()
+    kh, dh = cfg.n_kv_heads, cfg.head_dim
+
+    def z(length):
+        return jnp.zeros((*lead, batch, length, kh, dh), dtype)
+
+    def zs(length):  # per-(token, head) dequant scales
+        return jnp.zeros((*lead, batch, length, kh), jnp.bfloat16)
+
+    if policy in ("static", "semistatic"):
+        cap = cache_capacity(cfg, policy, length_hint)
+        out = {"k": z(cap), "v": z(cap)}
+        if quant:
+            out["ks"] = zs(cap)
+            out["vs"] = zs(cap)
+        return out
+    nlevels = needed_levels(cfg.cache_b0, length_hint)
+    cache: Cache = {}
+    for lvl, size in enumerate(_level_shapes(cfg, nlevels)):
+        cache[f"k{lvl}"] = z(size)
+        cache[f"v{lvl}"] = z(size)
+        if quant:
+            cache[f"ks{lvl}"] = zs(size)
+            cache[f"vs{lvl}"] = zs(size)
+    return cache
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(…, L, KH, Dh) → int8 values + (…, L, KH) scales."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+import re as _re
+
+_LEVEL_KEY = _re.compile(r"^k(\d+)$")
+
+
+def _levels(cache: Cache) -> int:
+    return sum(1 for key in cache if _LEVEL_KEY.match(key))
+
+
+def _is_ggarray(cache: Cache) -> bool:
+    return "k0" in cache
+
+
+def _is_quant(cache: Cache) -> bool:
+    return "ks0" in cache or "ks" in cache
+
+
+def grow_ggarray(cache: Cache, cfg: ModelConfig, levels: int = 1) -> Cache:
+    """Copy-free growth: append the next geometric bucket level(s)."""
+    n = _levels(cache)
+    proto = cache["k0"]
+    out = dict(cache)
+    for lvl in range(n, n + levels):
+        size = cfg.cache_b0 * (1 << lvl)
+        shape = (*proto.shape[:-3], size, *proto.shape[-2:])
+        out[f"k{lvl}"] = jnp.zeros(shape, proto.dtype)
+        out[f"v{lvl}"] = jnp.zeros(shape, proto.dtype)
+        if _is_quant(cache):
+            sshape = (*proto.shape[:-3], size, proto.shape[-2])
+            out[f"ks{lvl}"] = jnp.zeros(sshape, jnp.bfloat16)
+            out[f"vs{lvl}"] = jnp.zeros(sshape, jnp.bfloat16)
+    return out
+
+
+def cache_bytes(cache: Cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+# --------------------------------------------------------------------------
+# append — push_back of one decode step. k/v: (B, 1, KH, Dh); pos: (B,) or ().
+# --------------------------------------------------------------------------
+
+def append(cache: Cache, k: jax.Array, v: jax.Array, pos: jax.Array) -> Cache:
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), k.shape[:1])  # (B,)
+    rows = jnp.arange(k.shape[0])
+    quant = _is_quant(cache)
+    if quant:
+        k, k_s = _quantize_kv(k)
+        v, v_s = _quantize_kv(v)
+    if not _is_ggarray(cache):
+        cap = cache["k"].shape[-3]
+        tgt = jnp.where(pos < cap, pos, cap)  # static policy truncates past cap
+        out = {
+            "k": cache["k"].at[rows, tgt].set(k[:, 0], mode="drop"),
+            "v": cache["v"].at[rows, tgt].set(v[:, 0], mode="drop"),
+        }
+        if quant:
+            out["ks"] = cache["ks"].at[rows, tgt].set(k_s[:, 0], mode="drop")
+            out["vs"] = cache["vs"].at[rows, tgt].set(v_s[:, 0], mode="drop")
+        return out
+    n = _levels(cache)
+    b0 = cache["k0"].shape[-3]
+    starts = indexing.bucket_starts(b0, n)
+    sizes = indexing.bucket_sizes(b0, n)
+    out = dict(cache)
+    for lvl in range(n):
+        li = pos - starts[lvl]
+        ok = (li >= 0) & (li < sizes[lvl])
+        li = jnp.where(ok, li, sizes[lvl])
+        out[f"k{lvl}"] = cache[f"k{lvl}"].at[rows, li].set(k[:, 0], mode="drop")
+        out[f"v{lvl}"] = cache[f"v{lvl}"].at[rows, li].set(v[:, 0], mode="drop")
+        if quant:
+            out[f"ks{lvl}"] = cache[f"ks{lvl}"].at[rows, li].set(k_s[:, 0], mode="drop")
+            out[f"vs{lvl}"] = cache[f"vs{lvl}"].at[rows, li].set(v_s[:, 0], mode="drop")
+    return out
+
+
+# --------------------------------------------------------------------------
+# attend — one-token attention against the cache (rw_b bucket walk).
+# --------------------------------------------------------------------------
+
+def _partial_scores(q, k, v, kpos, live_len, state):
+    """Online-softmax update of ``state`` with one K/V segment.
+
+    q: (B, KH, G, Dh) f32 · k/v: (B, L, KH, Dh) · kpos: (L,) global positions.
+    """
+    m, l, acc = state
+    s = jnp.einsum("bkgd,blkd->bkgl", q, k.astype(jnp.float32))
+    live = kpos[None, :] < live_len[:, None]  # (B, L)
+    s = jnp.where(live[:, None, None, :], s, MASK_VALUE)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("bkgl,blkd->bkgd", p, v.astype(jnp.float32))
+    return m_new, l, acc
+
+
+def attend(
+    cache: Cache, q: jax.Array, length: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """q: (B, 1, H, Dh); ``length``: live entries per sequence ((B,) or ()).
+
+    Returns (B, 1, H, Dh).  For ggarray caches this is the paper's bucket
+    walk: one partial-softmax pass per level, merged online — the O(log n)
+    'multiple pointers' cost the paper measures in Fig. 5 is the extra
+    per-level masking/merge here.
+    """
+    B, _, H, Dh = q.shape
+    kh = cfg.n_kv_heads
+    g = H // kh
+    scale = Dh ** -0.5
+    qf = q[:, 0].reshape(B, kh, g, Dh).astype(jnp.float32) * scale
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    state = (
+        jnp.full((B, kh, g), MASK_VALUE, jnp.float32),
+        jnp.zeros((B, kh, g), jnp.float32),
+        jnp.zeros((B, kh, g, Dh), jnp.float32),
+    )
+    quant = _is_quant(cache)
+
+    def _kv(ck, cv, sk, sv):
+        if not quant:
+            return ck, cv
+        return _dequant(ck, sk), _dequant(cv, sv)
+
+    if _is_ggarray(cache):
+        n = _levels(cache)
+        b0 = cache["k0"].shape[-3]
+        starts = indexing.bucket_starts(b0, n)
+        for lvl in range(n):
+            kpos = starts[lvl] + jnp.arange(cache[f"k{lvl}"].shape[-3])
+            kk, vv = _kv(
+                cache[f"k{lvl}"], cache[f"v{lvl}"],
+                cache.get(f"ks{lvl}"), cache.get(f"vs{lvl}"),
+            )
+            state = _partial_scores(qf, kk, vv, kpos, length, state)
+    else:
+        kpos = jnp.arange(cache["k"].shape[-3])
+        kk, vv = _kv(cache["k"], cache["v"], cache.get("ks"), cache.get("vs"))
+        state = _partial_scores(qf, kk, vv, kpos, length, state)
+    m, l, acc = state
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# prefill → cache (the phase transition: contiguous K/V sliced into buckets).
+# --------------------------------------------------------------------------
+
+def fill_from_prefill(
+    cache: Cache, k_full: jax.Array, v_full: jax.Array
+) -> Cache:
+    """Load (B, S, KH, Dh) prefill K/V into an (empty) cache slot.
+
+    ggarray: bucket b receives the contiguous slice [start_b, start_b+len_b)
+    — static slicing, no search (the inverse of ``flatten``).
+    """
+    S = k_full.shape[1]
+    quant = _is_quant(cache)
+    k_s = v_s = None
+    if quant:
+        k_full, k_s = _quantize_kv(k_full)
+        v_full, v_s = _quantize_kv(v_full)
+    if not _is_ggarray(cache):
+        cap = cache["k"].shape[-3]
+        n = min(S, cap)
+        out = {
+            "k": cache["k"].at[:, :n].set(k_full[:, :n]),
+            "v": cache["v"].at[:, :n].set(v_full[:, :n]),
+        }
+        if quant:
+            out["ks"] = cache["ks"].at[:, :n].set(k_s[:, :n])
+            out["vs"] = cache["vs"].at[:, :n].set(v_s[:, :n])
+        return out
+    nlev = _levels(cache)
+    b0 = cache["k0"].shape[-3]
+    starts = indexing.bucket_starts(b0, nlev)
+    sizes = indexing.bucket_sizes(b0, nlev)
+    out = dict(cache)
+    for lvl in range(nlev):
+        lo = starts[lvl]
+        if lo >= S:
+            break
+        n = min(sizes[lvl], S - lo)
+        out[f"k{lvl}"] = cache[f"k{lvl}"].at[:, :n].set(k_full[:, lo : lo + n])
+        out[f"v{lvl}"] = cache[f"v{lvl}"].at[:, :n].set(v_full[:, lo : lo + n])
+        if quant:
+            out[f"ks{lvl}"] = cache[f"ks{lvl}"].at[:, :n].set(k_s[:, lo : lo + n])
+            out[f"vs{lvl}"] = cache[f"vs{lvl}"].at[:, :n].set(v_s[:, lo : lo + n])
+    return out

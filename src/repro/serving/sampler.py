@@ -1,0 +1,14 @@
+"""Token sampling: greedy / temperature."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample"]
+
+
+def sample(key: jax.Array, logits: jax.Array, temperature: float = 0.0) -> jax.Array:
+    """logits (B, V) → tokens (B,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,218 @@
+"""Serving steps: prefill (context encode → cache) and decode (one token).
+
+Both walk the same period-scanned layer stack as training; the cache pytree
+rides the scan as xs/ys so its leaves carry the (n_periods, ...) stacking.
+``decode_step`` is the ``serve_step`` the decode_32k / long_500k dry-run
+cells lower: one new token against a cache filled to seq_len.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import constrain
+from repro.models import ssm as ssm_mod
+from repro.models.attention import inner_attention, project_out, project_qkv
+from repro.models.mlp import mlp_block
+from repro.models.moe import moe_block
+from repro.models.modules import embed, rms_norm, unembed
+
+from repro.serving import kvcache
+
+__all__ = ["prefill", "decode_step", "init_decode_caches", "logits_from_hidden"]
+
+
+def logits_from_hidden(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = constrain(unembed(x, table), ("batch", "vocab"))
+    if cfg.padded_vocab != cfg.vocab_size:
+        live = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(live, logits, -1e30)
+    return logits
+
+
+def _mlp_or_moe(sp, x, slot, cfg):
+    h = rms_norm(x, sp["norm2"], cfg.norm_eps)
+    if cfg.is_moe_layer(slot):
+        out, _ = moe_block(sp["moe"], h, cfg)
+        return x + out
+    return x + mlp_block(sp["mlp"], h, cfg.activation)
+
+
+# --------------------------------------------------------------------------
+# Prefill: full context forward, emitting filled caches per layer.
+# --------------------------------------------------------------------------
+
+def prefill(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    capacity_hint: int | None = None,
+    policy: str | None = None,
+    prefix_embeds: jax.Array | None = None,
+    memory: jax.Array | None = None,
+    lengths: jax.Array | None = None,  # (B,) per-seq prompt lengths (right-pad)
+) -> tuple[jax.Array, list]:
+    """→ (last-position logits (B, V), caches list[slot])."""
+    policy = cfg.cache_policy if policy is None else policy
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    cap = capacity_hint if capacity_hint is not None else S
+    positions = jnp.arange(S)[None, :]
+
+    def period_body(carry, period_params):
+        (x,) = carry
+        x = constrain(x, ("batch", "seq", None))
+        caches_out = []
+        for slot, kind in enumerate(cfg.layout):
+            sp = period_params[slot]
+            h = rms_norm(x, sp["norm1"], cfg.norm_eps)
+            if kind == "mamba":
+                y, state = ssm_mod.mamba_block(sp["mamba"], h, cfg, return_state=True)
+                x = x + y
+                caches_out.append({"conv": state.conv, "ssd": state.ssd})
+                continue
+            q, k, v = project_qkv(sp["attn"], h, cfg, positions)
+            att = inner_attention(q, k, v, cfg, causal=True)
+            x = x + project_out(sp["attn"], att)
+            cache = kvcache.init_cache(cfg, B, cap, policy)
+            cache = kvcache.fill_from_prefill(cache, k, v)
+            if memory is not None:
+                ck = jnp.einsum("bsd,dhk->bshk", memory, sp["cross"]["wk"])
+                cv = jnp.einsum("bsd,dhk->bshk", memory, sp["cross"]["wv"])
+                hc = rms_norm(x, sp["cross_norm"], cfg.norm_eps)
+                qc = jnp.einsum("bsd,dhk->bshk", hc, sp["cross"]["wq"])
+                attc = inner_attention(qc, ck, cv, cfg, causal=False)
+                x = x + project_out(sp["cross"], attc)
+                cache = dict(cache, cross_k=ck, cross_v=cv)
+            x = _mlp_or_moe(sp, x, slot, cfg)
+            caches_out.append(cache)
+        return (x,), caches_out
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    (x,), caches = jax.lax.scan(body, (x,), params["layers"])
+    if lengths is None:
+        last = x[:, -1]
+    else:
+        last = x[jnp.arange(B), jnp.asarray(lengths, jnp.int32) - 1]
+    logits = logits_from_hidden(params, last, cfg)
+    return logits, caches
+
+
+# --------------------------------------------------------------------------
+# Decode: one token, cache push_back + bucket-walk attention.
+# --------------------------------------------------------------------------
+
+def init_decode_caches(
+    cfg: ModelConfig,
+    batch: int,
+    length_hint: int,
+    *,
+    policy: str | None = None,
+    enc_len: int | None = None,
+) -> list:
+    """Empty caches sized for a context of ``length_hint`` (dry-run entry)."""
+    policy = cfg.cache_policy if policy is None else policy
+    caches = []
+    P = cfg.n_periods
+    dt = jnp.dtype(cfg.dtype)
+    for slot, kind in enumerate(cfg.layout):
+        if kind == "mamba":
+            st = ssm_mod.init_mamba_state(cfg, batch, dt)
+            caches.append(
+                {
+                    "conv": jnp.zeros((P, *st.conv.shape), dt),
+                    "ssd": jnp.zeros((P, *st.ssd.shape), jnp.float32),
+                }
+            )
+            continue
+        c = kvcache.init_cache(cfg, batch, length_hint, policy, stack=P)
+        if cfg.n_enc_layers and enc_len:
+            c = dict(
+                c,
+                cross_k=jnp.zeros((P, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dt),
+                cross_v=jnp.zeros((P, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dt),
+            )
+        caches.append(c)
+    return caches
+
+
+def decode_step(
+    params: dict,
+    token: jax.Array,  # (B,) or (B, 1)
+    caches: list,
+    length: jax.Array,  # () or (B,) live context length
+    cfg: ModelConfig,
+) -> tuple[jax.Array, list]:
+    """One serve step → (logits (B, V), updated caches)."""
+    token = token.reshape(token.shape[0], 1)
+    x = embed(params["embed"], token).astype(jnp.dtype(cfg.dtype))
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    positions = pos[:, None]  # (B, 1)
+
+    def _get(full: dict, i):
+        return {
+            k: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+            for k, a in full.items()
+        }
+
+    def _put(full: dict, part: dict, i):
+        out = dict(full)
+        for k, p in part.items():  # only updated keys (cross K/V stay as-is)
+            out[k] = jax.lax.dynamic_update_index_in_dim(
+                full[k], p.astype(full[k].dtype), i, 0
+            )
+        return out
+
+    def period_body(carry, xs):
+        # caches ride the CARRY and are updated in place (dynamic-update-
+        # slice) — the xs→ys formulation double-buffers the whole KV cache
+        # (2× HBM on a 32k×128 cache; caught by the dry-run memory analysis).
+        x, caches = carry
+        x = constrain(x, ("batch", None, None))
+        period_params, idx = xs
+        for slot, kind in enumerate(cfg.layout):
+            sp = period_params[slot]
+            c = _get(caches[slot], idx)
+            h = rms_norm(x, sp["norm1"], cfg.norm_eps)
+            if kind == "mamba":
+                y, st = ssm_mod.mamba_decode_step(
+                    sp["mamba"], h, ssm_mod.MambaState(c["conv"], c["ssd"]), cfg
+                )
+                x = x + y
+                caches[slot] = _put(caches[slot], {"conv": st.conv, "ssd": st.ssd}, idx)
+                continue
+            q, k, v = project_qkv(sp["attn"], h, cfg, positions)
+            kv_only = {key: val for key, val in c.items() if not key.startswith("cross")}
+            c2 = kvcache.append(kv_only, k, v, pos)
+            att = kvcache.attend(c2, q, pos + 1, cfg)
+            x = x + project_out(sp["attn"], att)
+            if "cross_k" in c:
+                hc = rms_norm(x, sp["cross_norm"], cfg.norm_eps)
+                qc = jnp.einsum("bsd,dhk->bshk", hc, sp["cross"]["wq"])
+                enc_len = c["cross_k"].shape[-3]
+                attc = kvcache.attend(
+                    {"k": c["cross_k"], "v": c["cross_v"]}, qc,
+                    jnp.full((B,), enc_len, jnp.int32), cfg,
+                )
+                x = x + project_out(sp["cross"], attc)
+            x = _mlp_or_moe(sp, x, slot, cfg)
+            caches[slot] = _put(caches[slot], c2, idx)
+        return (x, caches), None
+
+    (x, new_caches), _ = jax.lax.scan(
+        period_body,
+        (x, list(caches)),
+        (params["layers"], jnp.arange(cfg.n_periods)),
+    )
+    logits = logits_from_hidden(params, x[:, 0], cfg)
+    return logits, new_caches

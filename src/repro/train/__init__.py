@@ -1,0 +1,3 @@
+from repro.train import step
+
+__all__ = ["step"]

@@ -1,0 +1,88 @@
+"""Roofline machinery: HLO collective parser (loop-aware) + jaxpr counter."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import flops as flops_mod
+from repro.analysis import roofline
+
+HLO_SNIPPET = """
+ENTRY %main.10 (p0: f32[128,64]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %ag = f32[128,256]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={1}
+  %ar = f32[128,64]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add.1
+  %t = (s32[], f32[128,64]{1,0}) tuple(%c, %p0)
+  %w = (s32[], f32[128,64]{1,0}) while(%t), condition=%cond.1, body=%body.1
+}
+%body.1 (p: (s32[], f32[128,64])) -> (s32[], f32[128,64]) {
+  %cp = f32[128,64]{1,0} collective-permute(%x), source_target_pairs={{0,1}}
+}
+%cond.1 (p: (s32[], f32[128,64])) -> pred[] {
+  %c5 = s32[] constant(5)
+  %lt = pred[] compare(%i, %c5), direction=LT
+}
+"""
+
+
+def test_collective_parser_weights_and_loops():
+    out = roofline.collective_bytes(HLO_SNIPPET)
+    ag = 128 * 256 * 4 * (3 / 4)  # all-gather (n-1)/n
+    ar = 128 * 64 * 4 * (2 * 3 / 4)  # all-reduce 2(n-1)/n
+    cp = 128 * 64 * 4 * 5  # permute inside a 5-trip while
+    assert out["all-gather"] == pytest.approx(ag)
+    assert out["all-reduce"] == pytest.approx(ar)
+    assert out["collective-permute"] == pytest.approx(cp)
+    assert out["total_weighted"] == pytest.approx(ag + ar + cp)
+
+
+def test_jaxpr_counter_multiplies_scan_bodies():
+    w = jnp.ones((64, 64))
+
+    def one_layer(x, _):
+        return x @ w, None
+
+    def stacked(x):
+        y, _ = jax.lax.scan(one_layer, x, None, length=12)
+        return y
+
+    got = flops_mod.count_fn(stacked, jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    assert got["flops"] == pytest.approx(12 * 2 * 8 * 64 * 64)
+
+
+def test_jaxpr_counter_sees_remat_recompute():
+    w = jnp.ones((32, 32))
+
+    def f(x):
+        return jnp.sum(jax.checkpoint(lambda y: jnp.tanh(y @ w))(x))
+
+    base = flops_mod.count_fn(f, jax.ShapeDtypeStruct((4, 32), jnp.float32))
+    grad = flops_mod.count_fn(jax.grad(lambda x: f(x)), jax.ShapeDtypeStruct((4, 32), jnp.float32))
+    # fwd (1 matmul) vs remat grad (fwd + recompute + dx matmul = 3;
+    # w is a closure constant so no dw matmul exists)
+    assert grad["flops"] == pytest.approx(3 * base["flops"])
+
+
+def test_roofline_terms_pick_dominant_bound():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 / 2}
+    coll = {"total_weighted": 50e9 * 2}
+    t = roofline.roofline_terms(cost, coll)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(0.5)
+    assert t["collective_s"] == pytest.approx(2.0)
+    assert t["bound"] == "collective"
+
+
+def test_model_flops_conventions():
+    from repro import configs
+    from repro.configs.base import SHAPES
+
+    cfg = configs.get("qwen3-32b")
+    train = roofline.model_flops(cfg, SHAPES["train_4k"], 256)
+    decode = roofline.model_flops(cfg, SHAPES["decode_32k"], 256)
+    assert train["params_total"] == pytest.approx(32e9, rel=0.15)
+    ratio = train["model_flops_total"] / (
+        6 * train["params_active"] * 4096 * 256
+    )
+    assert ratio == pytest.approx(1.0)
+    assert decode["model_flops_total"] == pytest.approx(2 * decode["params_active"] * 128)

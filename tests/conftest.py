@@ -1,0 +1,17 @@
+"""Test session config.
+
+Smoke tests and kernel tests run on the single real CPU device — the 512-way
+placeholder device farm belongs exclusively to launch/dryrun.py (which sets
+XLA_FLAGS before any jax import). Distributed tests that need >1 device spawn
+subprocesses with their own XLA_FLAGS.
+"""
+import os
+
+# Fail fast if something leaked the dry-run device farm into the test session.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
+    "tests must see the real device count; dryrun.py owns XLA_FLAGS"
+)
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

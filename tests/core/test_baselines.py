@@ -1,0 +1,40 @@
+"""Static / semi-static comparison structures (paper §III.A)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as bl
+
+
+def test_static_push_back_dense_and_masked():
+    arr = bl.static_init(16)
+    arr, pos = bl.static_push_back(arr, jnp.asarray([1.0, 2.0, 3.0]))
+    np.testing.assert_array_equal(np.asarray(pos), [0, 1, 2])
+    mask = jnp.asarray([True, False, True])
+    arr, pos = bl.static_push_back(arr, jnp.asarray([4.0, 5.0, 6.0]), mask)
+    np.testing.assert_array_equal(np.asarray(pos), [3, -1, 4])
+    np.testing.assert_allclose(np.asarray(arr.data)[:5], [1, 2, 3, 4, 6])
+    assert int(arr.size) == 5
+
+
+def test_static_has_no_resize_overflow_drops():
+    arr = bl.static_init(2)
+    arr, _ = bl.static_push_back(arr, jnp.asarray([1.0, 2.0, 3.0]))
+    # overflow is dropped (segfault analog is a hard failure on GPU; XLA drops)
+    np.testing.assert_allclose(np.asarray(arr.data), [1, 2])
+
+
+def test_semistatic_doubles_with_copy():
+    arr = bl.SemiStaticArray.create(4)
+    arr.push_back(jnp.arange(4, dtype=jnp.float32))
+    assert arr.capacity == 4
+    grows = arr.ensure_capacity(5)
+    assert grows >= 1 and arr.capacity >= 9 - 1
+    arr.push_back(jnp.asarray([9.0]))
+    np.testing.assert_allclose(np.asarray(arr.arr.data)[:5], [0, 1, 2, 3, 9])
+
+
+def test_semistatic_alloc_only_matches_shape():
+    arr = bl.SemiStaticArray.create(8, copy_on_grow=False)
+    buf = arr.grow_alloc_only()
+    assert buf.shape == (16,)

@@ -1,0 +1,138 @@
+"""GGArray semantics vs a per-block python-list oracle (paper §IV invariants)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ggarray as gg
+from repro.core import indexing
+
+
+def _oracle_push(oracle, elems, mask):
+    for b in range(len(oracle)):
+        for j in range(elems.shape[1]):
+            if mask[b, j]:
+                oracle[b].append(float(elems[b, j]))
+
+
+def test_push_back_flatten_matches_list_semantics():
+    nblocks, b0 = 4, 4
+    arr = gg.init(nblocks, b0, nbuckets=3)
+    oracle = [[] for _ in range(nblocks)]
+    rng = np.random.default_rng(0)
+    for wave in range(5):
+        m = rng.integers(1, 6)
+        elems = rng.standard_normal((nblocks, m)).astype(np.float32)
+        mask = rng.random((nblocks, m)) < 0.7
+        arr = gg.ensure_capacity(arr, m)
+        arr, pos = gg.push_back(arr, jnp.asarray(elems), jnp.asarray(mask))
+        _oracle_push(oracle, elems, mask)
+    flat, total = gg.flatten(arr)
+    want = [x for blk in oracle for x in blk]
+    assert int(total) == len(want)
+    np.testing.assert_allclose(np.asarray(flat)[: len(want)], want, rtol=0)
+    np.testing.assert_array_equal(np.asarray(arr.sizes), [len(b) for b in oracle])
+
+
+def test_positions_returned_are_the_read_back_indices():
+    arr = gg.init(2, 2, nbuckets=4)
+    elems = jnp.asarray([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]])
+    arr, pos = gg.push_back(arr, elems)
+    blocks = jnp.asarray([[0, 0, 0], [1, 1, 1]])
+    got = gg.gather_block(arr, blocks, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(elems))
+
+
+def test_grow_is_copy_free_and_preserves_content():
+    arr = gg.init(2, 2, nbuckets=1)
+    arr, _ = gg.push_back(arr, jnp.asarray([[1.0, 2.0], [3.0, 4.0]]))
+    old_buckets = arr.buckets
+    grown = gg.grow(arr, 2)
+    # same bucket objects, not copies — the paper's no-move property
+    for a, b in zip(old_buckets, grown.buckets):
+        assert a is b
+    assert grown.nbuckets == 3
+    flat, total = gg.flatten(grown)
+    np.testing.assert_allclose(np.asarray(flat)[:4], [1, 2, 3, 4])
+
+
+def test_rw_global_binary_search():
+    nblocks = 3
+    arr = gg.init(nblocks, 2, nbuckets=4)
+    sizes = [5, 1, 7]
+    for b, n in enumerate(sizes):
+        elems = jnp.arange(n, dtype=jnp.float32)[None] + 100 * b
+        mask = jnp.ones((1, n), bool)
+        pad_elems = jnp.zeros((nblocks, n))
+        pad_mask = jnp.zeros((nblocks, n), bool)
+        pad_elems = pad_elems.at[b].set(elems[0])
+        pad_mask = pad_mask.at[b].set(mask[0])
+        arr, _ = gg.push_back(arr, pad_elems, pad_mask)
+    want = np.concatenate([100 * b + np.arange(n) for b, n in enumerate(sizes)])
+    idx = jnp.arange(sum(sizes))
+    got = gg.read_global(arr, idx)
+    np.testing.assert_allclose(np.asarray(got), want)
+    # write_global roundtrip
+    arr2 = gg.write_global(arr, idx, jnp.asarray(want * 2.0))
+    np.testing.assert_allclose(np.asarray(gg.read_global(arr2, idx)), want * 2.0)
+
+
+def test_map_elements_touches_only_live_slots():
+    arr = gg.init(2, 2, nbuckets=3)
+    arr, _ = gg.push_back(arr, jnp.asarray([[1.0], [2.0]]))
+    out = gg.map_elements(arr, lambda x: x + 10.0)
+    flat, total = gg.flatten(out)
+    np.testing.assert_allclose(np.asarray(flat)[:2], [11.0, 12.0])
+    # dead capacity slots stay zero
+    assert float(jnp.sum(jnp.abs(flat))) == pytest.approx(23.0)
+
+
+def test_from_flat_roundtrip():
+    flat_in = jnp.arange(37, dtype=jnp.float32)
+    arr = gg.from_flat(flat_in, 37, nblocks=4, b0=2)
+    flat, total = gg.flatten(arr)
+    assert int(total) == 37
+    np.testing.assert_allclose(np.sort(np.asarray(flat)[:37]), np.asarray(flat_in))
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_property_memory_bound(n_per_block, b0):
+    """Paper §V: allocated capacity stays < 2×size + B0 per block."""
+    nbuckets = indexing.min_buckets_for(b0, n_per_block)
+    cap = indexing.capacity(b0, max(nbuckets, 1))
+    assert cap >= n_per_block
+    assert cap < 2 * n_per_block + b0
+
+
+@given(st.lists(st.integers(1, 9), min_size=1, max_size=6), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_property_push_waves_preserve_order(waves, seed):
+    rng = np.random.default_rng(seed)
+    nblocks = 2
+    arr = gg.init(nblocks, 2)
+    oracle = [[] for _ in range(nblocks)]
+    for m in waves:
+        elems = rng.standard_normal((nblocks, m)).astype(np.float32)
+        mask = rng.random((nblocks, m)) < 0.6
+        arr = gg.ensure_capacity(arr, m)
+        arr, _ = gg.push_back(arr, jnp.asarray(elems), jnp.asarray(mask))
+        _oracle_push(oracle, elems, mask)
+    flat, total = gg.flatten(arr)
+    want = [x for blk in oracle for x in blk]
+    np.testing.assert_allclose(np.asarray(flat)[: len(want)], want, rtol=0, atol=0)
+
+
+def test_item_shape_payloads():
+    """Vector payloads (the KV-cache use case: items are (heads, dim) slabs)."""
+    arr = gg.init(2, 2, item_shape=(3, 4), dtype=jnp.bfloat16, nbuckets=2)
+    elems = jnp.ones((2, 2, 3, 4), jnp.bfloat16)
+    arr, pos = gg.push_back(arr, elems)
+    flat, total = gg.flatten(arr)
+    assert flat.shape == (2 * arr.capacity_per_block, 3, 4)
+    assert int(total) == 4
+    np.testing.assert_allclose(np.asarray(flat[:2], np.float32), 1.0)

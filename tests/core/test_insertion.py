@@ -1,0 +1,67 @@
+"""Insertion-index algorithms (paper §III.B): all three must agree exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.insertion import INSERTION_METHODS, insertion_offsets
+
+METHODS = sorted(INSERTION_METHODS)
+
+
+def _ref_offsets(mask: np.ndarray):
+    inc = np.cumsum(mask.astype(np.int32), axis=-1)
+    return inc - mask.astype(np.int32), inc[:, -1]
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("shape", [(1, 1), (1, 7), (3, 64), (5, 130), (8, 256), (2, 1000)])
+def test_matches_reference(method, shape):
+    rng = np.random.default_rng(hash((method, shape)) % 2**32)
+    mask = rng.random(shape) < 0.5
+    off, cnt = insertion_offsets(jnp.asarray(mask), method=method)
+    ref_off, ref_cnt = _ref_offsets(mask)
+    np.testing.assert_array_equal(np.where(mask, np.asarray(off), 0), np.where(mask, ref_off, 0))
+    np.testing.assert_array_equal(np.asarray(cnt), ref_cnt)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_offsets_unique_and_dense(method):
+    """Each inserter gets a unique index in [0, count) — the paper's invariant."""
+    rng = np.random.default_rng(0)
+    mask = rng.random((4, 97)) < 0.3
+    off, cnt = insertion_offsets(jnp.asarray(mask), method=method)
+    off, cnt = np.asarray(off), np.asarray(cnt)
+    for b in range(mask.shape[0]):
+        got = np.sort(off[b][mask[b]])
+        np.testing.assert_array_equal(got, np.arange(cnt[b]))
+
+
+@given(
+    st.integers(1, 6),
+    st.integers(1, 300),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_methods_agree(nblocks, m, seed):
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.random((nblocks, m)) < rng.random())
+    outs = {meth: insertion_offsets(mask, method=meth) for meth in METHODS}
+    base_off, base_cnt = outs[METHODS[0]]
+    for meth in METHODS[1:]:
+        off, cnt = outs[meth]
+        valid = np.asarray(mask)
+        np.testing.assert_array_equal(
+            np.where(valid, np.asarray(off), 0), np.where(valid, np.asarray(base_off), 0),
+            err_msg=f"{meth} offsets diverge",
+        )
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(base_cnt))
+
+
+def test_rejects_bad_rank_and_method():
+    with pytest.raises(ValueError):
+        insertion_offsets(jnp.ones((3,), bool))
+    with pytest.raises(ValueError):
+        insertion_offsets(jnp.ones((1, 3), bool), method="nope")

@@ -1,0 +1,30 @@
+"""Single LFVector (paper Algs. 1–2) semantics."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LFVector
+
+
+def test_push_back_grow_and_read():
+    v = LFVector.create(b0=2)
+    idx = v.push_back(jnp.asarray([1.0, 2.0, 3.0]))
+    np.testing.assert_array_equal(np.asarray(idx), [0, 1, 2])
+    assert len(v) == 3
+    assert v.nbuckets >= 2  # grew past the first bucket (B0=2)
+    np.testing.assert_allclose(np.asarray(v.to_array()), [1, 2, 3])
+
+
+def test_setitem_getitem():
+    v = LFVector.create(b0=2)
+    v.push_back(jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0]))
+    v[2] = 30.0
+    assert float(v[2]) == 30.0
+    np.testing.assert_allclose(np.asarray(v.to_array()), [1, 2, 30, 4, 5])
+
+
+def test_capacity_bound_matches_paper():
+    v = LFVector.create(b0=4)
+    for wave in range(6):
+        v.push_back(jnp.ones((7,), jnp.float32))
+    n = len(v)
+    assert v.capacity < 2 * n + 4  # §V bound

@@ -1,0 +1,38 @@
+"""Theoretical memory model (paper §V, Fig. 3)."""
+import numpy as np
+import pytest
+
+from repro.core.theory import MemoryModel, memory_curves
+
+
+def test_ggarray_capacity_bound_uniform_load():
+    m = MemoryModel(n0=10_000, nblocks=64, b0=8)
+    for s in [1_000, 10_000, 123_456, 1_000_000]:
+        cap = m.ggarray_capacity(s)
+        assert cap >= s
+        # uniform load: < 2x + per-block slack (B0 per block)
+        assert cap < 2 * s + 2 * m.b0 * m.nblocks
+
+
+def test_static_needs_exponentially_more_with_sigma():
+    m = MemoryModel()
+    caps = [m.static_capacity(s) for s in (0.0, 1.0, 2.0)]
+    assert caps[0] == pytest.approx(m.n0, rel=1e-6)
+    assert caps[1] > 5 * m.n0  # e^{2.33} ≈ 10.2
+    assert caps[2] > 50 * m.n0  # e^{4.65} ≈ 105
+
+
+def test_fig3_curves_shape_and_ordering():
+    curves = memory_curves(np.linspace(0, 2, 5))
+    # GGArray stays within 2x of optimal; static blows up with sigma (Fig. 3)
+    assert np.all(curves["ggarray_over_optimal"] <= 2.05)
+    assert curves["static_over_optimal"][-1] > curves["static_over_optimal"][0]
+    assert curves["static"][-1] > curves["ggarray"][-1]
+
+
+def test_norm_ppf_sane():
+    from repro.core.theory import _norm_ppf
+
+    assert _norm_ppf(0.5) == pytest.approx(0.0, abs=1e-8)
+    assert _norm_ppf(0.99) == pytest.approx(2.326, abs=1e-3)
+    assert _norm_ppf(0.01) == pytest.approx(-2.326, abs=1e-3)

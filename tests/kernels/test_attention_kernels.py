@@ -1,0 +1,68 @@
+"""Flash attention + flash-decode kernels vs exact softmax oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import ops as dec_ops
+from repro.kernels.decode_attention import ref as dec_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("BH,Sq,Skv,D,group", [(2, 128, 128, 64, 1), (4, 256, 256, 32, 2), (2, 64, 128, 128, 1)])
+def test_flash_matches_ref(causal, BH, Sq, Skv, D, group):
+    if causal and Sq != Skv:
+        pytest.skip("causal requires square for this oracle")
+    rng = np.random.default_rng(hash((causal, BH, Sq, Skv, D, group)) % 2**32)
+    q = jnp.asarray(rng.standard_normal((BH, Sq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH // group, Skv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH // group, Skv, D)), jnp.float32)
+    got = fa_ops.flash_attention(q, k, v, group=group, causal=causal, bq=64, bk=64)
+    want = fa_ref.attention(q, k, v, group=group, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((2, 128, 64)), dtype)
+    k = jnp.asarray(rng.standard_normal((2, 128, 64)), dtype)
+    v = jnp.asarray(rng.standard_normal((2, 128, 64)), dtype)
+    got = fa_ops.flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    want = fa_ref.attention(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("B,H,KH,S,D", [(2, 8, 2, 256, 64), (1, 4, 4, 512, 32), (3, 16, 2, 128, 128)])
+def test_decode_matches_ref_partial_lengths(B, H, KH, S, D):
+    rng = np.random.default_rng(hash((B, H, KH, S, D)) % 2**32)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, KH, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, KH, S, D)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, S + 1, (B,)), jnp.int32)
+    got = dec_ops.decode_attention(q, k, v, lengths, bk=64)
+    want = dec_ref.decode_attention(
+        q.reshape(B, KH, H // KH, D), k, v, lengths
+    ).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_decode_ignores_dead_cache_tail():
+    """Garbage past the live length must not leak into the output."""
+    B, H, KH, S, D = 1, 4, 2, 128, 32
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, KH, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, KH, S, D)), jnp.float32)
+    live = 40
+    k_dirty = k.at[:, :, live:].set(1e6)
+    v_dirty = v.at[:, :, live:].set(-1e6)
+    lengths = jnp.asarray([live], jnp.int32)
+    clean = dec_ops.decode_attention(q, k, v, lengths, bk=64)
+    dirty = dec_ops.decode_attention(q, k_dirty, v_dirty, lengths, bk=64)
+    np.testing.assert_allclose(np.asarray(clean), np.asarray(dirty), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,40 @@
+"""Flatten kernels vs the core GGArray flatten (shape/dtype sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ggarray as gg
+from repro.kernels.flatten import ops, ref
+
+
+def _make_gg(nblocks, b0, nbuckets, fill, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    arr = gg.init(nblocks, b0, dtype=dtype, nbuckets=nbuckets)
+    per = rng.integers(0, fill + 1, nblocks)
+    m = int(per.max()) if per.max() else 1
+    elems = jnp.asarray(rng.standard_normal((nblocks, m)), dtype)
+    mask = jnp.asarray(np.arange(m)[None, :] < per[:, None])
+    arr, _ = gg.push_back(arr, elems, mask)
+    return arr
+
+
+@pytest.mark.parametrize("nblocks,b0,nbuckets", [(4, 2, 3), (8, 4, 2), (16, 8, 4), (3, 1, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_compact_blocks_matches_ref(nblocks, b0, nbuckets, dtype):
+    arr = _make_gg(nblocks, b0, nbuckets, fill=b0 * 2, dtype=dtype,
+                   seed=hash((nblocks, b0, nbuckets)) % 2**31)
+    got = ops.compact_blocks(arr.buckets, arr.b0)
+    want = ref.compact_blocks(arr.buckets, arr.b0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("nblocks,b0,nbuckets", [(4, 2, 3), (8, 4, 3)])
+def test_kernel_flatten_matches_core_flatten(nblocks, b0, nbuckets):
+    arr = _make_gg(nblocks, b0, nbuckets, fill=b0 * 3, seed=7)
+    got = ops.flatten(arr.buckets, arr.sizes, arr.b0)
+    want, total = gg.flatten(arr)
+    n = int(total)
+    np.testing.assert_allclose(
+        np.asarray(got)[:n], np.asarray(want)[:n], rtol=1e-5, atol=1e-5
+    )

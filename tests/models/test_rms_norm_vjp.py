@@ -1,0 +1,43 @@
+"""Custom-VJP RMSNorm: gradients match autodiff of the reference, dtypes bf16."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.modules import rms_norm
+
+
+def _ref(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+@pytest.mark.parametrize("shape", [(4, 8), (2, 3, 16), (1, 5, 7, 32)])
+def test_value_and_grads_match_autodiff(shape):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(shape[-1:]) * 0.1 + 1.0, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(rms_norm(x, w)), np.asarray(_ref(x, w)), rtol=1e-6, atol=1e-6
+    )
+
+    def loss_custom(x, w):
+        return jnp.sum(jnp.sin(rms_norm(x, w)))
+
+    def loss_ref(x, w):
+        return jnp.sum(jnp.sin(_ref(x, w)))
+
+    gx, gw = jax.grad(loss_custom, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_boundary_dtypes():
+    x = jnp.ones((2, 8), jnp.bfloat16)
+    w = jnp.ones((8,), jnp.bfloat16)
+    y, vjp = jax.vjp(lambda x, w: rms_norm(x, w), x, w)
+    assert y.dtype == jnp.bfloat16
+    dx, dw = vjp(jnp.ones_like(y))
+    assert dx.dtype == jnp.bfloat16 and dw.dtype == jnp.bfloat16

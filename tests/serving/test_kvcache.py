@@ -1,0 +1,91 @@
+"""KV-cache policies: equivalence across policies + growth semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.serving import kvcache
+
+CFG = reduced("qwen3-32b", cache_b0=4)  # qk_norm GQA family, tiny
+B, KH, DH = 2, CFG.n_kv_heads, CFG.head_dim
+H = CFG.n_heads
+
+
+def _rand_kv(key, n):
+    k1, k2 = jax.random.split(key)
+    return (
+        jax.random.normal(k1, (B, n, KH, DH), jnp.float32),
+        jax.random.normal(k2, (B, n, KH, DH), jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("policy", ["static", "semistatic", "ggarray"])
+def test_append_then_attend_matches_naive(policy):
+    key = jax.random.PRNGKey(0)
+    n = 13
+    ks, vs = _rand_kv(key, n)
+    cache = kvcache.init_cache(CFG, B, 32, policy, dtype=jnp.float32)
+    for t in range(n):
+        cache = kvcache.append(cache, ks[:, t : t + 1], vs[:, t : t + 1], jnp.int32(t))
+    q = jax.random.normal(jax.random.PRNGKey(7), (B, 1, H, DH), jnp.float32)
+    got = kvcache.attend(cache, q, jnp.int32(n), CFG)
+    # naive oracle
+    g = H // KH
+    qf = q[:, 0].reshape(B, KH, g, DH) * DH**-0.5
+    s = jnp.einsum("bkgd,blkd->bkgl", qf, ks[:, :n])
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bkgl,blkd->bkgd", p, vs[:, :n]).reshape(B, 1, H, DH)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_policies_agree_with_each_other():
+    key = jax.random.PRNGKey(1)
+    n = 9
+    ks, vs = _rand_kv(key, n)
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, 1, H, DH), jnp.float32)
+    outs = {}
+    for policy in ("static", "semistatic", "ggarray"):
+        cache = kvcache.init_cache(CFG, B, 16, policy, dtype=jnp.float32)
+        cache = kvcache.fill_from_prefill(cache, ks, vs)
+        outs[policy] = np.asarray(kvcache.attend(cache, q, jnp.int32(n), CFG))
+    np.testing.assert_allclose(outs["static"], outs["ggarray"], rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(outs["static"], outs["semistatic"], rtol=2e-5, atol=2e-5)
+
+
+def test_per_sequence_lengths_mask_correctly():
+    key = jax.random.PRNGKey(2)
+    ks, vs = _rand_kv(key, 8)
+    cache = kvcache.init_cache(CFG, B, 16, "ggarray", dtype=jnp.float32)
+    cache = kvcache.fill_from_prefill(cache, ks, vs)
+    q = jax.random.normal(jax.random.PRNGKey(5), (B, 1, H, DH), jnp.float32)
+    lengths = jnp.asarray([3, 8], jnp.int32)
+    got = kvcache.attend(cache, q, lengths, CFG)
+    # sequence 0 must equal attending over only its first 3 entries
+    cache3 = kvcache.init_cache(CFG, B, 16, "ggarray", dtype=jnp.float32)
+    cache3 = kvcache.fill_from_prefill(cache3, ks[:, :3], vs[:, :3])
+    want0 = kvcache.attend(cache3, q, jnp.int32(3), CFG)
+    np.testing.assert_allclose(np.asarray(got)[0], np.asarray(want0)[0], rtol=2e-5, atol=2e-5)
+
+
+def test_ggarray_growth_copy_free_and_capacity_bound():
+    cache = kvcache.init_cache(CFG, B, 8, "ggarray", dtype=jnp.float32)
+    before = {k: v for k, v in cache.items()}
+    grown = kvcache.grow_ggarray(cache, CFG)
+    for k in before:
+        assert grown[k] is before[k], "existing buckets must not be copied"
+    # §V bound: capacity < 2n + b0 at every fill level
+    from repro.core import indexing
+
+    for n in (5, 9, 30, 101):
+        lv = kvcache.needed_levels(CFG.cache_b0, n)
+        cap = indexing.capacity(CFG.cache_b0, lv)
+        assert n <= cap < 2 * n + CFG.cache_b0
+
+
+def test_append_past_static_capacity_truncates():
+    cache = kvcache.init_cache(CFG, B, 4, "static", dtype=jnp.float32)
+    k = jnp.ones((B, 1, KH, DH))
+    before = np.asarray(cache["k"]).copy()
+    cache = kvcache.append(cache, k, k, jnp.int32(4))  # out of range
+    np.testing.assert_array_equal(np.asarray(cache["k"]), before)

@@ -1,0 +1,38 @@
+"""Property test: all cache policies decode identically on random traces."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import reduced
+from repro.serving import kvcache
+
+CFG = reduced("qwen3-32b", cache_b0=4)
+B, KH, DH, H = 2, CFG.n_kv_heads, CFG.head_dim, CFG.n_heads
+
+
+@given(
+    st.integers(1, 30),  # trace length
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_policies_equivalent_over_random_traces(n, seed):
+    rng = np.random.default_rng(seed)
+    ks = jnp.asarray(rng.standard_normal((B, n, KH, DH)), jnp.float32)
+    vs = jnp.asarray(rng.standard_normal((B, n, KH, DH)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, DH)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, n + 1, B), jnp.int32)
+    outs = {}
+    for policy in ("static", "semistatic", "ggarray"):
+        cache = kvcache.init_cache(CFG, B, max(n, 8), policy, dtype=jnp.float32)
+        # interleave fill styles: bulk prefill then per-step appends
+        split = int(rng.integers(0, n + 1))
+        cache = kvcache.fill_from_prefill(cache, ks[:, :split], vs[:, :split])
+        for t in range(split, n):
+            cache = kvcache.append(cache, ks[:, t : t + 1], vs[:, t : t + 1], jnp.int32(t))
+        outs[policy] = np.asarray(kvcache.attend(cache, q, lengths, CFG))
+    np.testing.assert_allclose(outs["static"], outs["ggarray"], rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(outs["static"], outs["semistatic"], rtol=3e-5, atol=3e-5)

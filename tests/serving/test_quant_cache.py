@@ -1,0 +1,70 @@
+"""int8 KV cache (§Perf cell A): accuracy + memory accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.serving import kvcache
+
+CFG = reduced("qwen3-32b", cache_b0=4)
+CFGQ = dataclasses.replace(CFG, cache_quant=True)
+B, KH, DH, H = 2, CFG.n_kv_heads, CFG.head_dim, CFG.n_heads
+
+
+def _fill(cfg, ks, vs, n):
+    c = kvcache.init_cache(cfg, B, 32, "ggarray",
+                           dtype=None if cfg.cache_quant else jnp.float32)
+    return kvcache.fill_from_prefill(c, ks, vs)
+
+
+@pytest.mark.parametrize("policy", ["ggarray", "static"])
+def test_quant_attend_close_to_exact(policy):
+    rng = np.random.default_rng(0)
+    n = 13
+    ks = jnp.asarray(rng.standard_normal((B, n, KH, DH)), jnp.float32)
+    vs = jnp.asarray(rng.standard_normal((B, n, KH, DH)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, DH)), jnp.float32)
+    exact = kvcache.init_cache(CFG, B, 32, policy, dtype=jnp.float32)
+    exact = kvcache.fill_from_prefill(exact, ks, vs)
+    quant = kvcache.init_cache(CFGQ, B, 32, policy)
+    quant = kvcache.fill_from_prefill(quant, ks, vs)
+    out_e = kvcache.attend(exact, q, jnp.int32(n), CFG)
+    out_q = kvcache.attend(quant, q, jnp.int32(n), CFGQ)
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_q), atol=0.05)
+
+
+def test_quant_append_path_matches_fill_path():
+    rng = np.random.default_rng(1)
+    n = 9
+    ks = jnp.asarray(rng.standard_normal((B, n, KH, DH)), jnp.float32)
+    vs = jnp.asarray(rng.standard_normal((B, n, KH, DH)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, DH)), jnp.float32)
+    filled = kvcache.init_cache(CFGQ, B, 32, "ggarray")
+    filled = kvcache.fill_from_prefill(filled, ks, vs)
+    stepped = kvcache.init_cache(CFGQ, B, 32, "ggarray")
+    for t in range(n):
+        stepped = kvcache.append(stepped, ks[:, t : t + 1], vs[:, t : t + 1], jnp.int32(t))
+    a = kvcache.attend(filled, q, jnp.int32(n), CFGQ)
+    b = kvcache.attend(stepped, q, jnp.int32(n), CFGQ)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_quant_halves_cache_bytes():
+    exact = kvcache.init_cache(reduced("qwen3-32b", cache_b0=64, dtype="bfloat16"), B, 256, "ggarray")
+    quant = kvcache.init_cache(
+        dataclasses.replace(reduced("qwen3-32b", cache_b0=64), cache_quant=True), B, 256, "ggarray"
+    )
+    ratio = kvcache.cache_bytes(quant) / kvcache.cache_bytes(exact)
+    assert ratio < 0.6  # int8 + small scale overhead vs bf16
+
+
+def test_quant_growth_adds_scale_levels():
+    c = kvcache.init_cache(CFGQ, B, 8, "ggarray")
+    g = kvcache.grow_ggarray(c, CFGQ)
+    lv = kvcache._levels(g)
+    assert f"ks{lv-1}" in g and f"vs{lv-1}" in g
+    for key in c:
+        assert g[key] is c[key]  # copy-free

@@ -1,0 +1,81 @@
+"""Serving steps + engine: prefill/decode consistency and growth dynamics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.models import transformer
+from repro.serving import steps
+from repro.serving.engine import Engine
+
+ARCHS_DECODE = ["qwen3-32b", "qwen2.5-3b", "jamba-v0.1-52b", "mamba2-2.7b", "seamless-m4t-large-v2"]
+
+
+def _setup(arch, **over):
+    cfg = reduced(arch, **over)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.mark.parametrize("arch", ARCHS_DECODE)
+def test_decode_matches_forward(arch):
+    """Prefill(n) + decode(1) logits == forward(n+1) last-position logits."""
+    cfg, params = _setup(arch)
+    B, S = 2, 16
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size, jnp.int32)
+    memory = None
+    kwargs = {}
+    if cfg.n_enc_layers:
+        from repro.models import encdec
+        frames = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model)) * 0.02
+        memory = encdec.encode(params["encoder"], frames.astype(jnp.float32), cfg)
+        kwargs["memory"] = memory
+
+    # ground truth: full forward over S+1 tokens
+    logits_full, _ = transformer.forward(params, toks, cfg, memory=memory)
+    want = np.asarray(logits_full[:, -1])
+
+    # serve path: prefill S tokens, decode token S
+    _, caches = steps.prefill(params, toks[:, :S], cfg, capacity_hint=S + 4, **kwargs)
+    got, _ = steps.decode_step(params, toks[:, S], caches, jnp.int32(S), cfg)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("policy", ["static", "semistatic", "ggarray"])
+def test_decode_policies_identical_logits(policy):
+    cfg, params = _setup("qwen2.5-3b", cache_policy=policy)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S + 1), 0, cfg.vocab_size, jnp.int32)
+    _, caches = steps.prefill(params, toks[:, :S], cfg, capacity_hint=S + 2, policy=policy)
+    got, _ = steps.decode_step(params, toks[:, S], caches, jnp.int32(S), cfg)
+    logits_full, _ = transformer.forward(params, toks, cfg)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(logits_full[:, -1]), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_engine_ggarray_grows_without_copy_and_matches_semistatic():
+    cfg, params = _setup("qwen2.5-3b", cache_b0=4)
+    prompts = [[1, 2, 3], [4, 5]]
+    outs = {}
+    stats = {}
+    for policy in ("ggarray", "semistatic"):
+        eng = Engine(params, cfg, policy=policy, max_len=64)
+        outs[policy] = eng.generate(prompts, max_new_tokens=14, temperature=0.0)
+        stats[policy] = eng.stats
+    assert outs["ggarray"] == outs["semistatic"], "policies must decode identically"
+    assert stats["ggarray"].grow_events >= 1
+    assert stats["ggarray"].copied_bytes == 0, "GGArray growth must be copy-free"
+    assert stats["semistatic"].copied_bytes > 0, "semistatic growth must copy"
+    # O(log n) structure recompiles for ggarray
+    assert stats["ggarray"].compiles <= stats["ggarray"].grow_events + 1
+
+
+def test_engine_static_serves_within_preallocated_max():
+    cfg, params = _setup("qwen2.5-3b")
+    eng = Engine(params, cfg, policy="static", max_len=32)
+    out = eng.generate([[1, 2, 3]], max_new_tokens=6)
+    assert len(out[0]) == 3 + 6
+    assert eng.stats.grow_events == 0

@@ -1,0 +1,45 @@
+"""End-to-end system test: train → checkpoint → restore → serve.
+
+One pass through every major subsystem on a tiny model: the fault-tolerant
+training loop produces a checkpoint; a fresh process-state restores it; the
+serving engine decodes from the trained weights with the GGArray cache and
+agrees with the static-cache engine token-for-token.
+"""
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import ckpt
+from repro.serving.engine import Engine
+from repro.train import loop as loop_mod
+from repro.train import step as step_mod
+
+
+def test_train_checkpoint_serve_roundtrip(tmp_path):
+    cfg = configs.reduced("qwen2.5-3b", cache_b0=8)
+    d = str(tmp_path / "ckpt")
+
+    # --- train a few steps with checkpointing ---
+    out = loop_mod.run(
+        cfg,
+        loop_mod.LoopConfig(steps=6, batch=2, seq=16, ckpt_dir=d, ckpt_every=3, log_every=100),
+    )
+    # fresh batch each step (deterministic stream) → no monotonicity claim;
+    # convergence itself is asserted in tests/models on repeated batches
+    assert all(np.isfinite(out["losses"]))
+    step = ckpt.latest_step(d)
+    assert step == 6
+
+    # --- restore into a fresh state ---
+    fresh = step_mod.init_train_state(jax.random.PRNGKey(0), cfg)
+    restored, meta = ckpt.restore(d, step, fresh)
+    assert meta["next_step"] == 6
+
+    # --- serve from the trained params; policies agree ---
+    prompts = [[1, 2, 3], [7, 8]]
+    outs = {}
+    for policy in ("ggarray", "static"):
+        eng = Engine(restored.params, cfg, policy=policy, max_len=64)
+        outs[policy] = eng.generate(prompts, max_new_tokens=10)
+    assert outs["ggarray"] == outs["static"]
+    assert all(len(o) == len(p) + 10 for o, p in zip(outs["ggarray"], prompts))
