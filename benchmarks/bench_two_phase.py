@@ -1,11 +1,19 @@
-"""Paper Fig. 6 — two-phase application: GGArray speedup over memMap.
+"""Paper Fig. 6 + the two-phase runtime: grow, freeze, and frozen-read costs.
 
-Grow phase: waves of insertions (size doubles per wave).  Work phase: the
-paper's kernel (+1, 30×) applied W ∈ {1, 10, 100, 1000} times.  GGArray path
-inserts into buckets then **flattens once** and works on the flat array; the
-memMap path works directly on its contiguous buffer but pays host-resize on
-every growth.  Claim under test: the dynamic structure's overhead is
-amortized as W grows (speedup → ~1 and the crossover is visible).
+Four measurement groups:
+
+``fig6.two_phase.W*``      the paper's original claim — GGArray grow+flatten
+                           then W static work kernels, vs the memMap baseline.
+``grow.*``                 growth-phase push_back throughput (elems/s) for the
+                           pipeline vs the pre-allocated static and doubling
+                           semi-static baselines in ``core/baselines.py``.
+``freeze.*``               freeze (flatten) latency of the linear-time
+                           segmented-gather kernel vs the legacy O(n²)
+                           dispatch-matmul kernel vs the pure-jnp core
+                           scatter, per array size.  The acceptance claim:
+                           segmented < dispatch at the largest benched size.
+``frozen_read.*``          static-phase read bandwidth: contiguous frozen
+                           reads vs the GGArray bucket-walk ``read_global``.
 """
 from __future__ import annotations
 
@@ -14,12 +22,15 @@ import jax.numpy as jnp
 
 from repro.core import baselines as bl
 from repro.core import ggarray as gg
+from repro.kernels.flatten import ops as flatten_ops
+from repro.runtime import TwoPhasePipeline
 
 from benchmarks.common import emit, timeit
 
 START = 1 << 12
 WAVES = 4
 NBLOCKS = 32
+FREEZE_SIZES = (1 << 10, 1 << 12, 1 << 14)  # elements, largest decides the claim
 
 
 def _work_once(x):
@@ -28,18 +39,21 @@ def _work_once(x):
     return x
 
 
+# --------------------------------------------------------------------------
+# Fig. 6 — original two-phase application comparison.
+# --------------------------------------------------------------------------
+
 def _ggarray_run(W: int) -> None:
     per0 = START // NBLOCKS
-    arr = gg.init(NBLOCKS, b0=max(per0 // 2, 1))
+    pipe = TwoPhasePipeline(NBLOCKS, b0=max(per0 // 2, 1))
     size = START
     for wave in range(WAVES):
         per = size // NBLOCKS
-        arr = gg.ensure_capacity(arr, per)
-        arr, _ = gg.push_back(arr, jnp.ones((NBLOCKS, per), jnp.float32))
+        pipe.append(jnp.ones((NBLOCKS, per), jnp.float32))
         size *= 2
-    flat, n = gg.flatten(arr)
+    frozen = pipe.freeze()
     work = jax.jit(lambda x: jax.lax.fori_loop(0, W, lambda _, y: _work_once(y), x))
-    jax.block_until_ready(work(flat))
+    jax.block_until_ready(work(frozen.data))
 
 
 def _memmap_run(W: int) -> None:
@@ -52,11 +66,106 @@ def _memmap_run(W: int) -> None:
     jax.block_until_ready(work(semi.arr.data))
 
 
-def main() -> None:
+def bench_fig6() -> None:
     for W in (1, 10, 100, 1000):
         t_gg = timeit(lambda: _ggarray_run(W), repeats=3, warmup=1)
         t_mm = timeit(lambda: _memmap_run(W), repeats=3, warmup=1)
         emit(f"fig6.two_phase.W{W}", t_gg, f"speedup_vs_memMap={t_mm / t_gg:.3f}")
+
+
+# --------------------------------------------------------------------------
+# Growth-phase throughput.
+# --------------------------------------------------------------------------
+
+def bench_grow() -> None:
+    n = 1 << 14
+    per = n // NBLOCKS
+    wave = jnp.ones((NBLOCKS, per), jnp.float32)
+    flat_wave = jnp.ones((n,), jnp.float32)
+
+    def grow_pipeline():
+        pipe = TwoPhasePipeline(NBLOCKS, b0=max(per // 2, 1))
+        for _ in range(4):
+            pipe.append(wave)
+        return pipe.array.buckets
+
+    def grow_static():
+        arr = bl.static_init(8 * n)  # worst-case pre-allocation
+        for _ in range(4):
+            arr, _ = bl.static_push_back(arr, flat_wave)
+        return arr.data
+
+    def grow_semistatic():
+        semi = bl.SemiStaticArray.create(n)
+        for _ in range(4):
+            semi.push_back(flat_wave)  # doubles + copies past capacity
+        return semi.arr.data
+
+    total = 4 * n
+    for name, fn in (
+        ("pipeline", grow_pipeline),
+        ("static", grow_static),
+        ("semistatic", grow_semistatic),
+    ):
+        us = timeit(fn, repeats=3, warmup=1)
+        emit(f"grow.{name}", us, f"melems_per_s={total / us:.2f}")
+
+
+# --------------------------------------------------------------------------
+# Freeze latency: segmented gather vs dispatch matmul vs core scatter.
+# --------------------------------------------------------------------------
+
+def _filled(n: int) -> gg.GGArray:
+    per = n // NBLOCKS
+    arr = gg.init(NBLOCKS, b0=max(per // 2, 1))
+    arr = gg.ensure_capacity(arr, per)
+    arr, _ = gg.push_back(arr, jnp.ones((NBLOCKS, per), jnp.float32))
+    return arr
+
+def bench_freeze() -> None:
+    for n in FREEZE_SIZES:
+        arr = _filled(n)
+        t_seg = timeit(
+            lambda: flatten_ops.flatten_segmented(arr.buckets, arr.sizes, arr.b0),
+            repeats=3, warmup=1,
+        )
+        t_disp = timeit(
+            lambda: flatten_ops.flatten_dispatch(arr.buckets, arr.sizes, arr.b0),
+            repeats=3, warmup=1,
+        )
+        t_core = timeit(lambda: gg.flatten(arr), repeats=3, warmup=1)
+        emit(f"freeze.segmented.n{n}", t_seg,
+             f"speedup_vs_dispatch={t_disp / t_seg:.2f}")
+        emit(f"freeze.dispatch.n{n}", t_disp, "")
+        emit(f"freeze.core.n{n}", t_core, "")
+
+
+# --------------------------------------------------------------------------
+# Frozen-read bandwidth: contiguous gather vs the bucket walk.
+# --------------------------------------------------------------------------
+
+def bench_frozen_read() -> None:
+    n = 1 << 14
+    pipe = TwoPhasePipeline.from_ggarray(_filled(n))
+    frozen = pipe.freeze()
+    arr = pipe.array
+    idx = jnp.arange(n, dtype=jnp.int32)
+    read_flat = jax.jit(lambda fz, i: fz.data[i])
+    read_walk = jax.jit(gg.read_global)
+    t_flat = timeit(lambda: read_flat(frozen, idx), repeats=5, warmup=2)
+    t_walk = timeit(lambda: read_walk(arr, idx), repeats=5, warmup=2)
+    bytes_moved = n * 4
+    emit("frozen_read.flat", t_flat,
+         f"gb_per_s={bytes_moved / (t_flat * 1e-6) / 1e9:.3f}")
+    emit("frozen_read.bucket_walk", t_walk,
+         f"slowdown_vs_flat={t_walk / t_flat:.2f}")
+
+
+def main() -> None:
+    bench_fig6()
+    bench_grow()
+    bench_freeze()
+    bench_frozen_read()
 
 
 if __name__ == "__main__":

@@ -1,11 +1,19 @@
 """Quickstart: the GGArray public API in five minutes.
 
+Covers the paper's core objects bottom-up — LFVector (Algs. 1–2), GGArray
+(block-parallel push_back, rw_g indexing), the three insertion algorithms —
+then the intended way to consume them: ``runtime.TwoPhasePipeline``, which
+owns the grow → freeze (linear-time segmented flatten) → static-read
+lifecycle.  See README.md for the paper-section → module map and DESIGN.md
+for the allocation model.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
 from repro import core
+from repro.runtime import TwoPhasePipeline
 
 
 def main() -> None:
@@ -42,6 +50,14 @@ def main() -> None:
     n = int(total)
     print(f"memory: size={n} allocated={core.memory_elems(arr)} "
           f"(bound 2n+B0·blocks={2 * n + 4 * nblocks})")
+
+    # --- the two-phase runtime: grow → freeze → static reads (§VI.D) ------
+    pipe = TwoPhasePipeline(nblocks=4, b0=4)
+    pipe.append(jnp.arange(12, dtype=jnp.float32).reshape(4, 3))
+    frozen = pipe.freeze()  # linear-time segmented flatten kernel
+    print(f"two-phase: froze {int(frozen.size)} elements, "
+          f"contiguous read: {frozen.read(jnp.arange(4))}")
+    pipe.thaw()  # copy-free return to the grow phase
 
 
 if __name__ == "__main__":

@@ -1,9 +1,17 @@
-"""The paper's case study (§VI.D): a two-phase application.
+"""The paper's case study (§VI.D) on the phase-aware runtime.
 
-Phase 1 (grow): waves of insertions with unknown final size — GGArray grows
-copy-free; the semistatic baseline reallocates + copies on every doubling.
-Phase 2 (work): flatten once, then run the static work kernel (+1, 30×) W
-times on the contiguous array.
+``TwoPhasePipeline`` makes the two-phase pattern an explicit state machine:
+
+Phase 1 (GROW)   — waves of insertions with unknown final size; the pipeline's
+                   GGArray grows copy-free (a doubling baseline reallocates +
+                   copies every element on each growth).
+freeze()         — the one-shot handoff: the linear-time segmented-gather
+                   Pallas kernel flattens the bucket chain into a contiguous,
+                   globally-ordered FrozenArray (the legacy one-hot dispatch
+                   matmul did the same in O(n²) work).
+Phase 2 (FROZEN) — the static pipeline: W work kernels run on the contiguous
+                   buffer at flat-array speed via ``map_frozen``.
+thaw()           — optional return to GROW for the next ingest cycle.
 
     PYTHONPATH=src python examples/two_phase.py
 """
@@ -12,7 +20,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import core
+from repro.runtime import TwoPhasePipeline
 
 
 def work_kernel(x, repeats=30):
@@ -25,30 +33,43 @@ def main() -> None:
     nblocks, waves, start = 8, 5, 1 << 10
     W = 100  # work-phase iterations
 
-    # ---- phase 1: grow with GGArray ----
+    # ---- phase 1: grow ---------------------------------------------------
     t0 = time.perf_counter()
-    arr = core.init(nblocks, b0=start // nblocks)
+    pipe = TwoPhasePipeline(nblocks, b0=start // nblocks)
     size = start
     for wave in range(waves):
         per_block = size // nblocks
-        arr = core.ensure_capacity(arr, per_block)
-        elems = jnp.ones((nblocks, per_block), jnp.float32)
-        arr, _ = core.push_back(arr, elems)
+        pipe.append(jnp.ones((nblocks, per_block), jnp.float32))
         size *= 2
-    flat, total = core.flatten(arr)
-    jax.block_until_ready(flat)
     t_grow = time.perf_counter() - t0
-    print(f"grow phase: {int(total)} elements, capacity {core.memory_elems(arr)} "
-          f"(≤2x: {core.memory_elems(arr) <= 2 * int(total) + arr.b0 * nblocks}), "
-          f"{t_grow * 1e3:.1f} ms")
 
-    # ---- phase 2: static work on the flattened array ----
+    # ---- the handoff: freeze via the segmented flatten kernel ------------
+    frozen = pipe.freeze()
+    total = int(frozen.size)
+    print(f"grow phase: {total} elements in {pipe.stats.appends} waves, "
+          f"{pipe.stats.grow_events} growth events (copy-free), "
+          f"capacity {pipe.memory_elems()} "
+          f"(≤2x: {pipe.memory_elems() <= 2 * total + pipe.array.b0 * nblocks}), "
+          f"{t_grow * 1e3:.1f} ms")
+    print(f"freeze: {pipe.stats.last_freeze_s * 1e3:.1f} ms "
+          f"(segmented gather, O(n); first freeze includes one-time compile — "
+          f"see bench_two_phase.py for warm latency)")
+
+    # ---- phase 2: static work on the frozen array ------------------------
     t0 = time.perf_counter()
     fn = jax.jit(lambda x: jax.lax.fori_loop(0, W, lambda _, y: work_kernel(y), x))
-    out = jax.block_until_ready(fn(flat))
+    pipe.map_frozen(fn)
+    jax.block_until_ready(pipe.frozen.data)
     t_work = time.perf_counter() - t0
-    print(f"work phase: {W} kernels on flat array, {t_work * 1e3:.1f} ms")
-    print(f"grow overhead amortized: {t_grow / (t_grow + t_work) * 100:.1f}% of total")
+    print(f"work phase: {W} kernels on frozen array, {t_work * 1e3:.1f} ms")
+    print(f"grow+freeze overhead amortized: "
+          f"{(t_grow + pipe.stats.last_freeze_s) / (t_grow + pipe.stats.last_freeze_s + t_work) * 100:.1f}% of total")
+
+    # ---- thaw: the cycle can repeat --------------------------------------
+    pipe.thaw()
+    pipe.append(jnp.ones((nblocks, 16), jnp.float32))
+    print(f"thawed and regrew: {pipe.total_size()} elements, "
+          f"phase={pipe.phase.value}")
 
 
 if __name__ == "__main__":

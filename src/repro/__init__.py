@@ -1,4 +1,7 @@
-"""repro — GGArray (CS.DC 2022) as a TPU-native substrate for a multi-pod
-JAX LM framework. See README.md / DESIGN.md for the map."""
+"""repro — GGArray (cs.DC 2022) as a TPU-native substrate for a multi-pod
+JAX LM framework, organized around the paper's two-phase pattern:
+``runtime.TwoPhasePipeline`` grows a GGArray copy-free, freezes it through
+the linear-time segmented flatten kernel, and serves the frozen contiguous
+view to the static phase.  See README.md / DESIGN.md for the map."""
 
-__version__ = "0.1.0"
+__version__ = "0.2.0"

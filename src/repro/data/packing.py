@@ -1,10 +1,12 @@
-"""Token packing with GGArray push_back semantics (DESIGN.md §3 touchpoint 3).
+"""Token packing on the two-phase runtime (DESIGN.md §3 touchpoint 3).
 
-Variable-length documents are pushed into per-block sequence buffers; when a
-training batch is due, ``flatten`` emits the packed token stream — the
-paper's two-phase pattern (grow → flatten → static work) as a data pipeline.
-Block-local insertion means parallel workers pack without coordination; the
-prefix-sum table gives global sample offsets for sequence-boundary masks.
+Variable-length documents are pushed into per-block sequence buffers owned by
+a :class:`repro.runtime.TwoPhasePipeline`; when a training batch is due,
+``pack`` freezes the pipeline — the linear-time segmented flatten emits the
+packed token stream — then thaws it so ingestion can continue.  This is the
+paper's two-phase pattern (grow → flatten → static work) as a data pipeline:
+block-local insertion means parallel workers pack without coordination, and
+the freeze-time prefix table gives global sample offsets for boundary masks.
 """
 from __future__ import annotations
 
@@ -15,37 +17,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ggarray as gg
+from repro.runtime import TwoPhasePipeline
 
 __all__ = ["Packer"]
 
 
 @dataclasses.dataclass
 class Packer:
-    """Greedy block-local document packer over a GGArray token buffer."""
+    """Greedy block-local document packer over a two-phase token buffer."""
 
     nblocks: int = 8
     b0: int = 256
+    flatten_impl: str = "segmented"
 
     def __post_init__(self):
-        self._arr = gg.init(self.nblocks, self.b0, dtype=jnp.int32)
+        self._pipe = TwoPhasePipeline(
+            self.nblocks, self.b0, dtype=jnp.int32, flatten_impl=self.flatten_impl
+        )
         self._bounds = gg.init(self.nblocks, max(self.b0 // 16, 1), dtype=jnp.int32)
-        self._next_block = 0
 
     @property
     def total_tokens(self) -> int:
-        return int(jax.device_get(gg.total_size(self._arr)))
+        return self._pipe.total_size()
+
+    @property
+    def sizes(self) -> jax.Array:
+        """Per-block token counts (the greedy-balance load vector)."""
+        return self._pipe.sizes
+
+    @property
+    def stats(self):
+        """Freeze/grow lifecycle counters of the underlying pipeline."""
+        return self._pipe.stats
 
     def add_document(self, tokens: list[int] | np.ndarray) -> None:
         """Push one document into the least-loaded block (greedy balance)."""
         toks = np.asarray(tokens, np.int32)
-        sizes = np.asarray(jax.device_get(self._arr.sizes))
+        sizes = np.asarray(jax.device_get(self._pipe.sizes))
         block = int(np.argmin(sizes))
-        self._arr = gg.ensure_capacity(self._arr, len(toks))
         elems = np.zeros((self.nblocks, len(toks)), np.int32)
         mask = np.zeros((self.nblocks, len(toks)), bool)
         elems[block] = toks
         mask[block] = True
-        self._arr, _ = gg.push_back(self._arr, jnp.asarray(elems), jnp.asarray(mask))
+        self._pipe.append(jnp.asarray(elems), jnp.asarray(mask))
         # record the document end position (per-block boundary list)
         self._bounds = gg.ensure_capacity(self._bounds, 1)
         bval = np.zeros((self.nblocks, 1), np.int32)
@@ -55,13 +69,14 @@ class Packer:
         self._bounds, _ = gg.push_back(self._bounds, jnp.asarray(bval), jnp.asarray(bmask))
 
     def pack(self, batch: int, seq: int, pad_id: int = 0) -> dict:
-        """Flatten → (batch, seq) token matrix + loss mask (phase transition)."""
-        flat, total = gg.flatten(self._arr)
-        n = int(jax.device_get(total))
+        """Freeze → (batch, seq) token matrix + loss mask → thaw (resume grow)."""
+        frozen = self._pipe.freeze()
+        n = int(jax.device_get(frozen.size))
         need = batch * seq
         stream = np.full((need,), pad_id, np.int32)
         take = min(n, need)
-        stream[:take] = np.asarray(jax.device_get(flat))[:take]
+        stream[:take] = np.asarray(jax.device_get(frozen.data))[:take]
+        self._pipe.thaw()  # zero-copy: the bucket chain is intact
         tokens = stream.reshape(batch, seq)
         mask = (np.arange(need) < take).reshape(batch, seq)
         return {"tokens": jnp.asarray(tokens), "loss_mask": jnp.asarray(mask)}

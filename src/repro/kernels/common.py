@@ -3,9 +3,13 @@
 All kernels target TPU (``pl.pallas_call`` + explicit ``BlockSpec`` VMEM
 tiling).  On non-TPU backends (this container is CPU) they execute in
 ``interpret=True`` mode, which runs the kernel body as traced JAX ops — the
-correctness oracle path used by the test suite.
+correctness oracle path used by the test suite.  ``REPRO_FORCE_INTERPRET=1``
+forces interpret mode everywhere (CI sets it so kernel regressions surface
+on CPU runners regardless of backend detection).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +20,9 @@ MXU_LANE = 128  # MXU systolic dimension / VREG lane count
 
 
 def should_interpret(interpret: bool | None) -> bool:
-    """Resolve the interpret flag: explicit wins, else interpret off-TPU."""
+    """Resolve the interpret flag: env force > explicit > interpret off-TPU."""
+    if os.environ.get("REPRO_FORCE_INTERPRET") == "1":
+        return True
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"

@@ -1,12 +1,34 @@
-"""Bucket-compaction kernel — GGArray flatten's TPU hot phase (paper §VI.D).
+"""Bucket-compaction + segmented-gather kernels — GGArray flatten (§VI.D).
 
 The two-phase pattern flattens the bucket chain into a contiguous array once
 per growth phase.  Per-block compaction is *fully static*: bucket level ``b``
 always lands at column ``B0·(2^b − 1)`` of the per-block row (the LFVector
-address map), so the kernel is a pure VMEM copy with static offsets — one
-grid step per block tile, all levels copied inside the body.  The dynamic
-part (block-major global ordering by the runtime prefix table) reuses the
-one-hot dispatch matmul kernel (kernels/dispatch_mxu), as push_back does.
+address map), so that kernel is a pure VMEM copy with static offsets — one
+grid step per block tile, all levels copied inside the body.
+
+The dynamic part — block-major global ordering by the runtime prefix table —
+has two implementations:
+
+``segmented_gather_pallas`` (the default, O(n))
+    One grid step per output tile.  Each output index ``i`` belongs to the
+    block whose ``block_starts`` interval contains it; with ``nblocks``
+    prefix sums resident on-chip, locating the owner is a broadcasted
+    compare-and-count (a vectorized ``searchsorted``), and the element itself
+    is a single gather from the compacted rows.  Work is
+    O(capacity · log-ish nblocks) — linear in the array, unlike the one-hot
+    dispatch matmul which multiplies a (T × S) one-hot against the data and
+    is quadratic in the element count.  This is what lets the freeze step of
+    the two-phase runtime run at copy speed (DESIGN.md §2).
+
+``dispatch_mxu`` (legacy, O(n²))
+    Reuses the one-hot scatter matmul kernel, kept as a comparison point for
+    ``benchmarks/bench_two_phase.py`` and as the MXU-friendly fallback.
+
+VMEM note: the gather kernel keeps the whole compacted ``(nblocks, cap)``
+plane plus the tiny ``(nblocks,)`` prefix tables resident per grid step.  A
+production variant would leave ``compact`` in HBM and DMA only the block rows
+an output tile spans (scalar-prefetched ``block_starts`` make those bounds
+computable before the body runs); the grid/index math is unchanged.
 """
 from __future__ import annotations
 
@@ -18,9 +40,10 @@ from jax.experimental import pallas as pl
 
 from repro.core import indexing
 
-__all__ = ["compact_blocks_pallas"]
+__all__ = ["compact_blocks_pallas", "segmented_gather_pallas"]
 
 DEFAULT_BLOCK_TILE = 8
+DEFAULT_SEG_TILE = 256
 
 
 def _compact_kernel(*refs, starts):
@@ -57,3 +80,65 @@ def compact_blocks_pallas(
         out_shape=jax.ShapeDtypeStruct((nblocks, cap), buckets[0].dtype),
         interpret=interpret,
     )(*buckets)
+
+
+def _segmented_gather_kernel(starts_ref, ends_ref, compact_ref, o_ref, *, seg_tile):
+    """One output tile of the block-major global order.
+
+    ``starts``/``ends`` are the runtime prefix-sum table (exclusive /
+    inclusive-end per block); ``compact`` is the row-compacted plane.  The
+    owning block of output index ``i`` is ``#{b : starts[b] <= i} - 1`` —
+    valid because starts is non-decreasing with starts[0] == 0.
+    """
+    t = pl.program_id(0)
+    nblocks, cap = compact_ref.shape
+    idx = t * seg_tile + jax.lax.broadcasted_iota(jnp.int32, (seg_tile, 1), 0)[:, 0]
+    starts = starts_ref[0, :]  # (nblocks,)
+    ends = ends_ref[0, :]
+    # Vectorized searchsorted over the on-chip prefix table: (seg_tile, nblocks)
+    # compares, then a lane reduction — O(nblocks) per element, no matmul.
+    owned = idx[:, None] >= starts[None, :]
+    blk = jnp.sum(owned.astype(jnp.int32), axis=1) - 1
+    blk = jnp.maximum(blk, 0)
+    pos = idx - jnp.take(starts, blk)
+    live = idx < jnp.take(ends, blk)
+    # Single gather from the compacted plane (linearized to one axis).
+    lin = blk * cap + jnp.minimum(pos, cap - 1)
+    vals = jnp.take(compact_ref[...].reshape(-1), lin)
+    o_ref[0, :] = jnp.where(live, vals, jnp.zeros_like(vals))
+
+
+def segmented_gather_pallas(
+    compact: jax.Array,  # (nblocks, cap) row-compacted in-block positions
+    starts: jax.Array,  # (nblocks,) int32 exclusive prefix sums of sizes
+    ends: jax.Array,  # (nblocks,) int32 starts + sizes
+    *,
+    seg_tile: int = DEFAULT_SEG_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """→ (nblocks·cap,) live elements in block-major global order, rest 0.
+
+    The grid covers ``ceil(total / seg_tile)`` tiles; overhang indices in the
+    last tile clamp to the final slot and fail the liveness test, so no input
+    padding is needed for non-tile-aligned capacities.
+    """
+    nblocks, cap = compact.shape
+    total = nblocks * cap
+    total_pad = -(-total // seg_tile) * seg_tile
+    out = pl.pallas_call(
+        functools.partial(_segmented_gather_kernel, seg_tile=seg_tile),
+        grid=(total_pad // seg_tile,),
+        in_specs=[
+            pl.BlockSpec((1, nblocks), lambda t: (0, 0)),
+            pl.BlockSpec((1, nblocks), lambda t: (0, 0)),
+            pl.BlockSpec((nblocks, cap), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, seg_tile), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((1, total_pad), compact.dtype),
+        interpret=interpret,
+    )(
+        starts.reshape(1, nblocks).astype(jnp.int32),
+        ends.reshape(1, nblocks).astype(jnp.int32),
+        compact,
+    )
+    return out[0, :total]

@@ -1,4 +1,15 @@
-"""jit'd flatten: compact kernel + one-hot dispatch matmul for global order."""
+"""jit'd flatten: compact kernel + global ordering (segmented gather or matmul).
+
+Two global-ordering implementations sit behind ``flatten(..., impl=...)``:
+
+``"segmented"`` (default)
+    Tiled segmented gather keyed off the ``block_starts`` prefix sums —
+    O(n) work, the freeze path of the two-phase runtime (DESIGN.md §2).
+
+``"dispatch"``
+    The legacy one-hot dispatch matmul (kernels/dispatch_mxu) — O(n²) work;
+    kept as the MXU comparison point for ``benchmarks/bench_two_phase.py``.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -12,7 +23,7 @@ from repro.kernels.dispatch_mxu import ops as dispatch_ops
 from repro.kernels.flatten import kernel as _kernel
 from repro.kernels.flatten import ref as _ref
 
-__all__ = ["compact_blocks", "flatten"]
+__all__ = ["compact_blocks", "flatten", "flatten_segmented", "flatten_dispatch"]
 
 
 @partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
@@ -37,7 +48,7 @@ def compact_blocks(
 
 
 @partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
-def flatten(
+def flatten_segmented(
     buckets: tuple[jax.Array, ...],
     sizes: jax.Array,
     b0: int,
@@ -45,7 +56,27 @@ def flatten(
     interpret: bool | None = None,
     use_ref: bool = False,
 ) -> jax.Array:
-    """Full GGArray flatten on kernels: compact + dispatch scatter-matmul."""
+    """GGArray flatten: compact + linear-time segmented gather."""
+    compact = compact_blocks(buckets, b0, interpret=interpret, use_ref=use_ref)
+    starts = indexing.block_starts(sizes).astype(jnp.int32)
+    ends = starts + sizes.astype(jnp.int32)
+    if use_ref:
+        return _ref.gather_global(compact, starts, ends)
+    return _kernel.segmented_gather_pallas(
+        compact, starts, ends, interpret=common.should_interpret(interpret)
+    )
+
+
+@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+def flatten_dispatch(
+    buckets: tuple[jax.Array, ...],
+    sizes: jax.Array,
+    b0: int,
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """GGArray flatten: compact + one-hot dispatch scatter-matmul (legacy)."""
     compact = compact_blocks(buckets, b0, interpret=interpret, use_ref=use_ref)
     nblocks, cap = compact.shape
     starts = indexing.block_starts(sizes)
@@ -57,3 +88,25 @@ def flatten(
         vals, pos, nblocks * cap, interpret=interpret, use_ref=use_ref
     )
     return out[:, 0]
+
+
+@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref", "impl"))
+def flatten(
+    buckets: tuple[jax.Array, ...],
+    sizes: jax.Array,
+    b0: int,
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+    impl: str = "segmented",
+) -> jax.Array:
+    """Full GGArray flatten on kernels → (nblocks·cap,) block-major order."""
+    if impl == "segmented":
+        return flatten_segmented(
+            buckets, sizes, b0, interpret=interpret, use_ref=use_ref
+        )
+    if impl == "dispatch":
+        return flatten_dispatch(
+            buckets, sizes, b0, interpret=interpret, use_ref=use_ref
+        )
+    raise ValueError(f"unknown flatten impl {impl!r} (want 'segmented'|'dispatch')")

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.core import indexing
 
-__all__ = ["compact_blocks", "flatten_global"]
+__all__ = ["compact_blocks", "flatten_global", "gather_global"]
 
 
 def compact_blocks(buckets: tuple[jax.Array, ...], b0: int) -> jax.Array:
@@ -23,3 +23,15 @@ def flatten_global(compact: jax.Array, sizes: jax.Array) -> jax.Array:
     tgt = jnp.where(live, starts[:, None] + posn, nblocks * cap)
     out = jnp.zeros((nblocks * cap,), compact.dtype)
     return out.at[tgt].set(compact, mode="drop")
+
+
+def gather_global(compact: jax.Array, starts: jax.Array, ends: jax.Array) -> jax.Array:
+    """Gather-formulation oracle for the segmented kernel (same index math)."""
+    nblocks, cap = compact.shape
+    idx = jnp.arange(nblocks * cap, dtype=jnp.int32)
+    blk = jnp.sum((idx[:, None] >= starts[None, :]).astype(jnp.int32), axis=1) - 1
+    blk = jnp.maximum(blk, 0)
+    pos = idx - starts[blk]
+    live = idx < ends[blk]
+    vals = compact.reshape(-1)[blk * cap + jnp.minimum(pos, cap - 1)]
+    return jnp.where(live, vals, jnp.zeros_like(vals))

@@ -1,0 +1,16 @@
+"""Phase-aware runtime for the paper's two-phase usage pattern (§VI.D).
+
+``TwoPhasePipeline`` owns a GGArray through its growth phase, freezes it into
+a contiguous :class:`FrozenArray` via the linear-time segmented flatten
+kernel, and hands the frozen view to static-phase consumers (serving decode,
+token packing, benchmarks).  See DESIGN.md §2–§3.
+"""
+from repro.runtime.phases import (
+    FreezeStats,
+    FrozenArray,
+    Phase,
+    PhaseError,
+    TwoPhasePipeline,
+)
+
+__all__ = ["FreezeStats", "FrozenArray", "Phase", "PhaseError", "TwoPhasePipeline"]

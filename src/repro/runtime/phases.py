@@ -1,0 +1,264 @@
+"""Two-phase runtime: grow → freeze → static pipeline (paper §VI.D).
+
+The paper's headline usage pattern is two-phased: a *growth* phase where the
+final element count is unknown (GGArray absorbs insertions copy-free), then a
+*static* phase where the data no longer grows and should be read at flat-array
+speed.  ``TwoPhasePipeline`` models that handoff explicitly:
+
+* **GROW** — the pipeline owns a :class:`repro.core.ggarray.GGArray`;
+  ``append`` runs ``ensure_capacity`` + ``push_back`` (block-local, no
+  collectives, O(log n) growth events total).
+* **freeze()** — one-shot flatten into a contiguous, globally-ordered
+  :class:`FrozenArray` via the linear-time segmented-gather Pallas kernel
+  (``kernels/flatten``, keyed off the ``block_starts`` prefix sums).  This is
+  the only O(n) copy the pattern ever pays per phase, replacing the legacy
+  O(n²) one-hot dispatch matmul.
+* **FROZEN** — reads are direct indexing (no bucket walk, no binary search);
+  ``map_frozen`` runs static work kernels over the contiguous buffer.
+* **thaw()** — back to GROW for re-growth: zero-copy by default (the bucket
+  chain was never destroyed), or ``rebalance=True`` to redistribute the
+  frozen contents evenly across blocks via ``from_flat``.
+
+Allocation model and touchpoints: DESIGN.md §2 / §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ggarray as gg
+from repro.kernels.flatten import ops as flatten_ops
+
+__all__ = ["Phase", "PhaseError", "FrozenArray", "FreezeStats", "TwoPhasePipeline"]
+
+FLATTEN_IMPLS = ("segmented", "dispatch", "core")
+
+
+class Phase(str, enum.Enum):
+    GROW = "grow"
+    FROZEN = "frozen"
+
+
+class PhaseError(RuntimeError):
+    """Operation invoked in the wrong phase of the two-phase lifecycle."""
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FrozenArray:
+    """Contiguous block-major snapshot of a GGArray (the static-phase view).
+
+    ``data`` is capacity-shaped (XLA static shapes); ``data[:size]`` are the
+    live elements in global order, slots beyond are zero.  ``block_starts``
+    records where each source block's segment begins — the freeze-time prefix
+    table, kept for segment-aware consumers (masks, shard handoff, thaw).
+    """
+
+    data: jax.Array  # (capacity, *item_shape)
+    size: jax.Array  # () int32 live element count
+    block_starts: jax.Array  # (nblocks,) int32
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def item_shape(self) -> tuple[int, ...]:
+        return self.data.shape[1:]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def read(self, idx: jax.Array) -> jax.Array:
+        """O(1) contiguous read — no bucket walk, no block search."""
+        return self.data[idx]
+
+    def live_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity) < self.size
+
+
+@dataclasses.dataclass
+class FreezeStats:
+    """Lifecycle counters for benchmarks / engine accounting.
+
+    ``last_freeze_s`` is wall time of the most recent ``freeze()`` — the
+    *first* freeze of a given bucket structure includes jit trace/compile
+    time, which off-TPU dwarfs the O(n) copy itself.  For warm numbers use
+    ``benchmarks/bench_two_phase.py`` (which warms up before timing) or
+    compare a repeat freeze of the same structure.
+    """
+
+    appends: int = 0
+    grow_events: int = 0
+    freezes: int = 0
+    thaws: int = 0
+    elements_frozen: int = 0
+    last_freeze_s: float = 0.0
+    total_freeze_s: float = 0.0
+
+
+class TwoPhasePipeline:
+    """Owns one GGArray across its grow → frozen → (re-grow) lifecycle.
+
+    ``flatten_impl`` selects the freeze path: ``"segmented"`` (linear-time
+    Pallas gather, the default), ``"dispatch"`` (legacy O(n²) one-hot matmul,
+    kept for comparison), or ``"core"`` (pure-jnp scatter in core.ggarray —
+    also the fallback whenever ``item_shape`` is non-scalar, which the 2-D
+    kernels do not cover).
+    """
+
+    def __init__(
+        self,
+        nblocks: int = 8,
+        b0: int = 8,
+        item_shape: Sequence[int] = (),
+        dtype: Any = jnp.float32,
+        nbuckets: int = 1,
+        *,
+        flatten_impl: str = "segmented",
+    ):
+        if flatten_impl not in FLATTEN_IMPLS:
+            raise ValueError(f"flatten_impl {flatten_impl!r} not in {FLATTEN_IMPLS}")
+        self._gg = gg.init(nblocks, b0, item_shape, dtype, nbuckets=nbuckets)
+        self._frozen: FrozenArray | None = None
+        self._phase = Phase.GROW
+        self.flatten_impl = flatten_impl
+        self.stats = FreezeStats()
+
+    @classmethod
+    def from_ggarray(cls, arr: gg.GGArray, *, flatten_impl: str = "segmented"):
+        """Adopt an existing GGArray (no throwaway default allocation)."""
+        if flatten_impl not in FLATTEN_IMPLS:
+            raise ValueError(f"flatten_impl {flatten_impl!r} not in {FLATTEN_IMPLS}")
+        pipe = cls.__new__(cls)
+        pipe._gg = arr
+        pipe._frozen = None
+        pipe._phase = Phase.GROW
+        pipe.flatten_impl = flatten_impl
+        pipe.stats = FreezeStats()
+        return pipe
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def phase(self) -> Phase:
+        return self._phase
+
+    @property
+    def array(self) -> gg.GGArray:
+        """The underlying GGArray (valid in either phase; grows only in GROW)."""
+        return self._gg
+
+    @property
+    def nblocks(self) -> int:
+        return self._gg.nblocks
+
+    @property
+    def sizes(self) -> jax.Array:
+        return self._gg.sizes
+
+    def total_size(self) -> int:
+        return int(jax.device_get(gg.total_size(self._gg)))
+
+    def memory_elems(self) -> int:
+        return gg.memory_elems(self._gg)
+
+    def _require(self, phase: Phase, op: str) -> None:
+        if self._phase is not phase:
+            raise PhaseError(
+                f"{op} requires phase {phase.value!r}, pipeline is "
+                f"{self._phase.value!r} (freeze()/thaw() switch phases)"
+            )
+
+    # ---- GROW phase ------------------------------------------------------
+    def append(
+        self, elems: jax.Array, mask: jax.Array | None = None, *, method: str = "scan"
+    ) -> jax.Array:
+        """push_back up to ``m`` elements per block; grows capacity as needed.
+
+        ``elems: (nblocks, m, *item_shape)`` → assigned in-block positions
+        ``(nblocks, m)`` (−1 where masked out).
+        """
+        self._require(Phase.GROW, "append")
+        before = self._gg.nbuckets
+        self._gg = gg.ensure_capacity(self._gg, elems.shape[1])
+        self.stats.grow_events += self._gg.nbuckets - before
+        self._gg, pos = gg.push_back(self._gg, elems, mask, method=method)
+        self.stats.appends += 1
+        return pos
+
+    # ---- the handoff -----------------------------------------------------
+    def freeze(self) -> FrozenArray:
+        """Flatten into a contiguous global-order array; enter FROZEN phase."""
+        self._require(Phase.GROW, "freeze")
+        arr = self._gg
+        t0 = time.perf_counter()
+        starts = gg.block_starts(arr)
+        if self.flatten_impl == "core" or arr.item_shape:
+            flat, total = gg.flatten(arr)
+        else:
+            flat = flatten_ops.flatten(
+                arr.buckets, arr.sizes, arr.b0, impl=self.flatten_impl
+            )
+            total = jnp.sum(arr.sizes)
+        flat = jax.block_until_ready(flat)
+        dt = time.perf_counter() - t0
+        self._frozen = FrozenArray(
+            data=flat, size=total.astype(jnp.int32), block_starts=starts
+        )
+        self._phase = Phase.FROZEN
+        self.stats.freezes += 1
+        self.stats.elements_frozen += int(jax.device_get(total))
+        self.stats.last_freeze_s = dt
+        self.stats.total_freeze_s += dt
+        return self._frozen
+
+    def thaw(self, *, rebalance: bool = False) -> gg.GGArray:
+        """Re-enter GROW. Zero-copy by default (the bucket chain is intact);
+        ``rebalance=True`` redistributes the frozen contents evenly instead."""
+        self._require(Phase.FROZEN, "thaw")
+        if rebalance:
+            frozen = self._frozen
+            assert frozen is not None
+            self._gg = gg.from_flat(
+                frozen.data,
+                int(jax.device_get(frozen.size)),
+                self._gg.nblocks,
+                self._gg.b0,
+            )
+        self._frozen = None
+        self._phase = Phase.GROW
+        self.stats.thaws += 1
+        return self._gg
+
+    # ---- FROZEN phase ----------------------------------------------------
+    @property
+    def frozen(self) -> FrozenArray:
+        if self._phase is not Phase.FROZEN or self._frozen is None:
+            raise PhaseError("no frozen view: call freeze() first")
+        return self._frozen
+
+    def read(self, idx: jax.Array) -> jax.Array:
+        """Static-phase read: direct contiguous gather."""
+        return self.frozen.read(idx)
+
+    def map_frozen(self, fn: Callable[[jax.Array], jax.Array]) -> FrozenArray:
+        """Run a static work kernel over the contiguous buffer (live slots).
+
+        Dead (beyond-``size``) slots are left untouched so repeated maps stay
+        zero there; ``fn`` must be shape-preserving.
+        """
+        frozen = self.frozen
+        out = fn(frozen.data)
+        if out.shape != frozen.data.shape:
+            raise ValueError(f"map_frozen fn changed shape: {out.shape}")
+        cond = frozen.live_mask().reshape((-1,) + (1,) * len(frozen.item_shape))
+        self._frozen = dataclasses.replace(
+            frozen, data=jnp.where(cond, out, frozen.data)
+        )
+        return self._frozen

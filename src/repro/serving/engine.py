@@ -11,6 +11,14 @@ policy's growth event fires:
 - ``semistatic``→ doubling realloc: allocate 2× and copy every live K/V byte.
 - ``static``    → no growth; the engine must have pre-allocated ``max_len``
                   up front (the worst-case VRAM the paper's Fig. 3 prices).
+- ``two_phase`` → the paper's §VI.D pattern as a serving policy: prefill
+                  grows a ggarray cache (copy-free), then the cache is
+                  **frozen** (``freeze_cache``) into the contiguous static
+                  layout before decode, so every decode step attends in one
+                  softmax pass instead of one per bucket level.  On capacity
+                  exhaustion the engine thaws → grows a bucket → refreezes
+                  (an O(n) copy, but only O(log n) times over a generation —
+                  the amortized freeze the runtime's TwoPhasePipeline models).
 
 ``Engine.stats`` exposes alloc/copy/grow counters and byte volumes so the
 benchmarks can reproduce the paper's Table II / Fig. 6 structure.
@@ -36,6 +44,7 @@ __all__ = ["Engine", "EngineStats"]
 @dataclasses.dataclass
 class EngineStats:
     grow_events: int = 0
+    freeze_events: int = 0
     copied_bytes: int = 0
     allocated_bytes: int = 0
     decode_steps: int = 0
@@ -88,6 +97,14 @@ class Engine:
                 grown = kvcache.grow_ggarray(c, cfg)
                 self.stats.allocated_bytes += kvcache.cache_bytes(grown) - kvcache.cache_bytes(c)
                 out.append(grown)
+            elif self.policy == "two_phase":
+                # thaw → add a bucket (copy-free) → refreeze for flat decode.
+                grown = kvcache.grow_ggarray(kvcache.thaw_cache(c, cfg.cache_b0), cfg)
+                frozen = kvcache.freeze_cache(grown)
+                self.stats.copied_bytes += kvcache.cache_bytes(c)
+                self.stats.allocated_bytes += kvcache.cache_bytes(frozen) - kvcache.cache_bytes(c)
+                self.stats.freeze_events += 1
+                out.append(frozen)
             elif self.policy == "semistatic":
                 old_k, old_v = c["k"], c["v"]
                 cap = old_k.shape[-3]
@@ -134,10 +151,18 @@ class Engine:
             toks[i, : len(p)] = p
 
         hint = Lp if self.policy != "static" else self.max_len
+        # two_phase: the grow phase is a ggarray prefill; frozen below.
+        prefill_policy = "ggarray" if self.policy == "two_phase" else self.policy
         logits, caches = steps.prefill(
             self.params, jnp.asarray(toks), cfg,
-            capacity_hint=hint, policy=self.policy, lengths=jnp.asarray(lens),
+            capacity_hint=hint, policy=prefill_policy, lengths=jnp.asarray(lens),
         )
+        if self.policy == "two_phase":
+            caches = [
+                kvcache.freeze_cache(c) if kind == "attn" else c
+                for c, kind in zip(caches, cfg.layout)
+            ]
+            self.stats.freeze_events += 1
         self.stats.allocated_bytes += sum(
             kvcache.cache_bytes(c) for c, k in zip(caches, cfg.layout) if k == "attn"
         )

@@ -2,7 +2,10 @@
 
 Decode is a per-step ``push_back`` into per-layer K/V arrays whose final
 length is unknown at allocation time — exactly the paper's motivating
-scenario.  Three policies mirror its comparison (DESIGN.md §3):
+scenario.  Three policies mirror its comparison (DESIGN.md §3), and a fourth
+(``two_phase``, realized in ``serving/engine.py`` via ``freeze_cache`` /
+``thaw_cache`` below) applies the paper's §VI.D pattern to the prefill →
+decode handoff:
 
 ``static``      pre-allocate ``max_seq_len`` (paper's static array).  Fails
                 (truncates) past capacity; pays worst-case VRAM up front.
@@ -37,6 +40,8 @@ __all__ = [
     "append",
     "attend",
     "grow_ggarray",
+    "freeze_cache",
+    "thaw_cache",
     "fill_from_prefill",
     "needed_levels",
     "cache_bytes",
@@ -157,6 +162,82 @@ def grow_ggarray(cache: Cache, cfg: ModelConfig, levels: int = 1) -> Cache:
 
 def cache_bytes(cache: Cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+# --------------------------------------------------------------------------
+# freeze / thaw — the two-phase handoff at the prefill → decode boundary.
+#
+# A ggarray cache's per-sequence layout is the LFVector address map: level
+# ``lvl`` covers contiguous in-sequence positions [start_lvl, start_lvl +
+# size_lvl).  Flattening is therefore a *static* concatenation along the seq
+# axis (the kernels' segmented gather degenerates to a copy — there is no
+# ragged per-block table here), and thaw is the inverse static slicing.
+# Frozen caches use the static-policy layout, so ``attend`` takes the
+# single-segment path: one softmax pass instead of one per bucket level —
+# the "regular access" speed the paper's two-phase pattern is about.
+# --------------------------------------------------------------------------
+
+_KEY_AXIS = {"k": -3, "v": -3, "ks": -2, "vs": -2}
+
+
+def freeze_cache(cache: Cache) -> Cache:
+    """ggarray cache → contiguous static-layout cache (runtime freeze()).
+
+    Pass-through keys (``cross_k``/``cross_v``, already-static caches) are
+    preserved.  This is the once-per-phase O(n) copy the pattern amortizes.
+    """
+    if not _is_ggarray(cache):
+        return dict(cache)
+    n = _levels(cache)
+    bases = ["k", "v"] + (["ks", "vs"] if _is_quant(cache) else [])
+    out = {
+        key: val
+        for key, val in cache.items()
+        if not any(key.startswith(b) and key[len(b) :].isdigit() for b in bases)
+    }
+    for base in bases:
+        out[base] = jnp.concatenate(
+            [cache[f"{base}{lvl}"] for lvl in range(n)], axis=_KEY_AXIS[base]
+        )
+    return out
+
+
+def _slice_level(arr: jax.Array, lo: int, size: int, axis: int) -> jax.Array:
+    """arr[..., lo:lo+size, ...] along ``axis``, zero-padded to ``size``."""
+    axis = axis % arr.ndim
+    cap = arr.shape[axis]
+    take = max(min(cap - lo, size), 0)
+    idx = [slice(None)] * arr.ndim
+    idx[axis] = slice(lo, lo + take)
+    seg = arr[tuple(idx)]
+    if take < size:
+        widths = [(0, 0)] * arr.ndim
+        widths[axis] = (0, size - take)
+        seg = jnp.pad(seg, widths)
+    return seg
+
+
+def thaw_cache(cache: Cache, b0: int) -> Cache:
+    """Contiguous static-layout cache → ggarray cache (runtime thaw()).
+
+    Produces the smallest bucket chain whose capacity covers the frozen
+    buffer; the last level zero-pads past it.  Inverse of ``freeze_cache``
+    up to that tail padding.
+    """
+    if _is_ggarray(cache):
+        return dict(cache)
+    cap = cache["k"].shape[-3]
+    nlev = max(indexing.min_buckets_for(b0, cap), 1)
+    starts = indexing.bucket_starts(b0, nlev)
+    sizes = indexing.bucket_sizes(b0, nlev)
+    bases = ["k", "v"] + (["ks", "vs"] if _is_quant(cache) else [])
+    out = {key: val for key, val in cache.items() if key not in bases}
+    for base in bases:
+        for lvl in range(nlev):
+            out[f"{base}{lvl}"] = _slice_level(
+                cache[base], starts[lvl], sizes[lvl], _KEY_AXIS[base]
+            )
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -1,8 +1,12 @@
 """GGArray token-packing pipeline: order, balance, and phase transition."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # property tests skip, example tests still run
+    from _hypothesis_fallback import given, settings, st
 
 from repro.data.packing import Packer
 
@@ -22,7 +26,7 @@ def test_blocks_stay_balanced():
     p = Packer(nblocks=4, b0=4)
     for i in range(12):
         p.add_document([i] * 5)
-    sizes = np.asarray(p._arr.sizes)
+    sizes = np.asarray(p.sizes)
     assert sizes.max() - sizes.min() <= 5  # greedy least-loaded balance
 
 

@@ -1,0 +1,129 @@
+"""TwoPhasePipeline lifecycle: grow → freeze → static work → thaw → regrow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ggarray as gg
+from repro.runtime import FrozenArray, Phase, PhaseError, TwoPhasePipeline
+
+
+def _grow_random(pipe, steps=5, seed=0):
+    """Append random masked waves; return the per-block oracle lists."""
+    rng = np.random.default_rng(seed)
+    oracle = [[] for _ in range(pipe.nblocks)]
+    for _ in range(steps):
+        m = int(rng.integers(1, 7))
+        elems = rng.standard_normal((pipe.nblocks, m)).astype(np.float32)
+        mask = rng.random((pipe.nblocks, m)) < 0.6
+        pipe.append(jnp.asarray(elems), jnp.asarray(mask))
+        for b in range(pipe.nblocks):
+            oracle[b].extend(elems[b][mask[b]].tolist())
+    return oracle
+
+
+@pytest.mark.parametrize("impl", ["segmented", "dispatch", "core"])
+def test_freeze_emits_block_major_global_order(impl):
+    pipe = TwoPhasePipeline(nblocks=4, b0=2, flatten_impl=impl)
+    oracle = _grow_random(pipe, seed=1)
+    frozen = pipe.freeze()
+    want = np.concatenate([np.asarray(o, np.float32) for o in oracle])
+    n = int(frozen.size)
+    assert n == len(want)
+    np.testing.assert_allclose(np.asarray(frozen.data)[:n], want, rtol=1e-6)
+    assert not np.any(np.asarray(frozen.data)[n:]), "dead slots must be zero"
+    # the freeze-time prefix table matches the per-block counts
+    np.testing.assert_array_equal(
+        np.asarray(frozen.block_starts),
+        np.cumsum([0] + [len(o) for o in oracle[:-1]]),
+    )
+
+
+def test_phase_guards():
+    pipe = TwoPhasePipeline(nblocks=2, b0=2)
+    with pytest.raises(PhaseError):
+        pipe.thaw()  # not frozen yet
+    with pytest.raises(PhaseError):
+        _ = pipe.frozen
+    pipe.append(jnp.ones((2, 3)))
+    pipe.freeze()
+    assert pipe.phase is Phase.FROZEN
+    with pytest.raises(PhaseError):
+        pipe.append(jnp.ones((2, 1)))  # no growth while frozen
+    with pytest.raises(PhaseError):
+        pipe.freeze()  # double freeze
+    pipe.thaw()
+    assert pipe.phase is Phase.GROW
+
+
+def test_frozen_read_matches_read_global():
+    pipe = TwoPhasePipeline(nblocks=4, b0=2)
+    _grow_random(pipe, seed=3)
+    arr = pipe.array
+    frozen = pipe.freeze()
+    n = int(frozen.size)
+    idx = jnp.arange(n)
+    np.testing.assert_allclose(
+        np.asarray(pipe.read(idx)),
+        np.asarray(gg.read_global(arr, idx)),
+        rtol=1e-6,
+    )
+
+
+def test_map_frozen_touches_only_live_slots():
+    pipe = TwoPhasePipeline(nblocks=2, b0=2)
+    pipe.append(jnp.ones((2, 3)))
+    frozen = pipe.freeze()
+    n = int(frozen.size)
+    pipe.map_frozen(lambda x: x * 10.0)
+    data = np.asarray(pipe.frozen.data)
+    np.testing.assert_allclose(data[:n], 10.0)
+    assert not np.any(data[n:])
+    with pytest.raises(ValueError):
+        pipe.map_frozen(lambda x: x[:1])  # shape-changing fn rejected
+
+
+def test_thaw_zero_copy_then_regrow_then_refreeze():
+    pipe = TwoPhasePipeline(nblocks=2, b0=2)
+    pipe.append(jnp.asarray([[1.0, 2.0], [3.0, 4.0]]))
+    n0 = int(pipe.freeze().size)
+    pipe.thaw()
+    pipe.append(jnp.full((2, 1), 9.0))
+    frozen = pipe.freeze()
+    assert int(frozen.size) == n0 + 2
+    np.testing.assert_allclose(
+        np.asarray(frozen.data)[: n0 + 2], [1, 2, 9, 3, 4, 9]
+    )
+    assert pipe.stats.freezes == 2 and pipe.stats.thaws == 1
+
+
+def test_thaw_rebalance_redistributes_evenly():
+    pipe = TwoPhasePipeline(nblocks=4, b0=2)
+    # all load on block 0
+    mask = jnp.asarray([[True] * 8] + [[False] * 8] * 3)
+    pipe.append(jnp.broadcast_to(jnp.arange(8.0), (4, 8)), mask)
+    pipe.freeze()
+    pipe.thaw(rebalance=True)
+    sizes = np.asarray(pipe.sizes)
+    assert sizes.sum() == 8 and sizes.max() == 2, sizes
+
+
+def test_frozen_array_is_a_pytree():
+    pipe = TwoPhasePipeline(nblocks=2, b0=2)
+    pipe.append(jnp.ones((2, 2)))
+    frozen = pipe.freeze()
+
+    @jax.jit
+    def total(fz: FrozenArray):
+        return jnp.sum(jnp.where(fz.live_mask(), fz.data, 0.0))
+
+    assert float(total(frozen)) == 4.0
+
+
+def test_item_shape_falls_back_to_core_flatten():
+    pipe = TwoPhasePipeline(nblocks=2, b0=2, item_shape=(3,))
+    pipe.append(jnp.ones((2, 2, 3)))
+    frozen = pipe.freeze()
+    assert frozen.data.shape == (pipe.memory_elems(), 3)
+    assert int(frozen.size) == 4
+    np.testing.assert_allclose(np.asarray(frozen.data)[:4], 1.0)
