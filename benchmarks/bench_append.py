@@ -1,0 +1,121 @@
+"""Grow-phase append throughput — the host-sync-free protocol headline.
+
+Two comparisons per array size (the largest decides the acceptance claim):
+
+``append.donated.n*`` vs ``append.undonated.n*``
+    The amortized protocol (CapacityPlanner + donated structure-cached
+    ``gg.append``) against the legacy path (per-wave ``ensure_capacity``
+    device read + undonated ``push_back``, which copies every bucket level).
+    ``derived`` reports appends/s and **host transfers per append wave**,
+    counted by a ``jax.device_get`` spy in a separate (untimed) pass: the
+    donated path amortizes to ~0, the legacy path pays exactly 1 per wave.
+
+``append.fused.n*`` vs ``append.scan.n*``
+    The fused Pallas push-back kernel (offsets + all-level scatter in one
+    tiled pass) against the jnp scan+scatter, both under the donated
+    protocol.
+
+Smoke mode (``REPRO_BENCH_SMOKE=1`` or ``--smoke``) shrinks sizes for the CI
+artifact run; the measured code paths are identical.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ggarray as gg
+
+from benchmarks.common import emit, smoke_mode, timeit, write_json
+
+NBLOCKS = 8
+WAVES = 16
+
+
+def _sizes() -> tuple[int, ...]:
+    if smoke_mode():
+        return (1 << 8,)
+    return (1 << 10, 1 << 12, 1 << 14)
+
+
+def _grow_donated(n: int, method: str = "scan"):
+    m = n // WAVES // NBLOCKS
+    wave = jnp.ones((NBLOCKS, m), jnp.float32)
+    arr = gg.init(NBLOCKS, b0=max(m, 1))
+    planner = gg.CapacityPlanner()
+    for _ in range(WAVES):
+        arr = planner.reserve(arr, m)
+        arr, _, hd = gg.append(arr, wave, method=method)
+        planner.note_append(arr, hd)
+    return arr.buckets
+
+
+def _grow_undonated(n: int, method: str = "scan"):
+    m = n // WAVES // NBLOCKS
+    wave = jnp.ones((NBLOCKS, m), jnp.float32)
+    arr = gg.init(NBLOCKS, b0=max(m, 1))
+    for _ in range(WAVES):
+        arr = gg.ensure_capacity(arr, m)  # one device read per wave
+        arr, _ = gg.push_back(arr, wave, method=method)
+    return arr.buckets
+
+
+def _count_transfers(fn) -> int:
+    """Run ``fn`` once under a jax.device_get spy (untimed pass)."""
+    calls = 0
+    real_get = jax.device_get
+
+    def spy(x):
+        nonlocal calls
+        calls += 1
+        return real_get(x)
+
+    jax.device_get = spy
+    try:
+        jax.block_until_ready(fn())
+    finally:
+        jax.device_get = real_get
+    return calls
+
+
+def bench_protocol() -> None:
+    for n in _sizes():
+        t_don = timeit(lambda: _grow_donated(n), repeats=5, warmup=1)
+        t_und = timeit(lambda: _grow_undonated(n), repeats=5, warmup=1)
+        x_don = _count_transfers(lambda: _grow_donated(n))
+        x_und = _count_transfers(lambda: _grow_undonated(n))
+        apps = n / t_don * 1e6
+        emit(
+            f"append.donated.n{n}", t_don,
+            f"appends_per_s={apps:.0f} transfers_per_wave={x_don / WAVES:.2f} "
+            f"speedup_vs_undonated={t_und / t_don:.2f}",
+        )
+        emit(
+            f"append.undonated.n{n}", t_und,
+            f"appends_per_s={n / t_und * 1e6:.0f} transfers_per_wave={x_und / WAVES:.2f}",
+        )
+
+
+def bench_insert_method() -> None:
+    for n in _sizes():
+        t_fused = timeit(lambda: _grow_donated(n, "fused"), repeats=3, warmup=1)
+        t_scan = timeit(lambda: _grow_donated(n, "scan"), repeats=3, warmup=1)
+        emit(f"append.fused.n{n}", t_fused, f"speedup_vs_scan={t_scan / t_fused:.2f}")
+        emit(f"append.scan.n{n}", t_scan, "")
+
+
+def main() -> None:
+    bench_protocol()
+    bench_insert_method()
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        import os
+
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    from benchmarks.common import Row
+
+    main()
+    write_json("append", Row.rows)  # standalone run: emit the CI artifact

@@ -7,12 +7,14 @@ slower than static, memory ≤ 2×), not absolute ms (EXPERIMENTS.md §Method).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Any, Callable
 
 import jax
 
-__all__ = ["timeit", "emit", "Row"]
+__all__ = ["timeit", "emit", "Row", "write_json", "smoke_mode"]
 
 
 def timeit(fn: Callable[[], Any], *, repeats: int = 5, warmup: int = 2) -> float:
@@ -36,3 +38,30 @@ class Row:
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     Row.rows.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def smoke_mode() -> bool:
+    """CI smoke runs: tiny sizes, same code paths (REPRO_BENCH_SMOKE=1)."""
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def write_json(short_name: str, rows: list[tuple[str, float, str]]) -> str:
+    """Dump rows as ``BENCH_<short_name>.json`` (trajectory-tracking artifact).
+
+    Output directory: ``REPRO_BENCH_DIR`` if set, else the current directory.
+    Returns the path written.
+    """
+    path = os.path.join(
+        os.environ.get("REPRO_BENCH_DIR", "."), f"BENCH_{short_name}.json"
+    )
+    payload = {
+        "benchmark": short_name,
+        "smoke": smoke_mode(),
+        "rows": [
+            {"name": n, "us_per_call": us, "derived": d} for n, us, d in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path

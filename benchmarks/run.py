@@ -1,8 +1,11 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (assignment contract).  Roofline
-numbers come from the dry-run artifacts (benchmarks/roofline_table.py), not
-from CPU wall-clock.
+Prints ``name,us_per_call,derived`` CSV (assignment contract) and writes one
+``BENCH_<name>.json`` per module (``BENCH_append.json``,
+``BENCH_two_phase.json``, …) for trajectory tracking — schema in
+``benchmarks/common.py::write_json``; output dir via ``REPRO_BENCH_DIR``.
+Roofline numbers come from the dry-run artifacts
+(benchmarks/roofline_table.py), not from CPU wall-clock.
 """
 from __future__ import annotations
 
@@ -12,6 +15,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_append,
         bench_insertion,
         bench_kvcache,
         bench_memory,
@@ -19,6 +23,7 @@ def main() -> None:
         bench_operations,
         bench_two_phase,
     )
+    from benchmarks.common import Row, write_json
 
     print("name,us_per_call,derived")
     failures = 0
@@ -27,11 +32,14 @@ def main() -> None:
         bench_insertion,    # Fig. 4 col 1
         bench_nblocks,      # Fig. 4 cols 2-3
         bench_operations,   # Table II / Fig. 5
+        bench_append,       # host-sync-free grow protocol (tentpole headline)
         bench_two_phase,    # Fig. 6
         bench_kvcache,      # beyond-paper serving payoff
     ):
+        start = len(Row.rows)
         try:
             mod.main()
+            write_json(mod.__name__.removeprefix("benchmarks.bench_"), Row.rows[start:])
         except Exception:
             failures += 1
             print(f"{mod.__name__},ERROR,", file=sys.stderr)

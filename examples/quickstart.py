@@ -40,6 +40,19 @@ def main() -> None:
         off, cnt = core.insertion_offsets(mask, method=method)
         print(f"insertion[{method}]: counts={cnt}")
 
+    # --- the hot path: donated append + host-side planner (DESIGN.md §2) --
+    # Steady-state waves issue ZERO device->host transfers: the planner
+    # proves capacity from its host-side bound and gg.append donates the
+    # buffers (old references die). The headroom flag is read only when a
+    # growth might be needed — O(log n) host contacts total.
+    planner = core.CapacityPlanner.for_array(arr)
+    wave = jnp.ones((nblocks, 2), jnp.float32)
+    for _ in range(3):
+        arr = planner.reserve(arr, 2)
+        arr, _, headroom = core.append(arr, wave)
+        planner.note_append(arr, headroom)
+    print(f"amortized appends: sizes={arr.sizes}, host syncs={planner.host_syncs}")
+
     # --- global indexing: prefix-sum table + binary search (rw_g) ---------
     flat, total = core.flatten(arr)
     idx = jnp.arange(int(total))

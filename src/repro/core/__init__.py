@@ -1,6 +1,9 @@
 """GGArray core — the paper's contribution as a composable JAX module."""
 from repro.core.ggarray import (
+    PUSH_BACK_METHODS,
+    CapacityPlanner,
     GGArray,
+    append,
     block_starts,
     ensure_capacity,
     flatten,
@@ -13,6 +16,7 @@ from repro.core.ggarray import (
     needs_grow,
     push_back,
     read_global,
+    reserve,
     total_size,
     write_global,
 )
@@ -21,7 +25,8 @@ from repro.core.insertion import INSERTION_METHODS, insertion_offsets
 from repro.core.lfvector import LFVector
 
 __all__ = [
-    "GGArray", "init", "push_back", "grow", "needs_grow", "ensure_capacity",
+    "GGArray", "init", "push_back", "append", "grow", "needs_grow",
+    "ensure_capacity", "reserve", "CapacityPlanner", "PUSH_BACK_METHODS",
     "flatten", "from_flat", "read_global", "write_global", "gather_block",
     "map_elements", "total_size", "memory_elems", "block_starts",
     "StaticArray", "SemiStaticArray", "static_init", "static_push_back",

@@ -13,6 +13,12 @@ The pytree has one array per bucket level, shaped ``(nblocks, B0*2**b, *item)``
 (uniform-level allocation; see DESIGN.md §2 for the skew analysis), plus a
 ``sizes: (nblocks,)`` vector.  ``len(buckets)`` is static per compiled program;
 geometric growth means only O(log n) distinct structures ever exist.
+
+The hot path is the **amortized host-sync-free protocol** (DESIGN.md §2):
+:class:`CapacityPlanner` + the donated :func:`append` keep steady-state
+appends free of any device→host transfer, reading one scalar (the headroom
+flag) only when a growth might be needed — O(log n) host contacts per growth
+phase.  :func:`push_back` is the undonated variant for one-shot use.
 """
 from __future__ import annotations
 
@@ -30,9 +36,13 @@ __all__ = [
     "GGArray",
     "init",
     "push_back",
+    "append",
     "grow",
     "needs_grow",
     "ensure_capacity",
+    "reserve",
+    "CapacityPlanner",
+    "PUSH_BACK_METHODS",
     "flatten",
     "from_flat",
     "read_global",
@@ -120,15 +130,95 @@ def needs_grow(gg: GGArray, n_new_per_block: jax.Array | int) -> jax.Array:
     return jnp.any(gg.sizes + n_new_per_block > gg.capacity_per_block)
 
 
-def ensure_capacity(gg: GGArray, n_new_per_block: int) -> GGArray:
-    """Host-side growth loop: grow until every block fits ``n_new_per_block`` more."""
-    max_size = int(jax.device_get(jnp.max(gg.sizes)))
+def reserve(
+    gg: GGArray, n_new_per_block: int, *, max_size: int | None = None
+) -> GGArray:
+    """Lookahead capacity planner: grow until ``max_size + n`` fits per block.
+
+    ``max_size`` is a host-known upper bound on the per-block element count;
+    when the caller tracks it (see :class:`CapacityPlanner`) this performs
+    **zero** device reads.  Passing ``None`` reads one device scalar — the
+    legacy ``ensure_capacity`` behavior.
+    """
+    if max_size is None:
+        max_size = int(jax.device_get(jnp.max(gg.sizes)))
     nb = gg.nbuckets
     while indexing.capacity(gg.b0, nb) < max_size + n_new_per_block:
         nb += 1
     if nb > gg.nbuckets:
         gg = grow(gg, nb - gg.nbuckets)
     return gg
+
+
+def ensure_capacity(gg: GGArray, n_new_per_block: int) -> GGArray:
+    """Growth loop with a per-call device read.
+
+    Kept for one-shot/interactive use; hot loops should use a
+    :class:`CapacityPlanner` (or ``reserve(..., max_size=...)``), which keeps
+    the steady-state append path free of host transfers.
+    """
+    return reserve(gg, n_new_per_block)
+
+
+class CapacityPlanner:
+    """Host-side size tracking → O(log n) host contacts over a growth phase.
+
+    The planner keeps a conservative upper bound on the max per-block size
+    (each wave of ``m`` grows it by ``m``; masked-out lanes only make the
+    bound pessimistic, never wrong).  ``reserve`` compares that bound against
+    the static capacity:
+
+    * bound + m ≤ capacity — the wave provably fits: no device read, no
+      growth, no new executable.  This is the steady state.
+    * bound + m > capacity — growth *might* be needed: read one scalar (the
+      headroom flag the donated :func:`append` returned, else a fresh
+      ``max(sizes)``), reset the bound to the true size, and grow if the true
+      size really overflows.
+
+    Each scalar read either halves the pessimism slack or precedes a
+    geometric growth, so total host contacts stay O(log n) for steady
+    appends (Tarjan & Zwick 2022's resizable-array bound, DESIGN.md §2).
+    """
+
+    def __init__(self, size_upper_bound: int = 0):
+        self.size_ub = size_upper_bound
+        self.host_syncs = 0  # scalar device→host reads issued by the planner
+        self.grow_events = 0
+        self._headroom: tuple[jax.Array, int] | None = None  # (flag, cap then)
+
+    @classmethod
+    def for_array(cls, gg: GGArray) -> "CapacityPlanner":
+        """Adopt an existing array: one scalar read to seed the bound."""
+        planner = cls(int(jax.device_get(jnp.max(gg.sizes))))
+        planner.host_syncs += 1
+        return planner
+
+    def note_append(self, gg: GGArray, headroom: jax.Array) -> None:
+        """Record the device-side headroom flag a donated append returned."""
+        self._headroom = (headroom, gg.capacity_per_block)
+
+    def observed_max(self) -> int:
+        """Host-read the true max per-block size (one scalar transfer)."""
+        assert self._headroom is not None
+        flag, cap_then = self._headroom
+        self.host_syncs += 1
+        return cap_then - int(jax.device_get(flag))
+
+    def reserve(self, gg: GGArray, n_new_per_block: int) -> GGArray:
+        cap = gg.capacity_per_block
+        if self.size_ub + n_new_per_block <= cap:
+            self.size_ub += n_new_per_block  # steady state: zero host contact
+            return gg
+        if self._headroom is not None:
+            true_max = self.observed_max()
+        else:
+            true_max = int(jax.device_get(jnp.max(gg.sizes)))
+            self.host_syncs += 1
+        self.size_ub = true_max + n_new_per_block
+        before = gg.nbuckets
+        gg = reserve(gg, n_new_per_block, max_size=true_max)
+        self.grow_events += gg.nbuckets - before
+        return gg
 
 
 # --------------------------------------------------------------------------
@@ -158,6 +248,43 @@ def _scatter_positions(
     return tuple(out)
 
 
+# push_back's insertion backends: the offsets-only algorithms from
+# core.insertion plus "fused", the Pallas kernel that computes offsets and
+# scatters into every bucket level in one tiled pass (kernels/push_back).
+PUSH_BACK_METHODS = ("atomic", "fused", "mxu", "scan", "tile")
+
+
+def _push_back_impl(
+    gg: GGArray,
+    elems: jax.Array,
+    mask: jax.Array | None,
+    method: str,
+) -> tuple[GGArray, jax.Array]:
+    """Shared body of the jitted ``push_back`` / donated ``append``."""
+    if elems.ndim < 2 or elems.shape[0] != gg.nblocks:
+        raise ValueError(f"elems must be (nblocks={gg.nblocks}, m, ...), got {elems.shape}")
+    if mask is None:
+        mask = jnp.ones(elems.shape[:2], dtype=bool)
+    if jnp.issubdtype(mask.dtype, jnp.floating):
+        raise TypeError(f"mask must be bool or integer, got {mask.dtype}")
+    if mask.dtype != jnp.bool_:
+        mask = mask != 0  # count lanes, not values (insertion_offsets contract)
+    if method == "fused" and not gg.item_shape and elems.shape[1] > 0:
+        from repro.kernels.push_back import ops as push_back_ops
+
+        buckets, sizes, pos = push_back_ops.push_back_fused(
+            gg.buckets, gg.sizes, gg.b0, elems, mask
+        )
+        return dataclasses.replace(gg, buckets=buckets, sizes=sizes), pos
+    if method == "fused":  # non-scalar payloads / empty waves: jnp fallback
+        method = "scan"
+    offsets, counts = insertion_offsets(mask, method=method)
+    pos = gg.sizes[:, None] + offsets
+    buckets = _scatter_positions(gg.buckets, gg.b0, pos, mask, elems)
+    new = dataclasses.replace(gg, buckets=buckets, sizes=gg.sizes + counts)
+    return new, jnp.where(mask, pos, -1)
+
+
 @partial(jax.jit, static_argnames=("method",))
 def push_back(
     gg: GGArray,
@@ -170,19 +297,43 @@ def push_back(
     ``elems: (nblocks, m, *item_shape)``; ``mask: (nblocks, m)`` selects which
     lanes insert (all, if None).  Returns the updated array and the assigned
     in-block positions ``(nblocks, m)`` (−1 where masked out).  Capacity must
-    already suffice (``ensure_capacity``) — mirroring the paper, where
-    ``new_bucket`` precedes the write.  Entirely block-local: the lowered HLO
-    contains no cross-block collective.
+    already suffice (``reserve``/``ensure_capacity``) — mirroring the paper,
+    where ``new_bucket`` precedes the write.  Entirely block-local: the
+    lowered HLO contains no cross-block collective.
+
+    This variant does **not** donate its input (the old array stays valid) —
+    hot loops should use :func:`append`, which does.
     """
-    if elems.ndim < 2 or elems.shape[0] != gg.nblocks:
-        raise ValueError(f"elems must be (nblocks={gg.nblocks}, m, ...), got {elems.shape}")
-    if mask is None:
-        mask = jnp.ones(elems.shape[:2], dtype=bool)
-    offsets, counts = insertion_offsets(mask, method=method)
-    pos = gg.sizes[:, None] + offsets
-    buckets = _scatter_positions(gg.buckets, gg.b0, pos, mask, elems)
-    new = dataclasses.replace(gg, buckets=buckets, sizes=gg.sizes + counts)
-    return new, jnp.where(mask, pos, -1)
+    return _push_back_impl(gg, elems, mask, method)
+
+
+@partial(jax.jit, static_argnames=("method",), donate_argnums=(0,))
+def append(
+    gg: GGArray,
+    elems: jax.Array,
+    mask: jax.Array | None = None,
+    method: str = "scan",
+) -> tuple[GGArray, jax.Array, jax.Array]:
+    """Donated push_back — the host-sync-free hot path.
+
+    Same semantics as :func:`push_back` plus:
+
+    * ``gg`` is **donated**: XLA writes the scattered elements into the input
+      buffers instead of copying every bucket level (the input array is dead
+      after the call — rebind it).
+    * returns a third value ``headroom``, a device-side int32 scalar
+      ``capacity_per_block − max(new sizes)``.  Negative means the wave
+      overflowed capacity and writes were dropped.  The host never has to
+      read it in the steady state; :class:`CapacityPlanner` reads it only
+      when its conservative bound says a growth might be needed — keeping
+      host contacts O(log n) per growth phase (DESIGN.md §2).
+
+    jit caches one executable per bucket structure (``nbuckets`` is pytree
+    structure), so geometric growth compiles O(log n) executables total.
+    """
+    new, pos = _push_back_impl(gg, elems, mask, method)
+    headroom = jnp.int32(new.capacity_per_block) - jnp.max(new.sizes)
+    return new, pos, headroom
 
 
 # --------------------------------------------------------------------------
@@ -298,7 +449,7 @@ def from_flat(
     src = jnp.arange(nblocks * per_block, dtype=jnp.int32).reshape(nblocks, per_block)
     mask = src < n
     elems = flat[src.clip(0, flat.shape[0] - 1)]
-    gg, _ = push_back(gg, elems, mask)
+    gg, _, _ = append(gg, elems, mask)  # fresh array: donation is free
     return gg
 
 

@@ -82,13 +82,29 @@ INSERTION_METHODS: dict[str, Callable[[jax.Array], tuple[jax.Array, jax.Array]]]
 
 
 def insertion_offsets(mask: jax.Array, method: str = "scan") -> tuple[jax.Array, jax.Array]:
-    """Exclusive per-block insertion offsets + per-block insert counts."""
+    """Exclusive per-block insertion offsets + per-block insert counts.
+
+    ``mask`` may be any numeric dtype; it is normalized to bool (``!= 0``)
+    first — every backend counts *lanes*, not values, so an int mask of 3s
+    inserts one element per lane, not three.  Float masks are rejected
+    (truthiness of a float lane is almost always a bug upstream).
+    """
     if mask.ndim != 2:
         raise ValueError(f"mask must be (nblocks, m), got {mask.shape}")
+    if jnp.issubdtype(mask.dtype, jnp.floating):
+        raise TypeError(f"mask must be bool or integer, got {mask.dtype}")
+    if mask.dtype != jnp.bool_:
+        mask = mask != 0
     try:
         fn = INSERTION_METHODS[method]
     except KeyError:
         raise ValueError(
             f"unknown insertion method {method!r}; options: {sorted(INSERTION_METHODS)}"
         ) from None
+    if mask.shape[1] == 0:  # empty wave: no offsets, zero counts
+        nblocks = mask.shape[0]
+        return (
+            jnp.zeros((nblocks, 0), jnp.int32),
+            jnp.zeros((nblocks,), jnp.int32),
+        )
     return fn(mask)

@@ -24,6 +24,9 @@ class LFVector:
     """One LFVector: geometric buckets + a size counter (host-side wrapper)."""
 
     _gg: GGArray
+    _planner: gg_ops.CapacityPlanner = dataclasses.field(
+        default_factory=gg_ops.CapacityPlanner
+    )
 
     @classmethod
     def create(
@@ -36,10 +39,15 @@ class LFVector:
 
     # -- paper Alg. 1: push_back -----------------------------------------
     def push_back(self, elems: jax.Array, method: str = "scan") -> jax.Array:
-        """Insert a batch of elements; grows (Alg. 2) if needed. Returns indices."""
+        """Insert a batch of elements; grows (Alg. 2) if needed. Returns indices.
+
+        Runs the amortized protocol: planner-reserved capacity + donated
+        append, so steady-state pushes issue no device→host transfer.
+        """
         elems = jnp.atleast_1d(elems)
-        self._gg = gg_ops.ensure_capacity(self._gg, elems.shape[0])
-        self._gg, pos = gg_ops.push_back(self._gg, elems[None], method=method)
+        self._gg = self._planner.reserve(self._gg, elems.shape[0])
+        self._gg, pos, headroom = gg_ops.append(self._gg, elems[None], method=method)
+        self._planner.note_append(self._gg, headroom)
         return pos[0]
 
     # -- element access ----------------------------------------------------

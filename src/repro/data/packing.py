@@ -35,6 +35,11 @@ class Packer:
             self.nblocks, self.b0, dtype=jnp.int32, flatten_impl=self.flatten_impl
         )
         self._bounds = gg.init(self.nblocks, max(self.b0 // 16, 1), dtype=jnp.int32)
+        # host mirrors of the per-block token/boundary counts: the packer
+        # constructs every mask itself, so greedy balancing and capacity
+        # planning need no device read per document
+        self._sizes_host = np.zeros((self.nblocks,), np.int64)
+        self._nbounds_host = np.zeros((self.nblocks,), np.int64)
 
     @property
     def total_tokens(self) -> int:
@@ -51,22 +56,33 @@ class Packer:
         return self._pipe.stats
 
     def add_document(self, tokens: list[int] | np.ndarray) -> None:
-        """Push one document into the least-loaded block (greedy balance)."""
+        """Push one document into the least-loaded block (greedy balance).
+
+        Fully host-planned: block choice and boundary positions come from the
+        host-side size mirror, and both appends run the donated sync-free
+        path — ingestion performs zero device→host transfers per document.
+        """
         toks = np.asarray(tokens, np.int32)
-        sizes = np.asarray(jax.device_get(self._pipe.sizes))
-        block = int(np.argmin(sizes))
+        block = int(np.argmin(self._sizes_host))
         elems = np.zeros((self.nblocks, len(toks)), np.int32)
         mask = np.zeros((self.nblocks, len(toks)), bool)
         elems[block] = toks
         mask[block] = True
         self._pipe.append(jnp.asarray(elems), jnp.asarray(mask))
-        # record the document end position (per-block boundary list)
-        self._bounds = gg.ensure_capacity(self._bounds, 1)
+        # record the document end position (per-block boundary list); the
+        # host mirror gives the exact max, so reserve never reads the device
+        self._bounds = gg.reserve(
+            self._bounds, 1, max_size=int(self._nbounds_host.max())
+        )
         bval = np.zeros((self.nblocks, 1), np.int32)
         bmask = np.zeros((self.nblocks, 1), bool)
-        bval[block] = int(sizes[block]) + len(toks)
+        bval[block] = int(self._sizes_host[block]) + len(toks)
         bmask[block] = True
-        self._bounds, _ = gg.push_back(self._bounds, jnp.asarray(bval), jnp.asarray(bmask))
+        self._bounds, _, _ = gg.append(
+            self._bounds, jnp.asarray(bval), jnp.asarray(bmask)
+        )
+        self._sizes_host[block] += len(toks)
+        self._nbounds_host[block] += 1
 
     def pack(self, batch: int, seq: int, pad_id: int = 0) -> dict:
         """Freeze → (batch, seq) token matrix + loss mask → thaw (resume grow)."""

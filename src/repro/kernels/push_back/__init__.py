@@ -1,0 +1,1 @@
+from repro.kernels.push_back import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""Fused push-back kernel — offsets + multi-level scatter in one tiled pass.
+
+The jnp append path is two dispatches: an exclusive prefix sum of the mask
+(``core.insertion``) and then one scatter per bucket level.  This kernel fuses
+the whole write phase: one grid step per block tile computes the per-block
+offsets on the VPU (``cumsum``), resolves the dense insert permutation with an
+exact int32 one-hot reduction (the ``dispatch_mxu`` idiom — no float
+accumulation, so results are bit-identical to the jnp oracle), and writes
+every bucket level in the same pass.
+
+The scatter is expressed as a *gather* per level — output slot ``start_b + j``
+takes wave element ``sel[start_b + j − size_row]`` when that offset is live —
+because TPU Pallas has no dynamic scatter primitive; a shifted-window gather
+over the (tiny) wave is the vectorizable formulation.  Bucket levels are
+passed through ``input_output_aliases`` so untouched slots are never copied:
+together with ``donate_argnums`` at the jit boundary this is what makes the
+donated append O(wave) writes instead of O(capacity) copies.
+
+VMEM note: like the flatten kernel, every bucket level's block-tile rows stay
+resident per grid step (total = per-block capacity · tile rows), plus an
+(m × m) one-hot for the permutation.  A production variant would keep levels
+in HBM and DMA only those the wave's position interval [min sizes, max pos)
+can touch; the index math is unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import indexing
+
+__all__ = ["push_back_pallas"]
+
+DEFAULT_BLOCK_TILE = 8
+
+
+def _push_back_kernel(mask_ref, elems_ref, sizes_ref, *refs, starts, bsizes):
+    nlev = len(bsizes)
+    level_in = refs[:nlev]
+    level_out = refs[nlev : 2 * nlev]
+    pos_ref = refs[2 * nlev]
+    nsz_ref = refs[2 * nlev + 1]
+
+    mask = mask_ref[...]  # (rows, m) int32 0/1
+    elems = elems_ref[...]  # (rows, m)
+    sizes = sizes_ref[...]  # (rows, 1) int32
+    rows, m = mask.shape
+
+    inc = jnp.cumsum(mask, axis=1)
+    off = inc - mask  # exclusive prefix sum (the insertion offsets)
+    count = inc[:, -1:]  # (rows, 1)
+    pos = sizes + off  # absolute in-block positions
+
+    # Dense insert permutation: sel[r, o] = the unique masked lane k with
+    # off[r, k] == o.  Exact int32 one-hot reduction — value bits never touch
+    # arithmetic, so the gather below is bit-identical to the jnp scatter.
+    iota_o = jax.lax.broadcasted_iota(jnp.int32, (rows, m, m), 1)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (rows, m, m), 2)
+    onehot = (off[:, None, :] == iota_o) & (mask[:, None, :] > 0)
+    sel = jnp.sum(jnp.where(onehot, iota_k, 0), axis=2)  # (rows, m)
+    gathered = jnp.take_along_axis(elems, sel, axis=1)  # wave in offset order
+
+    for b in range(nlev):
+        j = jax.lax.broadcasted_iota(jnp.int32, (rows, bsizes[b]), 1)
+        o = starts[b] + j - sizes  # wave offset landing at this slot
+        valid = (o >= 0) & (o < count)
+        oc = jnp.clip(o, 0, m - 1)
+        vals = jnp.take_along_axis(gathered, oc, axis=1)
+        level_out[b][...] = jnp.where(valid, vals, level_in[b][...])
+
+    pos_ref[...] = jnp.where(mask > 0, pos, -1)
+    nsz_ref[...] = sizes + count
+
+
+def push_back_pallas(
+    buckets: tuple[jax.Array, ...],  # level b: (nblocks, B0·2^b)
+    sizes: jax.Array,  # (nblocks, 1) int32
+    b0: int,
+    elems: jax.Array,  # (nblocks, m)
+    mask: jax.Array,  # (nblocks, m) int32 0/1
+    *,
+    block_tile: int = DEFAULT_BLOCK_TILE,
+    interpret: bool = False,
+) -> tuple[tuple[jax.Array, ...], jax.Array, jax.Array]:
+    """→ (new levels, positions (−1 where masked), new sizes (nblocks, 1))."""
+    nblocks, m = elems.shape
+    if nblocks % block_tile:
+        raise ValueError(f"nblocks {nblocks} must divide by tile {block_tile}")
+    nlev = len(buckets)
+    starts = indexing.bucket_starts(b0, nlev)
+    bsizes = indexing.bucket_sizes(b0, nlev)
+    kernel = functools.partial(_push_back_kernel, starts=starts, bsizes=bsizes)
+    row_spec = lambda width: pl.BlockSpec((block_tile, width), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        kernel,
+        grid=(nblocks // block_tile,),
+        in_specs=[row_spec(m), row_spec(m), row_spec(1)]
+        + [row_spec(sz) for sz in bsizes],
+        out_specs=[row_spec(sz) for sz in bsizes] + [row_spec(m), row_spec(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, sz), buckets[0].dtype) for sz in bsizes
+        ]
+        + [
+            jax.ShapeDtypeStruct((nblocks, m), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, 1), jnp.int32),
+        ],
+        # level inputs alias their outputs: untouched slots are never copied.
+        input_output_aliases={3 + b: b for b in range(nlev)},
+        interpret=interpret,
+    )(mask, elems, sizes, *buckets)
+    return tuple(outs[:nlev]), outs[nlev], outs[nlev + 1]

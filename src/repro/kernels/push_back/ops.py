@@ -1,0 +1,69 @@
+"""jit'd fused push-back: padding/dispatch around the Pallas kernel.
+
+``push_back_fused`` is the ``method="fused"`` backend of
+``core.ggarray.push_back``/``append``: per-block prefix-sum offsets and the
+scatter into every bucket level fused into one tiled pass.  The jnp
+scan-then-scatter path (also reachable as ``use_ref=True``) is the
+correctness oracle — results are bit-identical across the round-trip test
+matrix (``tests/kernels/test_push_back.py``).
+
+Scalar items only (like the flatten kernels' 2-D coverage); callers fall back
+to the jnp path for non-scalar ``item_shape``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.push_back import kernel as _kernel
+from repro.kernels.push_back import ref as _ref
+
+__all__ = ["push_back_fused"]
+
+
+@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+def push_back_fused(
+    buckets: tuple[jax.Array, ...],
+    sizes: jax.Array,  # (nblocks,) int32
+    b0: int,
+    elems: jax.Array,  # (nblocks, m)
+    mask: jax.Array,  # (nblocks, m) bool or 0/1 integers
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> tuple[tuple[jax.Array, ...], jax.Array, jax.Array]:
+    """→ (new bucket levels, new sizes (nblocks,), positions (−1 masked))."""
+    if mask.dtype != jnp.bool_:
+        mask = mask != 0
+    nblocks, m = elems.shape
+    if m == 0:
+        return buckets, sizes, jnp.zeros((nblocks, 0), jnp.int32)
+    if use_ref:
+        return _ref.push_back(buckets, sizes, b0, elems, mask)
+
+    tile = _kernel.DEFAULT_BLOCK_TILE
+    row_pad = (-nblocks) % tile
+    if row_pad:  # padded rows: mask all-False, sizes 0 — provably inert
+        buckets = tuple(common.pad_to(b, tile, axis=0) for b in buckets)
+        elems = common.pad_to(elems, tile, axis=0)
+        mask = common.pad_to(mask, tile, axis=0)
+        sizes = common.pad_to(sizes, tile, axis=0)
+    elems = common.pad_to(elems, common.MXU_LANE, axis=1)
+    mask = common.pad_to(mask, common.MXU_LANE, axis=1)
+
+    levels, pos, new_sizes = _kernel.push_back_pallas(
+        buckets,
+        sizes.reshape(-1, 1).astype(jnp.int32),
+        b0,
+        elems,
+        mask.astype(jnp.int32),
+        interpret=common.should_interpret(interpret),
+    )
+    return (
+        tuple(lvl[:nblocks] for lvl in levels),
+        new_sizes[:nblocks, 0],
+        pos[:nblocks, :m],
+    )

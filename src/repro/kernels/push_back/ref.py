@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused push-back kernel.
+
+Mirrors ``core.ggarray``'s scan-then-scatter path (``insertion_offsets``
+followed by ``_scatter_positions``) on raw bucket tuples, so the kernel can
+be checked bit-exactly without constructing a ``GGArray``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import indexing
+
+__all__ = ["push_back"]
+
+
+def push_back(
+    buckets: tuple[jax.Array, ...],  # level b: (nblocks, B0·2^b)
+    sizes: jax.Array,  # (nblocks,) int32
+    b0: int,
+    elems: jax.Array,  # (nblocks, m)
+    mask: jax.Array,  # (nblocks, m) bool
+) -> tuple[tuple[jax.Array, ...], jax.Array, jax.Array]:
+    """→ (new bucket levels, new sizes, positions (−1 where masked out))."""
+    mask_i = mask.astype(jnp.int32)
+    inclusive = jnp.cumsum(mask_i, axis=-1)
+    offsets = inclusive - mask_i
+    counts = inclusive[:, -1]
+    pos = sizes[:, None] + offsets
+
+    nbuckets = len(buckets)
+    starts = indexing.bucket_starts(b0, nbuckets)
+    bsizes = indexing.bucket_sizes(b0, nbuckets)
+    rows = jnp.arange(pos.shape[0], dtype=jnp.int32)[:, None]
+    out = []
+    for b in range(nbuckets):
+        li = pos - starts[b]
+        in_level = mask & (li >= 0) & (li < bsizes[b])
+        li = jnp.where(in_level, li, bsizes[b])
+        out.append(buckets[b].at[rows, li].set(elems, mode="drop"))
+    return tuple(out), sizes + counts, jnp.where(mask, pos, -1)

@@ -6,8 +6,10 @@ final element count is unknown (GGArray absorbs insertions copy-free), then a
 speed.  ``TwoPhasePipeline`` models that handoff explicitly:
 
 * **GROW** — the pipeline owns a :class:`repro.core.ggarray.GGArray`;
-  ``append`` runs ``ensure_capacity`` + ``push_back`` (block-local, no
-  collectives, O(log n) growth events total).
+  ``append`` runs the amortized growth protocol (``CapacityPlanner.reserve``
+  + donated ``gg.append`` — block-local, no collectives, zero host
+  transfers in steady state, O(log n) growth events and host contacts
+  total; DESIGN.md §2).
 * **freeze()** — one-shot flatten into a contiguous, globally-ordered
   :class:`FrozenArray` via the linear-time segmented-gather Pallas kernel
   (``kernels/flatten``, keyed off the ``block_starts`` prefix sums).  This is
@@ -87,6 +89,14 @@ class FrozenArray:
 class FreezeStats:
     """Lifecycle counters for benchmarks / engine accounting.
 
+    Counters the host knows for free (waves, phase switches, growths) are
+    plain ints.  ``elements_frozen`` is **lazy device-side**: each freeze
+    accumulates the live-count scalar with a device add and the total is
+    transferred only when the property is read — so freezing never forces a
+    host round-trip (the host-sync-free contract, DESIGN.md §2).
+    ``host_syncs`` counts the scalar device→host reads the growth protocol
+    actually issued (O(log n) per growth phase).
+
     ``last_freeze_s`` is wall time of the most recent ``freeze()`` — the
     *first* freeze of a given bucket structure includes jit trace/compile
     time, which off-TPU dwarfs the O(n) copy itself.  For warm numbers use
@@ -98,9 +108,17 @@ class FreezeStats:
     grow_events: int = 0
     freezes: int = 0
     thaws: int = 0
-    elements_frozen: int = 0
+    host_syncs: int = 0
     last_freeze_s: float = 0.0
     total_freeze_s: float = 0.0
+    elements_frozen_dev: Any = 0  # int or device scalar; summed lazily
+
+    @property
+    def elements_frozen(self) -> int:
+        """Materialize the device-side accumulator (one explicit transfer)."""
+        if isinstance(self.elements_frozen_dev, jax.Array):
+            self.elements_frozen_dev = int(jax.device_get(self.elements_frozen_dev))
+        return self.elements_frozen_dev
 
 
 class TwoPhasePipeline:
@@ -130,6 +148,7 @@ class TwoPhasePipeline:
         self._phase = Phase.GROW
         self.flatten_impl = flatten_impl
         self.stats = FreezeStats()
+        self._planner = gg.CapacityPlanner()  # fresh array: bound 0, no sync
 
     @classmethod
     def from_ggarray(cls, arr: gg.GGArray, *, flatten_impl: str = "segmented"):
@@ -142,6 +161,8 @@ class TwoPhasePipeline:
         pipe._phase = Phase.GROW
         pipe.flatten_impl = flatten_impl
         pipe.stats = FreezeStats()
+        pipe._planner = gg.CapacityPlanner.for_array(arr)  # one seed read
+        pipe.stats.host_syncs = pipe._planner.host_syncs
         return pipe
 
     # ---- introspection ---------------------------------------------------
@@ -179,17 +200,26 @@ class TwoPhasePipeline:
     def append(
         self, elems: jax.Array, mask: jax.Array | None = None, *, method: str = "scan"
     ) -> jax.Array:
-        """push_back up to ``m`` elements per block; grows capacity as needed.
+        """Donated push_back of up to ``m`` elements per block — sync-free.
 
         ``elems: (nblocks, m, *item_shape)`` → assigned in-block positions
-        ``(nblocks, m)`` (−1 where masked out).
+        ``(nblocks, m)`` (−1 where masked out).  Capacity planning goes
+        through the :class:`repro.core.ggarray.CapacityPlanner`: in the
+        steady state (host-known headroom covers the wave) the call issues
+        **zero** device→host transfers; only when a growth might be needed
+        does the planner read one scalar (the headroom flag the previous
+        donated append left behind).  The underlying buffers are donated —
+        a previously captured ``pipeline.array`` reference is dead after
+        this call.
         """
         self._require(Phase.GROW, "append")
         before = self._gg.nbuckets
-        self._gg = gg.ensure_capacity(self._gg, elems.shape[1])
+        self._gg = self._planner.reserve(self._gg, elems.shape[1])
         self.stats.grow_events += self._gg.nbuckets - before
-        self._gg, pos = gg.push_back(self._gg, elems, mask, method=method)
+        self._gg, pos, headroom = gg.append(self._gg, elems, mask, method=method)
+        self._planner.note_append(self._gg, headroom)
         self.stats.appends += 1
+        self.stats.host_syncs = self._planner.host_syncs
         return pos
 
     # ---- the handoff -----------------------------------------------------
@@ -213,7 +243,11 @@ class TwoPhasePipeline:
         )
         self._phase = Phase.FROZEN
         self.stats.freezes += 1
-        self.stats.elements_frozen += int(jax.device_get(total))
+        # lazy device-side accumulation — no device_get per freeze (and no
+        # host scalar upload: the int 0 start is replaced, not added)
+        prev = self.stats.elements_frozen_dev
+        is_zero_int = not isinstance(prev, jax.Array) and prev == 0
+        self.stats.elements_frozen_dev = total if is_zero_int else prev + total
         self.stats.last_freeze_s = dt
         self.stats.total_freeze_s += dt
         return self._frozen
@@ -225,12 +259,13 @@ class TwoPhasePipeline:
         if rebalance:
             frozen = self._frozen
             assert frozen is not None
-            self._gg = gg.from_flat(
-                frozen.data,
-                int(jax.device_get(frozen.size)),
-                self._gg.nblocks,
-                self._gg.b0,
-            )
+            n = int(jax.device_get(frozen.size))
+            self._gg = gg.from_flat(frozen.data, n, self._gg.nblocks, self._gg.b0)
+            # redistribution gives exact per-block sizes — reseed the bound
+            # without a device read, carrying the lifetime sync count over
+            planner = gg.CapacityPlanner(-(-n // self._gg.nblocks))
+            planner.host_syncs = self._planner.host_syncs
+            self._planner = planner
         self._frozen = None
         self._phase = Phase.GROW
         self.stats.thaws += 1

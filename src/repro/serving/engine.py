@@ -20,6 +20,14 @@ policy's growth event fires:
                   (an O(n) copy, but only O(log n) times over a generation —
                   the amortized freeze the runtime's TwoPhasePipeline models).
 
+The decode loop follows the host-sync-free protocol (DESIGN.md §2): the
+jitted step **donates** the cache pytree (K/V scatters reuse the input
+buffers instead of double-buffering the cache), the capacity/growth check is
+pure host arithmetic against a length mirror (decode appends exactly one
+slot per step), and sampled tokens are materialized once after the loop —
+so a generation's device→host contacts are O(log n) growth events plus one
+final token transfer, not O(steps).
+
 ``Engine.stats`` exposes alloc/copy/grow counters and byte volumes so the
 benchmarks can reproduce the paper's Table II / Fig. 6 structure.
 """
@@ -72,15 +80,8 @@ class Engine:
     # -- capacity of the current cache (seq slots) -------------------------
     def _capacity(self, caches) -> int:
         for slot, kind in enumerate(self.cfg.layout):
-            if kind != "attn":
-                continue
-            c = caches[slot]
-            if "k" in c:
-                return c["k"].shape[-3]
-            b0 = c["k0"].shape[-3]
-            from repro.core import indexing
-
-            return indexing.capacity(b0, kvcache._levels(c))
+            if kind == "attn":
+                return kvcache.capacity_of(caches[slot])
         return 1 << 30  # attention-free: no cache capacity limit
 
     def _grow(self, caches) -> list:
@@ -121,13 +122,19 @@ class Engine:
         return out
 
     def _decode_fn(self, caches):
-        """jit'd decode_step per cache pytree structure (growth ⇒ new entry)."""
+        """jit'd decode_step per cache pytree structure (growth ⇒ new entry).
+
+        The cache argument is **donated**: the step scatters the new K/V into
+        the input buffers instead of double-buffering the whole cache, and
+        the engine rebinds the returned pytree each step.  One executable per
+        bucket structure → O(log n) compiles over a generation.
+        """
         key = jax.tree.structure((caches,))
         if key not in self._decode_compiled:
             self.stats.compiles += 1
             cfg = self.cfg
 
-            @jax.jit
+            @functools.partial(jax.jit, donate_argnums=(2,))
             def fn(params, token, caches, length):
                 return steps.decode_step(params, token, caches, length, cfg)
 
@@ -167,21 +174,27 @@ class Engine:
             kvcache.cache_bytes(c) for c, k in zip(caches, cfg.layout) if k == "attn"
         )
         lengths = jnp.asarray(lens)
+        # Host mirror of the longest live context: decode appends exactly one
+        # slot per step, so the growth check is pure host arithmetic — the
+        # amortized protocol touches the device only at actual growth events
+        # (O(log n) per generation), never per step.
+        max_len_host = int(lens.max())
         out = [list(p) for p in prompts]
         self.key, k = jax.random.split(self.key)
-        token = sample(k, logits, temperature)
-        for i in range(B):
-            out[i].append(int(token[i]))
+        sampled = [sample(k, logits, temperature)]
 
         for _ in range(max_new_tokens - 1):
-            if int(jnp.max(lengths)) + 1 >= self._capacity(caches) and self.policy != "static":
+            if max_len_host + 1 >= self._capacity(caches) and self.policy != "static":
                 caches = self._grow(caches)
             fn = self._decode_fn(caches)
-            logits, caches = fn(self.params, token, caches, lengths)
+            logits, caches = fn(self.params, sampled[-1], caches, lengths)
             lengths = lengths + 1
+            max_len_host += 1
             self.stats.decode_steps += 1
             self.key, k = jax.random.split(self.key)
-            token = sample(k, logits, temperature)
-            for i in range(B):
-                out[i].append(int(token[i]))
+            sampled.append(sample(k, logits, temperature))
+        # one transfer for the whole generation, after the loop dispatched
+        tokens = np.asarray(jax.device_get(jnp.stack(sampled)))  # (T, B)
+        for i in range(B):
+            out[i].extend(int(t) for t in tokens[:, i])
         return out

@@ -37,6 +37,7 @@ from repro.models.attention import MASK_VALUE
 __all__ = [
     "init_cache",
     "cache_capacity",
+    "capacity_of",
     "append",
     "attend",
     "grow_ggarray",
@@ -141,6 +142,17 @@ def _is_ggarray(cache: Cache) -> bool:
 
 def _is_quant(cache: Cache) -> bool:
     return "ks0" in cache or "ks" in cache
+
+
+def capacity_of(cache: Cache) -> int:
+    """Sequence-slot capacity of one cache slot — static host-side metadata.
+
+    Capacity is pytree *structure* (shapes), never device data, so the
+    engine's per-step growth check costs zero transfers.
+    """
+    if "k" in cache:
+        return cache["k"].shape[-3]
+    return indexing.capacity(cache["k0"].shape[-3], _levels(cache))
 
 
 def grow_ggarray(cache: Cache, cfg: ModelConfig, levels: int = 1) -> Cache:

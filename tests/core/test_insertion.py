@@ -69,3 +69,29 @@ def test_rejects_bad_rank_and_method():
         insertion_offsets(jnp.ones((3,), bool))
     with pytest.raises(ValueError):
         insertion_offsets(jnp.ones((1, 3), bool), method="nope")
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_integer_mask_counts_lanes_not_values(method):
+    """An int mask of 3s is two truthy *lanes*, not six inserts."""
+    mask = jnp.asarray([[3, 0, 7], [0, 0, 1]], jnp.int32)
+    off, cnt = insertion_offsets(mask, method=method)
+    np.testing.assert_array_equal(np.asarray(cnt), [2, 1])
+    ref_off, _ = _ref_offsets(np.asarray(mask) != 0)
+    valid = np.asarray(mask) != 0
+    np.testing.assert_array_equal(
+        np.where(valid, np.asarray(off), 0), np.where(valid, ref_off, 0)
+    )
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_empty_wave_m0(method):
+    """m=0 waves are legal: empty offsets, zero counts — for every backend."""
+    off, cnt = insertion_offsets(jnp.zeros((3, 0), bool), method=method)
+    assert off.shape == (3, 0)
+    np.testing.assert_array_equal(np.asarray(cnt), [0, 0, 0])
+
+
+def test_float_mask_rejected():
+    with pytest.raises(TypeError):
+        insertion_offsets(jnp.ones((1, 3), jnp.float32))

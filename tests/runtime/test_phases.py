@@ -108,6 +108,31 @@ def test_thaw_rebalance_redistributes_evenly():
     assert sizes.sum() == 8 and sizes.max() == 2, sizes
 
 
+def test_append_loop_is_host_sync_free_and_stats_lazy(monkeypatch):
+    """Steady pipeline appends never read device memory; freeze stays lazy."""
+    calls = {"n": 0}
+    real_get = jax.device_get
+
+    def spy(x):
+        calls["n"] += 1
+        return real_get(x)
+
+    pipe = TwoPhasePipeline(nblocks=2, b0=4, nbuckets=4)  # capacity 60/block
+    wave = jnp.ones((2, 3))
+    pipe.append(wave)  # warm the executable
+    monkeypatch.setattr(jax, "device_get", spy)
+    with jax.transfer_guard("disallow"):
+        for _ in range(5):
+            pipe.append(wave)
+        pipe.freeze()  # lazy elements_frozen: no device_get either
+    assert calls["n"] == 0
+    assert pipe.stats.host_syncs == 0
+    assert pipe.stats.freezes == 1
+    # materializing the lazy counter is the one explicit read
+    assert pipe.stats.elements_frozen == 36
+    assert calls["n"] == 1
+
+
 def test_frozen_array_is_a_pytree():
     pipe = TwoPhasePipeline(nblocks=2, b0=2)
     pipe.append(jnp.ones((2, 2)))

@@ -71,9 +71,16 @@ def test_partial_tmp_dir_is_ignored(tmp_path):
 
 
 def test_grad_compression_error_feedback_converges():
-    """int8-compressed grads with error feedback still reduce loss."""
+    """int8-compressed grads with error feedback still reduce loss.
+
+    Deflaked: a 6-step run compared single-step losses, which sat inside the
+    quantization noise floor (~0.007 margin).  Run past the 5-step LR warmup
+    and compare window means so one noisy step can't flip the verdict; the
+    seed is fixed (LoopConfig.seed=0) so the trajectory is reproducible.
+    """
     out = loop_mod.run(
-        CFG, loop_mod.LoopConfig(steps=6, batch=2, seq=16, grad_compression=True, log_every=100)
+        CFG, loop_mod.LoopConfig(steps=20, batch=2, seq=16, grad_compression=True, log_every=100)
     )
-    assert out["losses"][-1] < out["losses"][0]
-    assert all(np.isfinite(out["losses"]))
+    losses = np.asarray(out["losses"])
+    assert losses[-3:].mean() < losses[:3].mean()
+    assert np.all(np.isfinite(losses))
