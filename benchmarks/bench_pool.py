@@ -1,0 +1,105 @@
+"""Slab-arena serving benchmark — sequences/s and pool utilization.
+
+Compares the paged-policy ``BatchEngine`` (one shared slab pool, continuous
+batching, slab reclamation) against the per-array ``ggarray`` policy
+(``Engine.generate``: every sequence owns a geometric bucket chain) on the
+same ragged request fleet:
+
+* ``seqs_per_s`` — completed sequences per wall second, end to end
+  (admission prefill + decode + reclamation).  CPU-relative like every
+  wall-clock number here: the claim under test is the *ordering*, not ms.
+* ``pool_utilization`` — peak live tokens / peak pool capacity.  The arena's
+  capacity bound (live + one slab per sequence, DESIGN.md §4) keeps this
+  high under ragged loads, where the per-array policy pays each sequence's
+  bucket-chain rounding (capacity ≈ next bucket boundary per sequence).
+* ``capacity_ratio`` — allocated token slots / peak live tokens for each
+  policy (the §V memory metric at fleet scale).
+
+Usage: ``python benchmarks/bench_pool.py [--smoke]`` → rows on stdout +
+``BENCH_pool.json`` (via benchmarks/run.py schema).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, emit, smoke_mode, write_json
+from repro.configs import reduced
+from repro.models import transformer
+from repro.serving import kvcache
+from repro.serving.engine import BatchEngine, Engine
+
+
+def _fleet(rng, nseqs, max_prompt):
+    return [
+        rng.integers(1, 200, rng.integers(1, max_prompt + 1)).tolist()
+        for _ in range(nseqs)
+    ]
+
+
+def main() -> None:
+    smoke = smoke_mode() or "--smoke" in sys.argv
+    nseqs = 6 if smoke else 12
+    max_prompt = 8 if smoke else 24
+    new_tokens = 5 if smoke else 16
+    max_batch = 4 if smoke else 8
+
+    cfg = reduced("qwen2.5-3b", cache_b0=4)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = _fleet(rng, nseqs, max_prompt)
+
+    # --- paged: shared pool, continuous batching --------------------------
+    warm = BatchEngine(params, cfg, max_batch=max_batch)
+    warm.run_all(prompts[:2], 2)  # compile cache warm-up
+    be = BatchEngine(params, cfg, max_batch=max_batch)
+    t0 = time.perf_counter()
+    be.run_all(prompts, new_tokens)
+    dt_paged = time.perf_counter() - t0
+    peak_live = be.stats.peak_live_tokens
+    util = peak_live / max(be.stats.peak_pool_tokens, 1)
+    emit("pool_paged_seqs_per_s", dt_paged / nseqs * 1e6, f"{nseqs / dt_paged:.2f}/s")
+    emit(
+        "pool_paged_utilization",
+        util * 100.0,
+        f"peak_live={peak_live} pool={be.stats.peak_pool_tokens} "
+        f"reused={be.stats.reused_slabs}",
+    )
+    emit(
+        "pool_paged_capacity_ratio",
+        be.stats.peak_pool_tokens / max(peak_live, 1),
+        f"bound<2x+slab/seq grow_events={be.stats.pool_grow_events}",
+    )
+
+    # --- ggarray oracle: one bucket chain per sequence --------------------
+    eng = Engine(params, cfg, policy="ggarray", max_len=256)
+    eng.generate(prompts[:2], 2)  # warm-up
+    eng = Engine(params, cfg, policy="ggarray", max_len=256)
+    t0 = time.perf_counter()
+    eng.generate(prompts, new_tokens)
+    dt_gg = time.perf_counter() - t0
+    # per-sequence bucket-chain capacity at end of generation
+    lens = [len(p) + new_tokens for p in prompts]
+    caps = [kvcache.cache_capacity(cfg, "ggarray", n) for n in lens]
+    live = sum(lens)
+    emit("pool_ggarray_seqs_per_s", dt_gg / nseqs * 1e6, f"{nseqs / dt_gg:.2f}/s")
+    emit(
+        "pool_ggarray_capacity_ratio",
+        sum(caps) / live,
+        f"live={live} allocated={sum(caps)} (per-array bucket rounding)",
+    )
+    emit(
+        "pool_capacity_advantage",
+        (sum(caps) / live) / max(be.stats.peak_pool_tokens / max(peak_live, 1), 1e-9),
+        "arena slots per ggarray slot at equal live data",
+    )
+
+
+if __name__ == "__main__":
+    start = len(Row.rows)
+    print("name,us_per_call,derived")
+    main()
+    write_json("pool", Row.rows[start:])

@@ -21,6 +21,7 @@ def main() -> None:
         bench_memory,
         bench_nblocks,
         bench_operations,
+        bench_pool,
         bench_two_phase,
     )
     from benchmarks.common import Row, write_json
@@ -32,9 +33,10 @@ def main() -> None:
         bench_insertion,    # Fig. 4 col 1
         bench_nblocks,      # Fig. 4 cols 2-3
         bench_operations,   # Table II / Fig. 5
-        bench_append,       # host-sync-free grow protocol (tentpole headline)
+        bench_append,       # host-sync-free grow protocol (PR 2 headline)
         bench_two_phase,    # Fig. 6
         bench_kvcache,      # beyond-paper serving payoff
+        bench_pool,         # slab arena: fleet capacity + sequences/s
     ):
         start = len(Row.rows)
         try:

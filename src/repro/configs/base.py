@@ -4,7 +4,7 @@ A ``ModelConfig`` describes one architecture from the assigned pool.  Layer
 heterogeneity (Jamba's 1:7 Mamba:attention interleave, every-other-layer MoE)
 is expressed as a repeating **period**: ``layout`` lists the layer kinds of one
 period and the stack scans ``n_layers // len(layout)`` periods — keeping the
-lowered HLO O(one period) regardless of depth (DESIGN.md §4).
+lowered HLO O(one period) regardless of depth (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -13,7 +13,7 @@ from typing import Literal, Sequence
 
 LayerKind = Literal["attn", "mamba"]
 AttentionImpl = Literal["blockwise", "blockwise_tri", "xla", "pallas"]
-CachePolicy = Literal["static", "semistatic", "ggarray"]
+CachePolicy = Literal["static", "semistatic", "ggarray", "two_phase", "paged"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +87,11 @@ class ModelConfig:
     cache_policy: CachePolicy = "ggarray"
     cache_b0: int = 2048  # first KV bucket length (GGArray B0 for the cache)
     cache_quant: bool = False  # int8 KV cache (per-token/head scales) — §Perf
+    # paged policy (slab arena, DESIGN.md §4): tokens per slab (0 → cache_b0;
+    # equality with cache_b0 is what makes the paged level walk bit-exact vs
+    # the ggarray bucket walk) and the attend implementation behind it
+    cache_slab: int = 0
+    paged_attend_impl: Literal["levels", "pallas"] = "levels"
     insertion_method: str = "scan"
     remat: bool = True
 
@@ -112,6 +117,11 @@ class ModelConfig:
     @property
     def n_periods(self) -> int:
         return self.n_layers // len(self.layout)
+
+    @property
+    def slab_tokens(self) -> int:
+        """Tokens per KV slab under the paged cache policy."""
+        return self.cache_slab or self.cache_b0
 
     @property
     def group(self) -> int:

@@ -3,7 +3,7 @@ vocab=202048, MoE 16e top-1, early fusion. [hf:meta-llama/Llama-4-Scout-17B-16E;
 unverified]
 
 Treated as full attention (iRoPE chunked-attention variants out of scope →
-long_500k skipped, DESIGN.md §5).  Early fusion is realized as the multimodal
+long_500k skipped, DESIGN.md §6).  Early fusion is realized as the multimodal
 prefix-embedding path (stub frontend).
 """
 from repro.configs.base import ModelConfig, MoEConfig

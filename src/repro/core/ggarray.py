@@ -28,6 +28,7 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import indexing
 from repro.core.insertion import insertion_offsets
@@ -178,6 +179,15 @@ class CapacityPlanner:
     Each scalar read either halves the pessimism slack or precedes a
     geometric growth, so total host contacts stay O(log n) for steady
     appends (Tarjan & Zwick 2022's resizable-array bound, DESIGN.md §2).
+
+    **Skewed masked loads**: when the caller passes a *host-known* mask
+    (numpy / Python ints — never a device array) to ``reserve``, the planner
+    advances a per-block bound vector by the actual per-block mask-lane
+    counts instead of advancing the scalar bound by ``m``.  A workload that
+    funnels all inserts into one block (``data/packing.py``'s greedy
+    balancer is the motivating case) then syncs when *that block* nears
+    capacity, not after ``capacity / m`` waves of mostly-empty lanes —
+    adversarially masked loads stay at O(log n) host contacts too.
     """
 
     def __init__(self, size_upper_bound: int = 0):
@@ -185,6 +195,7 @@ class CapacityPlanner:
         self.host_syncs = 0  # scalar device→host reads issued by the planner
         self.grow_events = 0
         self._headroom: tuple[jax.Array, int] | None = None  # (flag, cap then)
+        self._ub_vec: "np.ndarray | None" = None  # per-block bound (mask path)
 
     @classmethod
     def for_array(cls, gg: GGArray) -> "CapacityPlanner":
@@ -204,17 +215,57 @@ class CapacityPlanner:
         self.host_syncs += 1
         return cap_then - int(jax.device_get(flag))
 
-    def reserve(self, gg: GGArray, n_new_per_block: int) -> GGArray:
+    @staticmethod
+    def _host_lane_counts(mask: Any, nblocks: int) -> "np.ndarray | None":
+        """Per-block enabled-lane counts iff ``mask`` is host-known.
+
+        Device arrays return None — converting one would itself be the
+        blocking transfer the planner exists to avoid.
+        """
+        if mask is None or isinstance(mask, jax.Array):
+            return None
+        arr = np.asarray(mask)
+        if arr.ndim != 2 or arr.shape[0] != nblocks:
+            return None
+        return (arr != 0).sum(axis=1).astype(np.int64)
+
+    def reserve(
+        self, gg: GGArray, n_new_per_block: int, *, mask: Any = None
+    ) -> GGArray:
         cap = gg.capacity_per_block
-        if self.size_ub + n_new_per_block <= cap:
+        counts = self._host_lane_counts(mask, gg.nblocks)
+        if counts is not None:
+            if self._ub_vec is None or len(self._ub_vec) != gg.nblocks:
+                self._ub_vec = np.full((gg.nblocks,), self.size_ub, np.int64)
+            if int((self._ub_vec + counts).max()) <= cap:
+                self._ub_vec += counts  # skew-exact steady state: no contact
+                self.size_ub = int(self._ub_vec.max())
+                return gg
+        elif self.size_ub + n_new_per_block <= cap:
             self.size_ub += n_new_per_block  # steady state: zero host contact
+            if self._ub_vec is not None:
+                self._ub_vec += n_new_per_block  # device mask: pessimistic
             return gg
-        if self._headroom is not None:
-            true_max = self.observed_max()
-        else:
-            true_max = int(jax.device_get(jnp.max(gg.sizes)))
+        if counts is not None:
+            # one vector transfer re-seeds the per-block bounds exactly
+            sizes = np.asarray(jax.device_get(gg.sizes), np.int64)
             self.host_syncs += 1
-        self.size_ub = true_max + n_new_per_block
+            self._headroom = None
+            self._ub_vec = sizes + counts
+            self.size_ub = int(self._ub_vec.max())
+            before = gg.nbuckets
+            # grow for the skew-exact need, not max + m pessimism
+            gg = reserve(gg, 0, max_size=self.size_ub)
+            self.grow_events += gg.nbuckets - before
+            return gg
+        else:
+            if self._headroom is not None:
+                true_max = self.observed_max()
+            else:
+                true_max = int(jax.device_get(jnp.max(gg.sizes)))
+                self.host_syncs += 1
+            self.size_ub = true_max + n_new_per_block
+            self._ub_vec = None  # scalar re-seed invalidates the vector bound
         before = gg.nbuckets
         gg = reserve(gg, n_new_per_block, max_size=true_max)
         self.grow_events += gg.nbuckets - before
@@ -269,14 +320,14 @@ def _push_back_impl(
         raise TypeError(f"mask must be bool or integer, got {mask.dtype}")
     if mask.dtype != jnp.bool_:
         mask = mask != 0  # count lanes, not values (insertion_offsets contract)
-    if method == "fused" and not gg.item_shape and elems.shape[1] > 0:
+    if method == "fused" and elems.shape[1] > 0:
         from repro.kernels.push_back import ops as push_back_ops
 
         buckets, sizes, pos = push_back_ops.push_back_fused(
             gg.buckets, gg.sizes, gg.b0, elems, mask
         )
         return dataclasses.replace(gg, buckets=buckets, sizes=sizes), pos
-    if method == "fused":  # non-scalar payloads / empty waves: jnp fallback
+    if method == "fused":  # empty waves: jnp fallback
         method = "scan"
     offsets, counts = insertion_offsets(mask, method=method)
     pos = gg.sizes[:, None] + offsets

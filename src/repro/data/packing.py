@@ -24,16 +24,33 @@ __all__ = ["Packer"]
 
 @dataclasses.dataclass
 class Packer:
-    """Greedy block-local document packer over a two-phase token buffer."""
+    """Greedy block-local document packer over a two-phase token buffer.
+
+    ``backend="pipeline"`` (default) owns per-block GGArray buckets;
+    ``backend="arena"`` runs the same lifecycle over a shared slab pool
+    (``repro.pool.SlabArena`` with one logical array per block) — many
+    packers / streams can then share one device pool, with per-block growth
+    claiming slabs instead of allocating buckets (DESIGN.md §4).
+    """
 
     nblocks: int = 8
     b0: int = 256
     flatten_impl: str = "segmented"
+    backend: str = "pipeline"
 
     def __post_init__(self):
-        self._pipe = TwoPhasePipeline(
-            self.nblocks, self.b0, dtype=jnp.int32, flatten_impl=self.flatten_impl
-        )
+        if self.backend == "arena":
+            from repro.pool import SlabArena
+
+            self._pipe = TwoPhasePipeline.from_arena(
+                SlabArena(self.nblocks, self.b0, dtype=jnp.int32)
+            )
+        elif self.backend == "pipeline":
+            self._pipe = TwoPhasePipeline(
+                self.nblocks, self.b0, dtype=jnp.int32, flatten_impl=self.flatten_impl
+            )
+        else:
+            raise ValueError(f"unknown Packer backend {self.backend!r}")
         self._bounds = gg.init(self.nblocks, max(self.b0 // 16, 1), dtype=jnp.int32)
         # host mirrors of the per-block token/boundary counts: the packer
         # constructs every mask itself, so greedy balancing and capacity
@@ -68,7 +85,10 @@ class Packer:
         mask = np.zeros((self.nblocks, len(toks)), bool)
         elems[block] = toks
         mask[block] = True
-        self._pipe.append(jnp.asarray(elems), jnp.asarray(mask))
+        # the mask stays a host array: the planner advances the target
+        # block's bound by len(toks) and every other block's by 0, so the
+        # greedy-balanced skew never inflates the scalar upper bound
+        self._pipe.append(jnp.asarray(elems), mask)
         # record the document end position (per-block boundary list); the
         # host mirror gives the exact max, so reserve never reads the device
         self._bounds = gg.reserve(

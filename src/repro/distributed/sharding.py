@@ -1,6 +1,6 @@
 """Sharding rules: parameter-name → logical axes → mesh PartitionSpec.
 
-Scheme (DESIGN.md §4):
+Scheme (DESIGN.md §5):
 - **TP** over ``'model'``: d_ff (all archs divide by 16), experts (all MoE
   archs have exactly 16), padded vocab, attention heads *when divisible*
   (else head_dim when divisible, else replicated — starcoder2's 24H and

@@ -1,0 +1,10 @@
+"""Paged kernels — gather / attend / append through a slab indirection table.
+
+The arena subsystem (``repro.pool``) stores many logical growable arrays in
+one device pool of fixed-size slabs; these kernels are the device-side read
+and write paths that follow the per-array page tables instead of owned
+buffers (DESIGN.md §4).
+"""
+from repro.kernels.paged import ops, ref
+
+__all__ = ["ops", "ref"]

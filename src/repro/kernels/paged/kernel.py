@@ -1,0 +1,234 @@
+"""Paged Pallas kernels — read/write a slab pool through page tables.
+
+Three kernels back the arena subsystem (``repro.pool``, DESIGN.md §4):
+
+``paged_gather_pallas``
+    Materialize each logical array's contiguous view by walking its page
+    table — the indirection-table read the arena's flatten path uses.
+
+``paged_attend_pallas``
+    Flash-decode attention against paged K/V pools: grid ``(batch, kv_heads,
+    pages)`` with the online-softmax state in VMEM scratch (the
+    ``kernels/decode_attention`` structure), the per-step KV tile selected by
+    the page table.  Pages past the live length — GGArray tail slabs — are
+    skipped entirely.
+
+``slab_append_pallas``
+    The push_back prefix-sum machinery (exclusive mask scan + exact int32
+    one-hot permutation, see ``kernels/push_back``) retargeted at the pool:
+    one grid step per slab tile resolves each slot's wave element through the
+    slab's *owner* row, and the pool aliases its output so untouched slabs
+    are never copied.
+
+VMEM note: like the flatten/push_back kernels, pool operands are resident
+per grid step (fine in interpret mode / at test scale).  A production
+variant keeps pools in HBM and DMAs one slab per grid step with the page
+table as a ``PrefetchScalarGridSpec`` scalar operand driving the index_map —
+the index math is unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.paged.ref import MASK_VALUE
+
+__all__ = [
+    "paged_gather_pallas",
+    "paged_attend_pallas",
+    "slab_append_pallas",
+    "DEFAULT_ROW_TILE",
+]
+
+DEFAULT_ROW_TILE = 8
+
+
+# --------------------------------------------------------------------------
+# gather — logical contiguous view through the page table.
+# --------------------------------------------------------------------------
+
+def _gather_kernel(pages_ref, pool_ref, out_ref):
+    pages = pages_ref[...]  # (rows, P) int32
+    pool = pool_ref[...]  # (S, T, D)
+    rows, P = pages.shape
+    S, T, D = pool.shape
+    idx = jnp.clip(pages, 0, S - 1).reshape(rows * P)
+    g = jnp.take(pool, idx, axis=0).reshape(rows, P, T, D)
+    valid = (pages >= 0)[:, :, None, None]
+    out_ref[...] = jnp.where(valid, g, 0).reshape(rows, P * T, D)
+
+
+def paged_gather_pallas(
+    pool: jax.Array,  # (S, T, D)
+    pages: jax.Array,  # (N, P) int32
+    *,
+    row_tile: int = DEFAULT_ROW_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """→ (N, P·T, D) contiguous logical views (zeros under page −1)."""
+    N, P = pages.shape
+    S, T, D = pool.shape
+    if N % row_tile:
+        raise ValueError(f"narrays {N} must divide by tile {row_tile}")
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(N // row_tile,),
+        in_specs=[
+            pl.BlockSpec((row_tile, P), lambda i: (i, 0)),
+            pl.BlockSpec((S, T, D), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, P * T, D), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, P * T, D), pool.dtype),
+        interpret=interpret,
+    )(pages, pool)
+
+
+# --------------------------------------------------------------------------
+# attend — flash-decode through the page table.
+# --------------------------------------------------------------------------
+
+def _attend_kernel(
+    len_ref, pages_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, slab_tokens, n_pages,
+):
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0, 0]
+    slab = pages_ref[0, p]
+
+    @pl.when((slab >= 0) & (p * slab_tokens < kv_len))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, pl.ds(jnp.maximum(slab, 0), 1)][0]  # (T, D)
+        v = v_ref[0, pl.ds(jnp.maximum(slab, 0), 1)][0]
+        s = jnp.dot(q, k.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+        kpos = p * slab_tokens + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, MASK_VALUE)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pw = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(pw, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            pw, v.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attend_pallas(
+    q: jax.Array,  # (B, KH, G, D) f32, pre-scaled
+    k_pool: jax.Array,  # (KH, S, T, D) head-major pool
+    v_pool: jax.Array,  # (KH, S, T, D)
+    pages: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KH, G, D = q.shape
+    _, S, T, _ = k_pool.shape
+    P = pages.shape[1]
+    kernel = functools.partial(_attend_kernel, slab_tokens=T, n_pages=P)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KH, P),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, p: (b, 0)),
+            pl.BlockSpec((1, P), lambda b, h, p: (b, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p: (b, h, 0, 0)),
+            pl.BlockSpec((1, S, T, D), lambda b, h, p: (h, 0, 0, 0)),
+            pl.BlockSpec((1, S, T, D), lambda b, h, p: (h, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.reshape(B, 1).astype(jnp.int32), pages, q, k_pool, v_pool)
+
+
+# --------------------------------------------------------------------------
+# slab append — multi-array wave insert, scattered through slab ownership.
+# --------------------------------------------------------------------------
+
+def _slab_append_kernel(
+    mask_ref, elems_ref, sizes_ref, owners_ref, bases_ref, pool_in_ref, pool_out_ref
+):
+    mask = mask_ref[...]  # (N, m) int32 0/1
+    elems = elems_ref[...]  # (N, m, D)
+    sizes = sizes_ref[...]  # (N, 1) int32
+    N, m = mask.shape
+
+    # push_back machinery: exclusive scan + exact one-hot insert permutation
+    inc = jnp.cumsum(mask, axis=1)
+    off = inc - mask
+    count = inc[:, -1:]  # (N, 1)
+    iota_o = jax.lax.broadcasted_iota(jnp.int32, (N, m, m), 1)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (N, m, m), 2)
+    onehot = (off[:, None, :] == iota_o) & (mask[:, None, :] > 0)
+    sel = jnp.sum(jnp.where(onehot, iota_k, 0), axis=2)
+    gathered = jnp.take_along_axis(elems, sel[:, :, None], axis=1)  # (N, m, D)
+
+    owners = owners_ref[...][:, 0]  # (tile,) — owner array per slab, −1 free
+    bases = bases_ref[...]  # (tile, 1) logical position of slot 0
+    own = jnp.clip(owners, 0, N - 1)
+    tile, T = pool_in_ref.shape[:2]
+    j = jax.lax.broadcasted_iota(jnp.int32, (tile, T), 1)
+    o = bases + j - jnp.take(sizes[:, 0], own)[:, None]
+    valid = (owners[:, None] >= 0) & (o >= 0) & (o < jnp.take(count[:, 0], own)[:, None])
+    vals = jnp.take_along_axis(
+        jnp.take(gathered, own, axis=0), jnp.clip(o, 0, m - 1)[:, :, None], axis=1
+    )
+    pool_out_ref[...] = jnp.where(valid[:, :, None], vals, pool_in_ref[...])
+
+
+def slab_append_pallas(
+    pool: jax.Array,  # (S, T, D)
+    owners: jax.Array,  # (S, 1) int32
+    bases: jax.Array,  # (S, 1) int32
+    sizes: jax.Array,  # (N, 1) int32
+    elems: jax.Array,  # (N, m, D)
+    mask: jax.Array,  # (N, m) int32 0/1
+    *,
+    slab_tile: int = DEFAULT_ROW_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """→ new pool (S, T, D); untouched slabs alias through unscathed."""
+    S, T, D = pool.shape
+    N, m = mask.shape
+    if S % slab_tile:
+        raise ValueError(f"n_slabs {S} must divide by tile {slab_tile}")
+    row = lambda width: pl.BlockSpec((slab_tile, width), lambda i: (i, 0))
+    return pl.pallas_call(
+        _slab_append_kernel,
+        grid=(S // slab_tile,),
+        in_specs=[
+            pl.BlockSpec((N, m), lambda i: (0, 0)),
+            pl.BlockSpec((N, m, D), lambda i: (0, 0, 0)),
+            pl.BlockSpec((N, 1), lambda i: (0, 0)),
+            row(1),
+            row(1),
+            pl.BlockSpec((slab_tile, T, D), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((slab_tile, T, D), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, T, D), pool.dtype),
+        input_output_aliases={5: 0},  # pool in-place: O(wave) writes
+        interpret=interpret,
+    )(mask, elems, sizes, owners, bases, pool)

@@ -1,0 +1,139 @@
+"""jit'd paged ops: padding/dispatch around the paged Pallas kernels.
+
+All three ops flatten ``item_shape`` into one trailing feature axis around
+the 3-D/4-D kernels (the ``kernels/push_back`` convention) and pad row/slab
+counts to the kernel tile with provably inert rows (page −1 / owner −1).
+``use_ref=True`` runs the jnp oracle — bit-identical in interpret mode.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.paged import kernel as _kernel
+from repro.kernels.paged import ref as _ref
+
+__all__ = ["paged_gather", "paged_attend", "slab_append", "slab_append_donated"]
+
+
+def _flat_item(x: jax.Array, lead: int) -> tuple[jax.Array, tuple[int, ...]]:
+    """Collapse everything past ``lead`` leading dims into one feature axis."""
+    item = x.shape[lead:]
+    d = 1
+    for dim in item:
+        d *= dim
+    return x.reshape(*x.shape[:lead], d), item
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_ref"))
+def paged_gather(
+    pool: jax.Array,  # (S, T, *item)
+    pages: jax.Array,  # (N, P) int32
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """→ (N, P·T, *item) contiguous logical views (zeros under page −1)."""
+    N, P = pages.shape
+    pool3, item = _flat_item(pool, 2)
+    if use_ref:
+        out = _ref.gather_pages(pool3, pages)
+    else:
+        tile = _kernel.DEFAULT_ROW_TILE
+        padded = common.pad_to(pages, tile, axis=0, value=-1)
+        out = _kernel.paged_gather_pallas(
+            pool3, padded, interpret=common.should_interpret(interpret)
+        )[:N]
+    return out.reshape(N, P * pool.shape[1], *item)
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_ref"))
+def paged_attend(
+    q: jax.Array,  # (B, KH, G, D) f32, pre-scaled
+    k_pool: jax.Array,  # (S, T, KH, D) — token-major pool (cache layout)
+    v_pool: jax.Array,  # (S, T, KH, D)
+    pages: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,) int32
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """→ (B, KH, G, D) f32 attention output through the page table.
+
+    Pools arrive in the cache's token-major ``(slab, slot, head, dim)``
+    layout and are transposed head-major for the kernel's per-head blocking
+    (a production pool would be laid out head-major to begin with).
+    """
+    kh = k_pool.transpose(2, 0, 1, 3)  # (KH, S, T, D)
+    vh = v_pool.transpose(2, 0, 1, 3)
+    if use_ref:
+        return _ref.attend_paged(q, kh, vh, pages, lengths)
+    return _kernel.paged_attend_pallas(
+        q, kh, vh, pages, lengths, interpret=common.should_interpret(interpret)
+    )
+
+
+def _slab_append(
+    pool: jax.Array,  # (S, T, *item)
+    owners: jax.Array,  # (S,) int32 — owning array per slab, −1 free
+    bases: jax.Array,  # (S,) int32 — logical position of each slab's slot 0
+    sizes: jax.Array,  # (N,) int32
+    elems: jax.Array,  # (N, m, *item)
+    mask: jax.Array,  # (N, m) bool or 0/1 int
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """→ (new pool, new sizes (N,), positions (N, m) (−1 where masked))."""
+    if mask.dtype != jnp.bool_:
+        mask = mask != 0
+    S, T = pool.shape[:2]
+    N, m = mask.shape
+    if m == 0:
+        return pool, sizes, jnp.zeros((N, 0), jnp.int32)
+    pool3, item = _flat_item(pool, 2)
+    elems3, _ = _flat_item(elems, 2)
+    if use_ref:
+        new_pool, new_sizes, pos = _ref.slab_append(
+            pool3, owners, bases, sizes.astype(jnp.int32), elems3, mask
+        )
+        return new_pool.reshape(pool.shape), new_sizes, pos
+    # positions/counts are pure mask arithmetic — recomputed in-kernel for
+    # the scatter, emitted here for the caller (same exclusive scan)
+    mask_i = mask.astype(jnp.int32)
+    inc = jnp.cumsum(mask_i, axis=1)
+    counts = inc[:, -1]
+    pos = sizes[:, None].astype(jnp.int32) + inc - mask_i
+    tile = _kernel.DEFAULT_ROW_TILE
+    pool_p = common.pad_to(pool3, tile, axis=0)
+    owners_p = common.pad_to(owners.reshape(S, 1), tile, axis=0, value=-1)
+    bases_p = common.pad_to(bases.reshape(S, 1), tile, axis=0)
+    elems_p = common.pad_to(elems3, common.MXU_LANE, axis=1)
+    mask_p = common.pad_to(mask_i, common.MXU_LANE, axis=1)
+    new_pool = _kernel.slab_append_pallas(
+        pool_p,
+        owners_p,
+        bases_p,
+        sizes.reshape(N, 1).astype(jnp.int32),
+        elems_p,
+        mask_p,
+        interpret=common.should_interpret(interpret),
+    )[:S]
+    return (
+        new_pool.reshape(pool.shape),
+        sizes + counts,
+        jnp.where(mask, pos, -1),
+    )
+
+
+slab_append = partial(jax.jit, static_argnames=("interpret", "use_ref"))(
+    _slab_append
+)
+# The arena's hot path: the pool is donated, so together with the kernel's
+# input_output_aliases an append is O(wave) writes, not O(pool) copies.
+slab_append_donated = jax.jit(
+    _slab_append, static_argnames=("interpret", "use_ref"), donate_argnums=(0,)
+)

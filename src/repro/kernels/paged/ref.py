@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for the paged kernels.
+
+Each mirrors its Pallas kernel's accumulation structure op-for-op (same
+segment widths, same reduction axes, same masked-update formulation), so
+interpret-mode kernel runs are **bit-identical** to these references — the
+contract the test matrix asserts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gather_pages", "attend_paged", "slab_append", "MASK_VALUE"]
+
+MASK_VALUE = -1e30  # matches models.attention.MASK_VALUE (serving softmax mask)
+
+
+def gather_pages(pool: jax.Array, pages: jax.Array) -> jax.Array:
+    """pool (S, T, D), pages (N, P) int32 → (N, P·T, D); page < 0 → zeros."""
+    S, T, D = pool.shape
+    N, P = pages.shape
+    out = pool[jnp.clip(pages, 0, max(S - 1, 0))]  # (N, P, T, D)
+    valid = (pages >= 0)[:, :, None, None]
+    return jnp.where(valid, out, 0).reshape(N, P * T, D)
+
+
+def attend_paged(
+    q: jax.Array,  # (B, KH, G, D) f32, pre-scaled
+    k_pool: jax.Array,  # (KH, S, T, D) — head-major pool layout
+    v_pool: jax.Array,  # (KH, S, T, D)
+    pages: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,) int32 live tokens per sequence
+) -> jax.Array:
+    """One-token attention through the page table, page-at-a-time.
+
+    Online-softmax merge in page order — the flash-decode structure the
+    Pallas kernel runs per grid step.  A page past the live length (or an
+    unclaimed ``-1`` entry) leaves the state untouched, exactly like the
+    kernel's ``pl.when`` skip.
+    """
+    B, KH, G, D = q.shape
+    S, T = k_pool.shape[1:3]
+    P = pages.shape[1]
+    m = jnp.full((B, KH, G), MASK_VALUE, jnp.float32)
+    l = jnp.zeros((B, KH, G), jnp.float32)
+    acc = jnp.zeros((B, KH, G, D), jnp.float32)
+    lengths = lengths.astype(jnp.int32)
+    for p in range(P):
+        slab = pages[:, p]  # (B,)
+        k = jnp.take(k_pool, jnp.maximum(slab, 0), axis=1)  # (KH, B, T, D)
+        v = jnp.take(v_pool, jnp.maximum(slab, 0), axis=1)
+        s = jnp.einsum("bkgd,kbtd->bkgt", q, k.astype(jnp.float32))
+        kpos = p * T + jnp.arange(T, dtype=jnp.int32)
+        live = kpos[None, :] < lengths[:, None]  # (B, T)
+        s = jnp.where(live[:, None, None, :], s, MASK_VALUE)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        pw = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(pw, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgt,kbtd->bkgd", pw, v.astype(jnp.float32)
+        )
+        # page skipped entirely (kernel's pl.when) when dead for a sequence
+        use = ((slab >= 0) & (p * T < lengths))[:, None, None]
+        m = jnp.where(use, m_new, m)
+        l = jnp.where(use, l_new, l)
+        acc = jnp.where(use[..., None], acc_new, acc)
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def slab_append(
+    pool: jax.Array,  # (S, T, D)
+    owners: jax.Array,  # (S,) int32 — owning array per slab, −1 = free
+    bases: jax.Array,  # (S,) int32 — logical position of the slab's slot 0
+    sizes: jax.Array,  # (N,) int32 — live elements per array
+    elems: jax.Array,  # (N, m, D)
+    mask: jax.Array,  # (N, m) bool
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """→ (new pool, new sizes, positions (N, m) (−1 where masked)).
+
+    The push_back prefix-sum machinery on an ownership-indirected pool:
+    per-array exclusive-scan offsets order the wave, and each slab slot
+    ``bases[s] + j`` takes wave element ``offset = bases[s] + j − sizes[o]``
+    of its owner ``o`` — the same scatter-as-gather formulation as
+    ``kernels/push_back``, with one extra owner indirection per slab row.
+    """
+    mask_i = mask.astype(jnp.int32)
+    inc = jnp.cumsum(mask_i, axis=1)
+    off = inc - mask_i
+    counts = inc[:, -1]  # (N,)
+    pos = sizes[:, None] + off
+
+    N, m = mask.shape
+    iota_o = jax.lax.broadcasted_iota(jnp.int32, (N, m, m), 1)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (N, m, m), 2)
+    onehot = (off[:, None, :] == iota_o) & (mask_i[:, None, :] > 0)
+    sel = jnp.sum(jnp.where(onehot, iota_k, 0), axis=2)
+    gathered = jnp.take_along_axis(elems, sel[:, :, None], axis=1)  # (N, m, D)
+
+    own = jnp.clip(owners, 0, N - 1)
+    S, T = pool.shape[:2]
+    j = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+    o = bases[:, None] + j - sizes[own][:, None]  # wave offset at this slot
+    valid = (owners[:, None] >= 0) & (o >= 0) & (o < counts[own][:, None])
+    vals = jnp.take_along_axis(
+        gathered[own], jnp.clip(o, 0, m - 1)[:, :, None], axis=1
+    )  # (S, T, D)
+    new_pool = jnp.where(valid[:, :, None], vals, pool)
+    return new_pool, sizes + counts, jnp.where(mask, pos, -1)

@@ -16,6 +16,19 @@ passed through ``input_output_aliases`` so untouched slots are never copied:
 together with ``donate_argnums`` at the jit boundary this is what makes the
 donated append O(wave) writes instead of O(capacity) copies.
 
+Items are carried as one trailing feature axis ``D`` (non-scalar payloads are
+flattened by ``ops``): every ref is ``(rows, width, D)`` with the permutation
+computed on the 2-D ``(rows, m)`` mask and broadcast over ``D`` — this is the
+3-D variant the KV-cache decode path needs ((heads, dim) items; was a jnp
+fallback before).
+
+The kernel takes ``ngroups`` independent payload *groups* sharing one mask
+and size vector (each group has its own bucket tuple, feature width, and
+dtype): the offsets and the one-hot permutation — the expensive part of a
+tiny wave — are computed **once** and reused for every group's scatter.
+This is what lets the quantized KV-cache decode write k/v/ks/vs in a single
+launch instead of four.
+
 VMEM note: like the flatten kernel, every bucket level's block-tile rows stay
 resident per grid step (total = per-block capacity · tile rows), plus an
 (m × m) one-hot for the permutation.  A production variant would keep levels
@@ -37,15 +50,15 @@ __all__ = ["push_back_pallas"]
 DEFAULT_BLOCK_TILE = 8
 
 
-def _push_back_kernel(mask_ref, elems_ref, sizes_ref, *refs, starts, bsizes):
+def _push_back_kernel(mask_ref, sizes_ref, *refs, starts, bsizes, ngroups):
     nlev = len(bsizes)
-    level_in = refs[:nlev]
-    level_out = refs[nlev : 2 * nlev]
-    pos_ref = refs[2 * nlev]
-    nsz_ref = refs[2 * nlev + 1]
+    elems_refs = refs[:ngroups]
+    level_in = refs[ngroups : ngroups + ngroups * nlev]  # group-major
+    level_out = refs[ngroups + ngroups * nlev : ngroups + 2 * ngroups * nlev]
+    pos_ref = refs[-2]
+    nsz_ref = refs[-1]
 
     mask = mask_ref[...]  # (rows, m) int32 0/1
-    elems = elems_ref[...]  # (rows, m)
     sizes = sizes_ref[...]  # (rows, 1) int32
     rows, m = mask.shape
 
@@ -57,58 +70,82 @@ def _push_back_kernel(mask_ref, elems_ref, sizes_ref, *refs, starts, bsizes):
     # Dense insert permutation: sel[r, o] = the unique masked lane k with
     # off[r, k] == o.  Exact int32 one-hot reduction — value bits never touch
     # arithmetic, so the gather below is bit-identical to the jnp scatter.
+    # Computed ONCE, reused by every payload group's scatter.
     iota_o = jax.lax.broadcasted_iota(jnp.int32, (rows, m, m), 1)
     iota_k = jax.lax.broadcasted_iota(jnp.int32, (rows, m, m), 2)
     onehot = (off[:, None, :] == iota_o) & (mask[:, None, :] > 0)
     sel = jnp.sum(jnp.where(onehot, iota_k, 0), axis=2)  # (rows, m)
-    gathered = jnp.take_along_axis(elems, sel, axis=1)  # wave in offset order
 
-    for b in range(nlev):
-        j = jax.lax.broadcasted_iota(jnp.int32, (rows, bsizes[b]), 1)
-        o = starts[b] + j - sizes  # wave offset landing at this slot
-        valid = (o >= 0) & (o < count)
-        oc = jnp.clip(o, 0, m - 1)
-        vals = jnp.take_along_axis(gathered, oc, axis=1)
-        level_out[b][...] = jnp.where(valid, vals, level_in[b][...])
+    for g in range(ngroups):
+        elems = elems_refs[g][...]  # (rows, m, D_g)
+        gathered = jnp.take_along_axis(elems, sel[:, :, None], axis=1)
+        for b in range(nlev):
+            j = jax.lax.broadcasted_iota(jnp.int32, (rows, bsizes[b]), 1)
+            o = starts[b] + j - sizes  # wave offset landing at this slot
+            valid = (o >= 0) & (o < count)
+            oc = jnp.clip(o, 0, m - 1)
+            vals = jnp.take_along_axis(gathered, oc[:, :, None], axis=1)
+            level_out[g * nlev + b][...] = jnp.where(
+                valid[:, :, None], vals, level_in[g * nlev + b][...]
+            )
 
     pos_ref[...] = jnp.where(mask > 0, pos, -1)
     nsz_ref[...] = sizes + count
 
 
 def push_back_pallas(
-    buckets: tuple[jax.Array, ...],  # level b: (nblocks, B0·2^b)
+    bucket_groups: tuple[tuple[jax.Array, ...], ...],  # per group, level b: (nblocks, B0·2^b, D_g)
     sizes: jax.Array,  # (nblocks, 1) int32
     b0: int,
-    elems: jax.Array,  # (nblocks, m)
+    elem_groups: tuple[jax.Array, ...],  # per group: (nblocks, m, D_g)
     mask: jax.Array,  # (nblocks, m) int32 0/1
     *,
     block_tile: int = DEFAULT_BLOCK_TILE,
     interpret: bool = False,
-) -> tuple[tuple[jax.Array, ...], jax.Array, jax.Array]:
-    """→ (new levels, positions (−1 where masked), new sizes (nblocks, 1))."""
-    nblocks, m = elems.shape
+) -> tuple[tuple[tuple[jax.Array, ...], ...], jax.Array, jax.Array]:
+    """→ (new level groups, positions (−1 where masked), new sizes (nblocks, 1))."""
+    ngroups = len(elem_groups)
+    nblocks, m, _ = elem_groups[0].shape
     if nblocks % block_tile:
         raise ValueError(f"nblocks {nblocks} must divide by tile {block_tile}")
-    nlev = len(buckets)
+    nlev = len(bucket_groups[0])
     starts = indexing.bucket_starts(b0, nlev)
     bsizes = indexing.bucket_sizes(b0, nlev)
-    kernel = functools.partial(_push_back_kernel, starts=starts, bsizes=bsizes)
+    kernel = functools.partial(
+        _push_back_kernel, starts=starts, bsizes=bsizes, ngroups=ngroups
+    )
     row_spec = lambda width: pl.BlockSpec((block_tile, width), lambda i: (i, 0))
+    item_spec = lambda width, d: pl.BlockSpec(
+        (block_tile, width, d), lambda i: (i, 0, 0)
+    )
+    dims = [e.shape[2] for e in elem_groups]
+    level_specs = [
+        item_spec(sz, d) for d in dims for sz in bsizes
+    ]
     outs = pl.pallas_call(
         kernel,
         grid=(nblocks // block_tile,),
-        in_specs=[row_spec(m), row_spec(m), row_spec(1)]
-        + [row_spec(sz) for sz in bsizes],
-        out_specs=[row_spec(sz) for sz in bsizes] + [row_spec(m), row_spec(1)],
+        in_specs=[row_spec(m), row_spec(1)]
+        + [item_spec(m, d) for d in dims]
+        + level_specs,
+        out_specs=level_specs + [row_spec(m), row_spec(1)],
         out_shape=[
-            jax.ShapeDtypeStruct((nblocks, sz), buckets[0].dtype) for sz in bsizes
+            jax.ShapeDtypeStruct((nblocks, sz, d), grp[0].dtype)
+            for grp, d in zip(bucket_groups, dims)
+            for sz in bsizes
         ]
         + [
             jax.ShapeDtypeStruct((nblocks, m), jnp.int32),
             jax.ShapeDtypeStruct((nblocks, 1), jnp.int32),
         ],
         # level inputs alias their outputs: untouched slots are never copied.
-        input_output_aliases={3 + b: b for b in range(nlev)},
+        input_output_aliases={
+            2 + ngroups + i: i for i in range(ngroups * nlev)
+        },
         interpret=interpret,
-    )(mask, elems, sizes, *buckets)
-    return tuple(outs[:nlev]), outs[nlev], outs[nlev + 1]
+    )(mask, sizes, *elem_groups, *(lvl for grp in bucket_groups for lvl in grp))
+    nl = ngroups * nlev
+    groups = tuple(
+        tuple(outs[g * nlev : (g + 1) * nlev]) for g in range(ngroups)
+    )
+    return groups, outs[nl], outs[nl + 1]

@@ -7,8 +7,12 @@ scan-then-scatter path (also reachable as ``use_ref=True``) is the
 correctness oracle — results are bit-identical across the round-trip test
 matrix (``tests/kernels/test_push_back.py``).
 
-Scalar items only (like the flatten kernels' 2-D coverage); callers fall back
-to the jnp path for non-scalar ``item_shape``.
+Non-scalar items are supported by flattening ``item_shape`` into one trailing
+feature axis around the 3-D kernel.  ``push_back_fused_multi`` scatters
+several payload *groups* (own buckets / feature width / dtype each) that
+share one mask and size vector in a single launch, computing the offsets and
+the insert permutation once — the KV-cache decode path writes k/v (and the
+int8 quant scales) this way (``serving/kvcache.py::append``).
 """
 from __future__ import annotations
 
@@ -21,7 +25,74 @@ from repro.kernels import common
 from repro.kernels.push_back import kernel as _kernel
 from repro.kernels.push_back import ref as _ref
 
-__all__ = ["push_back_fused"]
+__all__ = ["push_back_fused", "push_back_fused_multi"]
+
+
+@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+def push_back_fused_multi(
+    bucket_groups: tuple[tuple[jax.Array, ...], ...],
+    sizes: jax.Array,  # (nblocks,) int32
+    b0: int,
+    elem_groups: tuple[jax.Array, ...],  # per group: (nblocks, m, *item_g)
+    mask: jax.Array,  # (nblocks, m) bool or 0/1 integers
+    *,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> tuple[tuple[tuple[jax.Array, ...], ...], jax.Array, jax.Array]:
+    """→ (new bucket groups, new sizes (nblocks,), positions (−1 masked))."""
+    if mask.dtype != jnp.bool_:
+        mask = mask != 0
+    nblocks, m = elem_groups[0].shape[:2]
+    if m == 0:
+        return bucket_groups, sizes, jnp.zeros((nblocks, 0), jnp.int32)
+    if use_ref:  # per-group oracle: positions/sizes are mask-only, identical
+        groups, new_sizes, pos = [], None, None
+        for buckets, elems in zip(bucket_groups, elem_groups):
+            levels, new_sizes, pos = _ref.push_back(buckets, sizes, b0, elems, mask)
+            groups.append(levels)
+        return tuple(groups), new_sizes, pos
+
+    item_shapes = [e.shape[2:] for e in elem_groups]
+
+    def flat(x, item):
+        d = 1
+        for dim in item:
+            d *= dim
+        return x.reshape(*x.shape[: x.ndim - len(item)], d)
+
+    tile = _kernel.DEFAULT_BLOCK_TILE
+    row_pad = (-nblocks) % tile
+    buckets3 = [
+        tuple(flat(b, item) for b in grp)
+        for grp, item in zip(bucket_groups, item_shapes)
+    ]
+    elems3 = [flat(e, item) for e, item in zip(elem_groups, item_shapes)]
+    if row_pad:  # padded rows: mask all-False, sizes 0 — provably inert
+        buckets3 = [
+            tuple(common.pad_to(b, tile, axis=0) for b in grp) for grp in buckets3
+        ]
+        elems3 = [common.pad_to(e, tile, axis=0) for e in elems3]
+        mask = common.pad_to(mask, tile, axis=0)
+        sizes = common.pad_to(sizes, tile, axis=0)
+    elems3 = [common.pad_to(e, common.MXU_LANE, axis=1) for e in elems3]
+    mask = common.pad_to(mask, common.MXU_LANE, axis=1)
+
+    groups, pos, new_sizes = _kernel.push_back_pallas(
+        tuple(buckets3),
+        sizes.reshape(-1, 1).astype(jnp.int32),
+        b0,
+        tuple(elems3),
+        mask.astype(jnp.int32),
+        interpret=common.should_interpret(interpret),
+    )
+    out_groups = tuple(
+        tuple(
+            lvl[:nblocks].reshape(nblocks, lvl.shape[1], *item)
+            for lvl in grp
+        )
+        for grp, item in zip(groups, item_shapes)
+    )
+    return out_groups, new_sizes[:nblocks, 0], pos[:nblocks, :m]
 
 
 @partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
@@ -29,41 +100,15 @@ def push_back_fused(
     buckets: tuple[jax.Array, ...],
     sizes: jax.Array,  # (nblocks,) int32
     b0: int,
-    elems: jax.Array,  # (nblocks, m)
+    elems: jax.Array,  # (nblocks, m, *item_shape)
     mask: jax.Array,  # (nblocks, m) bool or 0/1 integers
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
 ) -> tuple[tuple[jax.Array, ...], jax.Array, jax.Array]:
     """→ (new bucket levels, new sizes (nblocks,), positions (−1 masked))."""
-    if mask.dtype != jnp.bool_:
-        mask = mask != 0
-    nblocks, m = elems.shape
-    if m == 0:
-        return buckets, sizes, jnp.zeros((nblocks, 0), jnp.int32)
-    if use_ref:
-        return _ref.push_back(buckets, sizes, b0, elems, mask)
-
-    tile = _kernel.DEFAULT_BLOCK_TILE
-    row_pad = (-nblocks) % tile
-    if row_pad:  # padded rows: mask all-False, sizes 0 — provably inert
-        buckets = tuple(common.pad_to(b, tile, axis=0) for b in buckets)
-        elems = common.pad_to(elems, tile, axis=0)
-        mask = common.pad_to(mask, tile, axis=0)
-        sizes = common.pad_to(sizes, tile, axis=0)
-    elems = common.pad_to(elems, common.MXU_LANE, axis=1)
-    mask = common.pad_to(mask, common.MXU_LANE, axis=1)
-
-    levels, pos, new_sizes = _kernel.push_back_pallas(
-        buckets,
-        sizes.reshape(-1, 1).astype(jnp.int32),
-        b0,
-        elems,
-        mask.astype(jnp.int32),
-        interpret=common.should_interpret(interpret),
+    groups, new_sizes, pos = push_back_fused_multi(
+        (buckets,), sizes, b0, (elems,), mask,
+        interpret=interpret, use_ref=use_ref,
     )
-    return (
-        tuple(lvl[:nblocks] for lvl in levels),
-        new_sizes[:nblocks, 0],
-        pos[:nblocks, :m],
-    )
+    return groups[0], new_sizes, pos

@@ -15,10 +15,10 @@ __all__ = ["push_back"]
 
 
 def push_back(
-    buckets: tuple[jax.Array, ...],  # level b: (nblocks, B0·2^b)
+    buckets: tuple[jax.Array, ...],  # level b: (nblocks, B0·2^b, *item)
     sizes: jax.Array,  # (nblocks,) int32
     b0: int,
-    elems: jax.Array,  # (nblocks, m)
+    elems: jax.Array,  # (nblocks, m, *item)
     mask: jax.Array,  # (nblocks, m) bool
 ) -> tuple[tuple[jax.Array, ...], jax.Array, jax.Array]:
     """→ (new bucket levels, new sizes, positions (−1 where masked out))."""

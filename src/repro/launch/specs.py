@@ -44,7 +44,7 @@ def plan_cells() -> list[Cell]:
         for shape_name, shape in SHAPES.items():
             skip = None
             if shape_name == "long_500k" and not sub_quadratic_ready(cfg):
-                skip = "pure full attention: 500k decode needs sub-quadratic (DESIGN.md §5)"
+                skip = "pure full attention: 500k decode needs sub-quadratic (DESIGN.md §6)"
             cells.append(Cell(arch, shape_name, skip))
     return cells
 

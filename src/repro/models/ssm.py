@@ -3,7 +3,7 @@
 Training/prefill uses the chunked SSD algorithm: quadratic attention-like
 work *within* a chunk, a linear recurrence *across* chunk states — memory
 stays O(L·d + chunks·state), which is what makes ``long_500k`` runnable for
-SSM/hybrid archs (DESIGN.md §5).  Decode carries an O(1) recurrent state
+SSM/hybrid archs (DESIGN.md §6).  Decode carries an O(1) recurrent state
 (conv window + SSD state) per layer — no KV cache at all, hence GGArray's
 cache role is inapplicable for pure-SSM archs (noted §Arch-applicability).
 

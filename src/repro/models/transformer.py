@@ -1,4 +1,4 @@
-"""Decoder stack: period-scanned heterogeneous layers (DESIGN.md §4).
+"""Decoder stack: period-scanned heterogeneous layers (DESIGN.md §5).
 
 ``cfg.layout`` lists the layer kinds of one period (dense: ``("attn",)``;
 Jamba: 7×mamba + 1×attn); parameters are stacked over ``n_periods`` and the

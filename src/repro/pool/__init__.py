@@ -1,0 +1,33 @@
+"""Multi-tenant slab arena — many GGArrays, one device pool (DESIGN.md §4).
+
+One pre-carved pool of fixed-size slabs (SOA pages) backs a whole fleet of
+logical growable arrays: growth is "claim a slab" through a free-list bitmap
+instead of allocating a per-array bucket chain, so fleet capacity is bounded
+by live data + one slab per array — the DynaSOAr-style answer to the
+worst-case-VRAM problem GGArray solves for a single array.
+"""
+from repro.pool.arena import (
+    ArenaGGArray,
+    SlabArena,
+    SlabPool,
+    grow_pool,
+    init_pool,
+)
+from repro.pool.planner import (
+    PageBook,
+    QuotaExceeded,
+    SlabAllocator,
+    TenantPlanner,
+)
+
+__all__ = [
+    "ArenaGGArray",
+    "SlabArena",
+    "SlabPool",
+    "SlabAllocator",
+    "TenantPlanner",
+    "PageBook",
+    "QuotaExceeded",
+    "init_pool",
+    "grow_pool",
+]

@@ -1,0 +1,413 @@
+"""Slab arena: one device pool, many logical growable arrays (DESIGN.md §4).
+
+``SlabPool`` is a pre-carved pool of fixed-size slabs (SOA pages) plus a
+device-side free-list bitmap.  ``ArenaGGArray`` is the fleet of logical
+arrays living in it: each array's storage is a *page table* of slab indices
+rather than owned buffers, with the GGArray bucket structure preserved as a
+geometric *grouping* of the table — level ``b`` of an array is the
+indirection sub-table ``pages[i, 2^b − 1 : 2^(b+1) − 1]`` (``2^b`` slabs, so
+level capacities are the familiar ``T·2^b``).  Growth is therefore "claim a
+slab": no copy, no per-array worst case, and fleet capacity stays bounded by
+live data + one partially-filled slab per array (+ any pessimism slack).
+
+``SlabArena`` is the host manager gluing the pieces together under the
+amortized-contact protocol (DESIGN.md §2): claims/releases are planned
+against host mirrors (``pool.planner``), device state (pool, bitmap, page
+tables) is updated at the program boundary, and the write itself is the
+fused ``kernels/paged`` slab-append.  Steady-state appends issue **zero**
+device→host transfers; a transfer happens only when pessimistic bounds would
+otherwise claim a slab (and the mask is not host-known).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import indexing
+from repro.kernels import common
+from repro.kernels.flatten import kernel as flatten_kernel
+from repro.kernels.paged import ops as paged_ops
+from repro.pool.planner import PageBook, TenantPlanner
+
+__all__ = [
+    "SlabPool",
+    "ArenaGGArray",
+    "SlabArena",
+    "init_pool",
+    "grow_pool",
+    "geometric_page_groups",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SlabPool:
+    """The shared device pool: slab data + free-list bitmap."""
+
+    data: jax.Array  # (n_slabs, slab_size, *item_shape)
+    free: jax.Array  # (n_slabs,) bool — True = claimable
+
+    @property
+    def n_slabs(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def slab_size(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def item_shape(self) -> tuple[int, ...]:
+        return self.data.shape[2:]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.n_slabs * self.slab_size
+
+
+def init_pool(
+    n_slabs: int,
+    slab_size: int,
+    item_shape: Sequence[int] = (),
+    dtype: Any = jnp.float32,
+) -> SlabPool:
+    return SlabPool(
+        data=jnp.zeros((n_slabs, slab_size, *item_shape), dtype=dtype),
+        free=jnp.ones((n_slabs,), bool),
+    )
+
+
+def grow_pool(pool: SlabPool, extra: int) -> SlabPool:
+    """Append ``extra`` fresh slabs.
+
+    This is the one realloc left in the system — paid per *fleet* growth
+    (and amortizable by over-provisioning), instead of per array as in the
+    owned-buffer layout.  Existing slab contents never move logically: page
+    tables are indices, so no table changes.
+    """
+    return SlabPool(
+        data=jnp.concatenate(
+            [pool.data, jnp.zeros((extra, *pool.data.shape[1:]), pool.dtype)]
+        ),
+        free=jnp.concatenate([pool.free, jnp.ones((extra,), bool)]),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ArenaGGArray:
+    """The fleet's logical arrays: per-array page tables + sizes.
+
+    ``pages[i, p]`` is the slab holding array ``i``'s positions
+    ``[p·T, (p+1)·T)``; −1 = unclaimed.  Bucket level ``b`` of array ``i``
+    is the sub-table ``pages[i, 2^b − 1 : 2^(b+1) − 1]``.
+    """
+
+    pages: jax.Array  # (narrays, max_pages) int32
+    sizes: jax.Array  # (narrays,) int32
+
+    @property
+    def narrays(self) -> int:
+        return self.pages.shape[0]
+
+    @property
+    def max_pages(self) -> int:
+        return self.pages.shape[1]
+
+
+def geometric_page_groups(max_pages: int) -> list[tuple[int, int]]:
+    """GGArray bucket levels as page-table slices: [(2^b−1, 2^(b+1)−1), …).
+
+    The grouping under which a paged walk reproduces the ggarray bucket walk
+    segment-for-segment (the bit-exactness contract of the paged serving
+    policy when ``slab_size == cache_b0``).
+    """
+    groups = []
+    lo = 0
+    width = 1
+    while lo < max_pages:
+        groups.append((lo, min(lo + width, max_pages)))
+        lo += width
+        width *= 2
+    return groups
+
+
+class SlabArena:
+    """Host manager for one pool + ``narrays`` logical growable arrays."""
+
+    def __init__(
+        self,
+        narrays: int,
+        slab_size: int,
+        *,
+        item_shape: Sequence[int] = (),
+        dtype: Any = jnp.float32,
+        initial_slabs: int = 0,
+        max_pages: int = 1,
+        quota_slabs: int | None = None,
+        append_method: str = "fused",
+    ):
+        if slab_size < 1:
+            raise ValueError("slab_size must be >= 1")
+        self.pool = init_pool(initial_slabs, slab_size, item_shape, dtype)
+        self.arr = ArenaGGArray(
+            pages=jnp.full((narrays, max(max_pages, 1)), -1, jnp.int32),
+            sizes=jnp.zeros((narrays,), jnp.int32),
+        )
+        # one shared host book: allocator + page counts + slab→page mapping
+        self.book = PageBook(narrays, quota_slabs=quota_slabs)
+        self.book.grow(initial_slabs)
+        self.book.max_pages = max(max_pages, 1)
+        self.planner = TenantPlanner(narrays)
+        self.append_method = append_method
+        # device mirrors of owners/bases, refreshed only when claims change
+        self._tables_dev: tuple[jax.Array, jax.Array] | None = None
+        self.appends = 0
+        self.pool_grow_events = 0
+        self.table_grow_events = 0
+        self.peak_live_ub = 0
+
+    @property
+    def alloc(self):
+        return self.book.alloc
+
+    # ---- geometry --------------------------------------------------------
+    @property
+    def narrays(self) -> int:
+        return self.arr.narrays
+
+    @property
+    def slab_size(self) -> int:
+        return self.pool.slab_size
+
+    @property
+    def item_shape(self) -> tuple[int, ...]:
+        return self.pool.item_shape
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.pool.capacity_tokens
+
+    @property
+    def live_tokens_ub(self) -> int:
+        """Host upper bound on live elements (exact under host-known masks)."""
+        return int(self.planner.ub.sum())
+
+    @property
+    def host_syncs(self) -> int:
+        return self.planner.host_syncs
+
+    def utilization(self) -> float:
+        cap = self.capacity_tokens
+        return self.live_tokens_ub / cap if cap else 0.0
+
+    # nblocks/sizes aliases — the wave-interface surface TwoPhasePipeline uses
+    @property
+    def nblocks(self) -> int:
+        return self.narrays
+
+    @property
+    def sizes(self) -> jax.Array:
+        return self.arr.sizes
+
+    def memory_elems(self) -> int:
+        return self.capacity_tokens
+
+    # ---- slab claiming ---------------------------------------------------
+    def _ensure_table_width(self, need: int) -> None:
+        widened = self.book.widen(need)  # geometric: O(log) restructures
+        if widened is None:
+            return
+        old, new = widened
+        pad = jnp.full((self.narrays, new - old), -1, jnp.int32)
+        self.arr = dataclasses.replace(
+            self.arr, pages=jnp.concatenate([self.arr.pages, pad], axis=1)
+        )
+        self.table_grow_events += 1
+
+    def _ensure_slabs(self, k: int) -> None:
+        short = self.book.shortfall(k)
+        if short == 0:
+            return
+        self.pool = grow_pool(self.pool, short)
+        self.book.grow(short)
+        self.pool_grow_events += 1
+
+    def _claim(self, per_tenant: np.ndarray) -> None:
+        """Claim ``per_tenant[i]`` fresh slabs for each array (one scatter)."""
+        total = int(per_tenant.sum())
+        if total == 0:
+            return
+        self._ensure_table_width(int((self.book.npages + per_tenant).max()))
+        self._ensure_slabs(total)
+        rows, cols, ids = [], [], []
+        for tenant in np.flatnonzero(per_tenant):
+            k = int(per_tenant[tenant])
+            got, page0 = self.book.claim(int(tenant), k)
+            rows.extend([int(tenant)] * k)
+            cols.extend(range(page0, page0 + k))
+            ids.extend(int(s) for s in got)
+        self.arr = dataclasses.replace(
+            self.arr,
+            pages=self.arr.pages.at[jnp.asarray(rows), jnp.asarray(cols)].set(
+                jnp.asarray(ids, jnp.int32)
+            ),
+        )
+        self.pool = dataclasses.replace(
+            self.pool, free=self.pool.free.at[jnp.asarray(ids)].set(False)
+        )
+        self._tables_dev = None  # ownership changed: refresh kernel tables
+
+    def _owner_tables(self) -> tuple[jax.Array, jax.Array]:
+        if self._tables_dev is None:
+            self._tables_dev = (
+                jnp.asarray(self.book.alloc.owner),
+                jnp.asarray(self.book.page_of_slab * self.slab_size, jnp.int32),
+            )
+        return self._tables_dev
+
+    # ---- the hot path ----------------------------------------------------
+    def append(self, elems: jax.Array, mask: Any = None) -> jax.Array:
+        """Wave append: up to ``m`` elements per array → positions (−1 masked).
+
+        ``elems: (narrays, m, *item_shape)``.  Capacity planning follows the
+        PLAN state machine: host bounds advance by exact lane counts when
+        ``mask`` is host-known, pessimistically by ``m`` otherwise; a device
+        read happens only when pessimism alone would claim a new slab.
+        """
+        n, m = elems.shape[:2]
+        if n != self.narrays:
+            raise ValueError(f"elems rows {n} != narrays {self.narrays}")
+        if m == 0:
+            return jnp.zeros((n, 0), jnp.int32)
+        T = self.slab_size
+        counts, exact = self.planner.plan(m, mask)
+        need = -(-(self.planner.ub + counts) // T)  # pages needed per array
+        delta = np.maximum(need - self.book.npages, 0)
+        if delta.any() and not exact:
+            # PLAN: one vector read re-seeds the bounds before claiming
+            self.planner.sync(self.arr.sizes)
+            need = -(-(self.planner.ub + counts) // T)
+            delta = np.maximum(need - self.book.npages, 0)
+        self._claim(delta)
+        owners, bases = self._owner_tables()
+        if mask is None:
+            mask_dev = jnp.ones((n, m), bool)
+        else:
+            mask_dev = jnp.asarray(mask)
+            if mask_dev.dtype != jnp.bool_:
+                mask_dev = mask_dev != 0
+        data, sizes, pos = paged_ops.slab_append_donated(
+            self.pool.data,
+            owners,
+            bases,
+            self.arr.sizes,
+            elems,
+            mask_dev,
+            use_ref=self.append_method in ("ref", "jnp"),
+        )
+        self.pool = dataclasses.replace(self.pool, data=data)
+        self.arr = dataclasses.replace(self.arr, sizes=sizes)
+        self.planner.advance(counts)
+        self.appends += 1
+        self.peak_live_ub = max(self.peak_live_ub, self.live_tokens_ub)
+        return pos
+
+    # ---- reclamation -----------------------------------------------------
+    def release(self, tenant: int) -> int:
+        """Free every slab of array ``tenant`` (sequence completed) → count.
+
+        The slabs go back on the free list (host + device bitmap) and are
+        reused by later claims *before* the pool grows — the reclamation
+        invariant the property tests assert.
+        """
+        ids = self.book.release(tenant)
+        if len(ids):
+            self.pool = dataclasses.replace(
+                self.pool, free=self.pool.free.at[jnp.asarray(ids)].set(True)
+            )
+            self._tables_dev = None
+        self.arr = ArenaGGArray(
+            pages=self.arr.pages.at[tenant].set(-1),
+            sizes=self.arr.sizes.at[tenant].set(0),
+        )
+        self.planner.reset(tenant)
+        return len(ids)
+
+    # ---- reads -----------------------------------------------------------
+    def logical_view(self) -> jax.Array:
+        """(narrays, max_pages·T, *item) contiguous views (paged gather)."""
+        return paged_ops.paged_gather(self.pool.data, self.arr.pages)
+
+    def flatten(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """→ (flat, total, block_starts) in block-major global order.
+
+        The arena's freeze path: a paged gather materializes each array's
+        compact row, then the flatten kernels' segmented gather (scalar
+        items) or a jnp scatter (non-scalar) applies the global ordering —
+        the same two-step structure as ``kernels/flatten``.
+        """
+        starts = indexing.block_starts(self.arr.sizes).astype(jnp.int32)
+        total = jnp.sum(self.arr.sizes)
+        cap_pb = self.arr.max_pages * self.slab_size
+        if self.pool.n_slabs == 0:
+            flat = jnp.zeros(
+                (self.narrays * cap_pb, *self.item_shape), self.pool.dtype
+            )
+            return flat, total, starts
+        compact = self.logical_view()
+        if not self.item_shape:
+            flat = flatten_kernel.segmented_gather_pallas(
+                compact,
+                starts,
+                starts + self.arr.sizes.astype(jnp.int32),
+                interpret=common.should_interpret(None),
+            )
+            return flat, total, starts
+        cap = self.narrays * cap_pb
+        posn = jnp.arange(cap_pb, dtype=jnp.int32)[None, :]
+        live = posn < self.arr.sizes[:, None]
+        tgt = jnp.where(live, starts[:, None] + posn, cap)
+        flat = jnp.zeros((cap, *self.item_shape), self.pool.dtype)
+        flat = flat.at[tgt].set(compact, mode="drop")
+        return flat, total, starts
+
+    # ---- verification (test/debug only: reads the device) ----------------
+    def check_invariants(self) -> dict:
+        """Cross-check device state against host mirrors; raises on drift."""
+        free_dev = np.asarray(jax.device_get(self.pool.free))
+        pages_dev = np.asarray(jax.device_get(self.arr.pages))
+        sizes_dev = np.asarray(jax.device_get(self.arr.sizes))
+        assert (free_dev == self.alloc.free).all(), "device bitmap drifted"
+        self.alloc.check()
+        claimed = pages_dev[pages_dev >= 0]
+        assert len(claimed) == len(set(claimed.tolist())), (
+            "slab double-assigned across page tables"
+        )
+        assert not free_dev[claimed].any() if len(claimed) else True, (
+            "free slab present in a page table"
+        )
+        assert len(claimed) == self.alloc.live_count, (
+            "claimed slab missing from every page table"
+        )
+        for i in range(self.narrays):
+            npg = int(self.book.npages[i])
+            assert (pages_dev[i, :npg] >= 0).all(), f"array {i}: hole in table"
+            assert (pages_dev[i, npg:] == -1).all(), f"array {i}: stray pages"
+            assert sizes_dev[i] <= npg * self.slab_size, f"array {i}: overflow"
+            assert sizes_dev[i] <= self.planner.ub[i], f"array {i}: bound lies"
+        return {
+            "live_slabs": self.alloc.live_count,
+            "free_slabs": self.alloc.free_count,
+            "live_tokens": int(sizes_dev.sum()),
+            "capacity_tokens": self.capacity_tokens,
+            "reuse_claims": self.alloc.reuse_claims,
+            "grown_slabs": self.alloc.grown_slabs,
+        }

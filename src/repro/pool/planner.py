@@ -1,0 +1,222 @@
+"""Host-side slab accounting: free-list allocator + per-tenant planner.
+
+The allocator is the host mirror of the pool's device free-list bitmap
+(``SlabPool.free``): claims and releases are pure host bookkeeping (the
+device bitmap is updated by the arena in the same program-boundary step), so
+slab allocation never reads the device — the arena analog of the
+``CapacityPlanner`` contract (DESIGN.md §2/§4).
+
+``TenantPlanner`` extends ``core.ggarray.CapacityPlanner``'s bound tracking
+to a *fleet*: one upper bound per logical array, advanced by exact per-array
+lane counts when the append mask is host-known, plus an optional per-tenant
+slab quota — the admission-control knob a multi-tenant serving pool needs so
+one runaway sequence cannot starve the others.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["SlabAllocator", "TenantPlanner", "PageBook", "QuotaExceeded"]
+
+
+class QuotaExceeded(RuntimeError):
+    """A claim would push a tenant past its per-tenant slab quota."""
+
+
+class SlabAllocator:
+    """Lowest-index-first free list over ``n_slabs`` pool slots.
+
+    Lowest-first claiming makes reuse the default: released slabs always sit
+    below freshly grown ones, so the pool only grows once every freed slab
+    is back in use (the reclamation invariant the property tests assert).
+    """
+
+    def __init__(self, n_slabs: int = 0, *, quota_slabs: int | None = None):
+        self.free = np.ones((n_slabs,), bool)
+        self.owner = np.full((n_slabs,), -1, np.int32)  # tenant per slab
+        self.quota_slabs = quota_slabs
+        self.claims = 0
+        self.reuse_claims = 0  # claims satisfied by a previously released slab
+        self.releases = 0
+        self.grown_slabs = 0
+        self.peak_live = 0
+        self._ever_released = np.zeros((n_slabs,), bool)
+
+    @property
+    def n_slabs(self) -> int:
+        return len(self.free)
+
+    @property
+    def free_count(self) -> int:
+        return int(self.free.sum())
+
+    @property
+    def live_count(self) -> int:
+        return self.n_slabs - self.free_count
+
+    def tenant_slabs(self, tenant: int) -> int:
+        return int((self.owner == tenant).sum())
+
+    def shortfall(self, k: int) -> int:
+        """Slabs the pool must grow by before ``claim(·, k)`` can succeed."""
+        return max(k - self.free_count, 0)
+
+    def grow(self, extra: int) -> None:
+        self.free = np.concatenate([self.free, np.ones((extra,), bool)])
+        self.owner = np.concatenate([self.owner, np.full((extra,), -1, np.int32)])
+        self._ever_released = np.concatenate(
+            [self._ever_released, np.zeros((extra,), bool)]
+        )
+        self.grown_slabs += extra
+
+    def claim(self, tenant: int, k: int) -> np.ndarray:
+        """Claim ``k`` slabs for ``tenant`` → int32 slab ids (lowest first)."""
+        if k == 0:
+            return np.zeros((0,), np.int32)
+        if self.quota_slabs is not None:
+            if self.tenant_slabs(tenant) + k > self.quota_slabs:
+                raise QuotaExceeded(
+                    f"tenant {tenant}: {self.tenant_slabs(tenant)} + {k} slabs "
+                    f"> quota {self.quota_slabs}"
+                )
+        ids = np.flatnonzero(self.free)[:k].astype(np.int32)
+        if len(ids) < k:
+            raise RuntimeError(
+                f"free list exhausted: want {k}, have {len(ids)} "
+                "(grow the pool first — see SlabArena._ensure_slabs)"
+            )
+        self.free[ids] = False
+        self.owner[ids] = tenant
+        self.claims += k
+        self.reuse_claims += int(self._ever_released[ids].sum())
+        self.peak_live = max(self.peak_live, self.live_count)
+        return ids
+
+    def release(self, ids: np.ndarray) -> None:
+        ids = np.asarray(ids, np.int32)
+        if len(ids) == 0:
+            return
+        if self.free[ids].any():
+            raise RuntimeError(f"double free: {ids[self.free[ids]]}")
+        self.free[ids] = True
+        self.owner[ids] = -1
+        self._ever_released[ids] = True
+        self.releases += len(ids)
+
+    def release_tenant(self, tenant: int) -> np.ndarray:
+        """Release every slab of ``tenant`` → the freed ids."""
+        ids = np.flatnonzero(self.owner == tenant).astype(np.int32)
+        self.release(ids)
+        return ids
+
+    def check(self) -> None:
+        """Internal free-xor-owned invariant."""
+        bad = self.free & (self.owner >= 0)
+        assert not bad.any(), f"slabs both free and owned: {np.flatnonzero(bad)}"
+        bad = ~self.free & (self.owner < 0)
+        assert not bad.any(), f"slabs claimed but unowned: {np.flatnonzero(bad)}"
+
+
+class PageBook:
+    """Host-side page-table bookkeeping shared by the arena and the engine.
+
+    One :class:`SlabAllocator` plus the pieces every page-table owner needs
+    kept consistent with it: per-tenant page counts, the slab→page mapping
+    (claim order), and the geometric table-width policy.  Pure host state —
+    callers apply the matching device updates (pool growth, free bitmap,
+    page-table scatters) at the program boundary.  Keeping this in one
+    place is what keeps ``SlabArena`` and ``BatchEngine`` free-list
+    semantics identical (reuse-before-grow, page0 offsetting, O(log) table
+    restructures).
+    """
+
+    def __init__(self, ntenants: int, *, quota_slabs: int | None = None):
+        self.alloc = SlabAllocator(0, quota_slabs=quota_slabs)
+        self.npages = np.zeros((ntenants,), np.int64)
+        self.page_of_slab = np.full((0,), -1, np.int64)
+        self.max_pages = 1
+
+    def grow(self, extra: int) -> None:
+        """Record ``extra`` fresh slabs (caller grew the device pool)."""
+        self.alloc.grow(extra)
+        self.page_of_slab = np.concatenate(
+            [self.page_of_slab, np.full((extra,), -1, np.int64)]
+        )
+
+    def shortfall(self, k: int) -> int:
+        return self.alloc.shortfall(k)
+
+    def widen(self, need: int) -> tuple[int, int] | None:
+        """Geometric table widening → (old, new) widths, or None if covered."""
+        if need <= self.max_pages:
+            return None
+        old, self.max_pages = self.max_pages, max(need, 2 * self.max_pages)
+        return old, self.max_pages
+
+    def claim(self, tenant: int, k: int) -> tuple[np.ndarray, int]:
+        """Claim ``k`` slabs → (ids, first page index).  Reuse-first; the
+        free list must already cover ``k`` (grow the pool on shortfall)."""
+        ids = self.alloc.claim(tenant, k)
+        page0 = int(self.npages[tenant])
+        self.page_of_slab[ids] = page0 + np.arange(k)
+        self.npages[tenant] += k
+        return ids, page0
+
+    def release(self, tenant: int) -> np.ndarray:
+        """Free every slab of ``tenant`` → the freed ids."""
+        ids = self.alloc.release_tenant(tenant)
+        self.page_of_slab[ids] = -1
+        self.npages[tenant] = 0
+        return ids
+
+    def pages_in_order(self, tenant: int) -> np.ndarray:
+        """``tenant``'s slab ids sorted by their page index."""
+        owned = np.flatnonzero(self.alloc.owner == tenant)
+        return owned[np.argsort(self.page_of_slab[owned])]
+
+
+class TenantPlanner:
+    """Per-tenant size upper bounds — ``CapacityPlanner`` at fleet scale.
+
+    ``plan(m, mask)`` advances each tenant's bound (exactly, when ``mask``
+    is a host array; by ``m`` otherwise) and returns the per-tenant counts;
+    ``sync(sizes)`` re-seeds the bounds from a device read when pessimism
+    would otherwise claim slabs the data doesn't need.
+    """
+
+    def __init__(self, ntenants: int):
+        self.ub = np.zeros((ntenants,), np.int64)
+        self.host_syncs = 0
+
+    @staticmethod
+    def host_counts(mask: Any, ntenants: int, m: int) -> np.ndarray | None:
+        if mask is None:
+            return np.full((ntenants,), m, np.int64)
+        if isinstance(mask, jax.Array):
+            return None  # device mask: converting it would be the sync
+        arr = np.asarray(mask)
+        if arr.ndim != 2 or arr.shape[0] != ntenants:
+            return None
+        return (arr != 0).sum(axis=1).astype(np.int64)
+
+    def plan(self, m: int, mask: Any = None) -> tuple[np.ndarray, bool]:
+        """→ (per-tenant advance, exact?) without touching the bounds."""
+        counts = self.host_counts(mask, len(self.ub), m)
+        if counts is None:
+            return np.full((len(self.ub),), m, np.int64), False
+        return counts, mask is None or not isinstance(mask, jax.Array)
+
+    def advance(self, counts: np.ndarray) -> None:
+        self.ub += counts
+
+    def sync(self, sizes: jax.Array) -> np.ndarray:
+        """Re-seed bounds from the device sizes vector (one transfer)."""
+        self.ub = np.asarray(jax.device_get(sizes), np.int64)
+        self.host_syncs += 1
+        return self.ub
+
+    def reset(self, tenant: int) -> None:
+        self.ub[tenant] = 0

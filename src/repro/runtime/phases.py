@@ -144,6 +144,7 @@ class TwoPhasePipeline:
         if flatten_impl not in FLATTEN_IMPLS:
             raise ValueError(f"flatten_impl {flatten_impl!r} not in {FLATTEN_IMPLS}")
         self._gg = gg.init(nblocks, b0, item_shape, dtype, nbuckets=nbuckets)
+        self._arena = None
         self._frozen: FrozenArray | None = None
         self._phase = Phase.GROW
         self.flatten_impl = flatten_impl
@@ -157,12 +158,35 @@ class TwoPhasePipeline:
             raise ValueError(f"flatten_impl {flatten_impl!r} not in {FLATTEN_IMPLS}")
         pipe = cls.__new__(cls)
         pipe._gg = arr
+        pipe._arena = None
         pipe._frozen = None
         pipe._phase = Phase.GROW
         pipe.flatten_impl = flatten_impl
         pipe.stats = FreezeStats()
         pipe._planner = gg.CapacityPlanner.for_array(arr)  # one seed read
         pipe.stats.host_syncs = pipe._planner.host_syncs
+        return pipe
+
+    @classmethod
+    def from_arena(cls, arena):
+        """Run the two-phase lifecycle over arena-backed storage.
+
+        ``arena`` is a :class:`repro.pool.SlabArena` whose ``narrays`` play
+        the role of blocks: append claims shared-pool slabs instead of
+        growing owned buckets, and freeze() flattens through the page tables
+        (paged gather + the same segmented global ordering, DESIGN.md §4).
+        The phase discipline, FrozenArray view, and stats surface are
+        identical — consumers (``data/packing.py``'s Packer) switch backends
+        without code changes.
+        """
+        pipe = cls.__new__(cls)
+        pipe._gg = None
+        pipe._arena = arena
+        pipe._frozen = None
+        pipe._phase = Phase.GROW
+        pipe.flatten_impl = "segmented"
+        pipe.stats = FreezeStats()
+        pipe._planner = None  # the arena's TenantPlanner owns the bounds
         return pipe
 
     # ---- introspection ---------------------------------------------------
@@ -173,20 +197,34 @@ class TwoPhasePipeline:
     @property
     def array(self) -> gg.GGArray:
         """The underlying GGArray (valid in either phase; grows only in GROW)."""
+        if self._gg is None:
+            raise PhaseError("arena-backed pipeline: use .arena, not .array")
         return self._gg
 
     @property
+    def arena(self):
+        if self._arena is None:
+            raise PhaseError("ggarray-backed pipeline: use .array, not .arena")
+        return self._arena
+
+    @property
+    def _store(self):
+        return self._arena if self._arena is not None else self._gg
+
+    @property
     def nblocks(self) -> int:
-        return self._gg.nblocks
+        return self._store.nblocks
 
     @property
     def sizes(self) -> jax.Array:
-        return self._gg.sizes
+        return self._store.sizes
 
     def total_size(self) -> int:
-        return int(jax.device_get(gg.total_size(self._gg)))
+        return int(jax.device_get(jnp.sum(self._store.sizes)))
 
     def memory_elems(self) -> int:
+        if self._arena is not None:
+            return self._arena.memory_elems()
         return gg.memory_elems(self._gg)
 
     def _require(self, phase: Phase, op: str) -> None:
@@ -208,13 +246,22 @@ class TwoPhasePipeline:
         steady state (host-known headroom covers the wave) the call issues
         **zero** device→host transfers; only when a growth might be needed
         does the planner read one scalar (the headroom flag the previous
-        donated append left behind).  The underlying buffers are donated —
-        a previously captured ``pipeline.array`` reference is dead after
-        this call.
+        donated append left behind).  Passing ``mask`` as a host (numpy)
+        array lets the planner advance per-block bounds by the actual lane
+        counts — skewed masked loads then sync O(log n) times too.  The
+        underlying buffers are donated — a previously captured
+        ``pipeline.array`` reference is dead after this call.
         """
         self._require(Phase.GROW, "append")
+        if self._arena is not None:
+            before = self._arena.pool_grow_events
+            pos = self._arena.append(elems, mask)
+            self.stats.grow_events += self._arena.pool_grow_events - before
+            self.stats.appends += 1
+            self.stats.host_syncs = self._arena.host_syncs
+            return pos
         before = self._gg.nbuckets
-        self._gg = self._planner.reserve(self._gg, elems.shape[1])
+        self._gg = self._planner.reserve(self._gg, elems.shape[1], mask=mask)
         self.stats.grow_events += self._gg.nbuckets - before
         self._gg, pos, headroom = gg.append(self._gg, elems, mask, method=method)
         self._planner.note_append(self._gg, headroom)
@@ -226,16 +273,19 @@ class TwoPhasePipeline:
     def freeze(self) -> FrozenArray:
         """Flatten into a contiguous global-order array; enter FROZEN phase."""
         self._require(Phase.GROW, "freeze")
-        arr = self._gg
         t0 = time.perf_counter()
-        starts = gg.block_starts(arr)
-        if self.flatten_impl == "core" or arr.item_shape:
-            flat, total = gg.flatten(arr)
+        if self._arena is not None:
+            flat, total, starts = self._arena.flatten()
         else:
-            flat = flatten_ops.flatten(
-                arr.buckets, arr.sizes, arr.b0, impl=self.flatten_impl
-            )
-            total = jnp.sum(arr.sizes)
+            arr = self._gg
+            starts = gg.block_starts(arr)
+            if self.flatten_impl == "core" or arr.item_shape:
+                flat, total = gg.flatten(arr)
+            else:
+                flat = flatten_ops.flatten(
+                    arr.buckets, arr.sizes, arr.b0, impl=self.flatten_impl
+                )
+                total = jnp.sum(arr.sizes)
         flat = jax.block_until_ready(flat)
         dt = time.perf_counter() - t0
         self._frozen = FrozenArray(
@@ -256,6 +306,11 @@ class TwoPhasePipeline:
         """Re-enter GROW. Zero-copy by default (the bucket chain is intact);
         ``rebalance=True`` redistributes the frozen contents evenly instead."""
         self._require(Phase.FROZEN, "thaw")
+        if rebalance and self._arena is not None:
+            raise PhaseError(
+                "arena-backed pipelines cannot rebalance on thaw: slabs are "
+                "shared-pool pages, not redistributable owned buffers"
+            )
         if rebalance:
             frozen = self._frozen
             assert frozen is not None
@@ -269,7 +324,7 @@ class TwoPhasePipeline:
         self._frozen = None
         self._phase = Phase.GROW
         self.stats.thaws += 1
-        return self._gg
+        return self._store
 
     # ---- FROZEN phase ----------------------------------------------------
     @property

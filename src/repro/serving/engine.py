@@ -30,9 +30,15 @@ final token transfer, not O(steps).
 
 ``Engine.stats`` exposes alloc/copy/grow counters and byte volumes so the
 benchmarks can reproduce the paper's Table II / Fig. 6 structure.
+
+A fifth policy lives in its own engine: :class:`BatchEngine` serves the
+``paged`` cache policy (the slab arena, DESIGN.md §4) with **continuous
+batching** — per-request admit/evict into a fixed slot grid, one shared slab
+pool for the whole fleet, slab reclamation when a sequence completes.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
@@ -46,7 +52,7 @@ from repro.configs.base import ModelConfig
 from repro.serving import kvcache, steps
 from repro.serving.sampler import sample
 
-__all__ = ["Engine", "EngineStats"]
+__all__ = ["Engine", "EngineStats", "BatchEngine", "BatchStats", "Request"]
 
 
 @dataclasses.dataclass
@@ -72,6 +78,11 @@ class Engine:
         self.params = params
         self.cfg = cfg
         self.policy = cfg.cache_policy if policy is None else policy
+        if self.policy == "paged":
+            raise ValueError(
+                "the paged (slab-arena) policy is served by BatchEngine, "
+                "which owns the pool/page-table lifecycle"
+            )
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
@@ -198,3 +209,381 @@ class Engine:
         for i in range(B):
             out[i].extend(int(t) for t in tokens[:, i])
         return out
+
+
+# --------------------------------------------------------------------------
+# BatchEngine — continuous batching over the slab arena (policy="paged").
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One sequence in flight: prompt in, ``max_new_tokens`` greedy out."""
+
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    slot: int = -1
+    admit_step: int = -1  # index into the decode stream at admission
+    generated: int = 0  # tokens sampled so far (incl. the prefill sample)
+    first_tok: Any = None  # device scalar — materialized once, at the end
+    done: bool = False
+
+
+@dataclasses.dataclass
+class BatchStats:
+    admitted: int = 0
+    completed: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    pool_grow_events: int = 0
+    grown_slabs: int = 0
+    reused_slabs: int = 0
+    released_slabs: int = 0
+    peak_live_tokens: int = 0
+    peak_pool_tokens: int = 0
+    host_syncs: int = 0  # device→host reads (stop-token checks only)
+
+
+class BatchEngine:
+    """Continuous-batch serving over one shared slab pool (DESIGN.md §4).
+
+    ``max_batch`` decode *slots* run in lockstep; requests stream through
+    them: admit (single-sequence prefill scattered into freshly claimed
+    slabs) → batched donated decode steps (idle slots are inert: their page
+    rows are −1 so appends drop, and zero lengths mask their attention) →
+    completion (slabs released to the free list, slot re-admitted).  All
+    per-layer caches share one page table per sequence; K/V pools are per
+    scan period.
+
+    Scheduling is **host-sync-free** by default: completion is budget
+    arithmetic on host length mirrors, and every sampled token stays on
+    device until ``run()`` materializes the whole stream in one transfer.
+    Passing ``stop_token`` trades that for one (B,) read per step (counted
+    in ``stats.host_syncs``).
+
+    Pool sizing: the pool grows only when the free list is exhausted
+    (released slabs are always reused first), by ``max(shortfall,
+    grow_chunk)`` slabs.  With the default ``grow_chunk=1`` capacity tracks
+    demand exactly: at every instant ``pool_tokens ≤ live_tokens +
+    slab_tokens · active_sequences`` — the fleet-level analog of the paper's
+    2× bound, asserted in the acceptance test.
+    """
+
+    def __init__(
+        self,
+        params: dict,
+        cfg: ModelConfig,
+        *,
+        max_batch: int = 8,
+        grow_chunk: int = 1,
+        quota_slabs: int | None = None,
+        stop_token: int | None = None,
+        seed: int = 0,
+    ):
+        from repro.pool import PageBook
+
+        if cfg.n_enc_layers or cfg.n_prefix_embeds:
+            raise NotImplementedError("BatchEngine serves decoder-only stacks")
+        self.params = params
+        self.cfg = cfg
+        self.T = cfg.slab_tokens
+        self.B = max_batch
+        self.grow_chunk = grow_chunk
+        self.stop_token = stop_token
+        self.key = jax.random.PRNGKey(seed)
+        self.stats = BatchStats()
+        # shared host bookkeeping (same object the arena uses): allocator +
+        # per-slot page counts + slab→page mapping + table-width policy
+        self.book = PageBook(max_batch, quota_slabs=quota_slabs)
+        # device-side free-list bitmap (mirrors alloc.free; tests cross-check)
+        self.free_dev = jnp.ones((0,), bool)
+        self._len_host = np.zeros((max_batch,), np.int64)
+        self.caches = self._init_caches()
+        self.lengths = jnp.zeros((max_batch,), jnp.int32)
+        self.cur_tok = jnp.zeros((max_batch,), jnp.int32)
+        self._slots: list[Request | None] = [None] * max_batch
+        self._pending: collections.deque[Request] = collections.deque()
+        self._requests: dict[int, Request] = {}
+        self._stream: list[jax.Array] = []  # sampled (B,) per decode step
+        self._next_rid = 0
+        cfg_ = cfg
+        self._decode = jax.jit(
+            functools.partial(steps.decode_step, cfg=cfg_), donate_argnums=(2,)
+        )
+
+    @property
+    def alloc(self):
+        return self.book.alloc
+
+    # ---- cache construction ---------------------------------------------
+    def _init_caches(self) -> list:
+        cfg = self.cfg
+        P = cfg.n_periods
+        dt = jnp.dtype(cfg.dtype)
+        kh, dh = cfg.n_kv_heads, cfg.head_dim
+        caches = []
+        for kind in cfg.layout:
+            if kind == "mamba":
+                from repro.models import ssm as ssm_mod
+
+                st = ssm_mod.init_mamba_state(cfg, self.B, dt)
+                caches.append(
+                    {
+                        "conv": jnp.zeros((P, *st.conv.shape), dt),
+                        "ssd": jnp.zeros((P, *st.ssd.shape), jnp.float32),
+                    }
+                )
+                continue
+            kv_dt = jnp.int8 if cfg.cache_quant else dt  # int8 codes + scales
+            c = {
+                "k_pool": jnp.zeros((P, 0, self.T, kh, dh), kv_dt),
+                "v_pool": jnp.zeros((P, 0, self.T, kh, dh), kv_dt),
+                "pages": jnp.full((P, self.B, self.book.max_pages), -1, jnp.int32),
+            }
+            if cfg.cache_quant:
+                c["ks_pool"] = jnp.zeros((P, 0, self.T, kh), jnp.bfloat16)
+                c["vs_pool"] = jnp.zeros((P, 0, self.T, kh), jnp.bfloat16)
+            caches.append(c)
+        return caches
+
+    def _attn_slots(self):
+        return [i for i, kind in enumerate(self.cfg.layout) if kind == "attn"]
+
+    # ---- pool / page-table management -----------------------------------
+    def _grow_pool(self, extra: int) -> None:
+        def widen(pool):
+            pad = jnp.zeros((pool.shape[0], extra, *pool.shape[2:]), pool.dtype)
+            return jnp.concatenate([pool, pad], axis=1)
+
+        for i in self._attn_slots():
+            c = self.caches[i]
+            for key in ("k_pool", "v_pool", "ks_pool", "vs_pool"):
+                if key in c:
+                    c[key] = widen(c[key])
+        self.book.grow(extra)
+        self.free_dev = jnp.concatenate([self.free_dev, jnp.ones((extra,), bool)])
+        self.stats.pool_grow_events += 1
+        self.stats.grown_slabs += extra
+        self.stats.peak_pool_tokens = max(
+            self.stats.peak_pool_tokens, self.pool_tokens
+        )
+
+    def _ensure_table_width(self, need: int) -> None:
+        widened = self.book.widen(need)
+        if widened is None:
+            return
+        old, new = widened
+        for i in self._attn_slots():
+            c = self.caches[i]
+            pad = jnp.full((c["pages"].shape[0], self.B, new - old), -1, jnp.int32)
+            c["pages"] = jnp.concatenate([c["pages"], pad], axis=-1)
+
+    def _claim(self, slot: int, k: int) -> np.ndarray:
+        """Claim ``k`` slabs for decode slot ``slot`` (reuse-first)."""
+        if k == 0:
+            return np.zeros((0,), np.int32)
+        self._ensure_table_width(int(self.book.npages[slot]) + k)
+        short = self.book.shortfall(k)
+        if short:
+            self._grow_pool(max(short, self.grow_chunk))
+        before_reuse = self.alloc.reuse_claims
+        ids, page0 = self.book.claim(slot, k)
+        self.stats.reused_slabs += self.alloc.reuse_claims - before_reuse
+        cols = jnp.arange(page0, page0 + k)
+        dev_ids = jnp.asarray(ids)
+        for i in self._attn_slots():
+            c = self.caches[i]
+            c["pages"] = c["pages"].at[:, slot, cols].set(dev_ids)
+        self.free_dev = self.free_dev.at[dev_ids].set(False)
+        return ids
+
+    def _release(self, slot: int) -> None:
+        ids = self.book.release(slot)
+        if len(ids):
+            self.free_dev = self.free_dev.at[jnp.asarray(ids)].set(True)
+        for i in self._attn_slots():
+            c = self.caches[i]
+            c["pages"] = c["pages"].at[:, slot, :].set(-1)
+        self._len_host[slot] = 0
+        self.lengths = self.lengths.at[slot].set(0)
+        self.stats.released_slabs += len(ids)
+
+    @property
+    def pool_tokens(self) -> int:
+        return self.alloc.n_slabs * self.T
+
+    @property
+    def live_tokens(self) -> int:
+        return int(self._len_host.sum())
+
+    def utilization(self) -> float:
+        return self.live_tokens / self.pool_tokens if self.pool_tokens else 0.0
+
+    # ---- request lifecycle ----------------------------------------------
+    def submit(self, prompt: list[int], max_new_tokens: int) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=list(prompt), max_new_tokens=max_new_tokens)
+        self._requests[rid] = req
+        self._pending.append(req)
+        return rid
+
+    def _admit(self, req: Request, slot: int) -> None:
+        cfg = self.cfg
+        Lp = len(req.prompt)
+        self._claim(slot, max(-(-Lp // self.T), 1))
+        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        logits, pcaches = steps.prefill(
+            self.params, toks, cfg, capacity_hint=Lp, policy="static"
+        )
+        self.stats.prefills += 1
+        for i, kind in enumerate(cfg.layout):
+            if kind == "mamba":
+                for key in ("conv", "ssd"):
+                    val = pcaches[i][key][:, 0]
+                    want = self.caches[i][key].shape[2]
+                    if key == "conv" and val.shape[1] < want:
+                        # prompt shorter than the conv window: the missing
+                        # history is zeros, oldest-first (left pad)
+                        val = jnp.pad(
+                            val, ((0, 0), (want - val.shape[1], 0), (0, 0))
+                        )
+                    self.caches[i][key] = (
+                        self.caches[i][key].at[:, slot].set(val)
+                    )
+                continue
+            self._fill_slot_pages(i, slot, pcaches[i], Lp)
+        self.lengths = self.lengths.at[slot].set(Lp)
+        self._len_host[slot] = Lp
+        self.stats.peak_live_tokens = max(
+            self.stats.peak_live_tokens, self.live_tokens
+        )
+        self.key, k = jax.random.split(self.key)
+        first = sample(k, logits, 0.0)[0]
+        req.first_tok = first
+        self.cur_tok = self.cur_tok.at[slot].set(first)
+        req.slot = slot
+        req.admit_step = len(self._stream)
+        req.generated = 1
+        self._slots[slot] = req
+        self.stats.admitted += 1
+        if req.generated >= req.max_new_tokens:
+            self._complete(req)
+
+    def _fill_slot_pages(self, i: int, slot: int, pcache: dict, Lp: int) -> None:
+        """Scatter a (P, 1, Lp, …) static prefill cache into claimed slabs."""
+        c = self.caches[i]
+        npages = int(self.book.npages[slot])
+        ids = jnp.asarray(self.book.pages_in_order(slot), jnp.int32)
+
+        def paged(x):  # (P, Lp, …) → (P, npages, T, …)
+            pad = npages * self.T - x.shape[1]
+            widths = [(0, 0)] * x.ndim
+            widths[1] = (0, pad)
+            x = jnp.pad(x, widths)
+            return x.reshape(x.shape[0], npages, self.T, *x.shape[2:])
+
+        c["k_pool"] = c["k_pool"].at[:, ids].set(paged(pcache["k"][:, 0]))
+        c["v_pool"] = c["v_pool"].at[:, ids].set(paged(pcache["v"][:, 0]))
+        if "ks_pool" in c:
+            c["ks_pool"] = c["ks_pool"].at[:, ids].set(paged(pcache["ks"][:, 0]))
+            c["vs_pool"] = c["vs_pool"].at[:, ids].set(paged(pcache["vs"][:, 0]))
+
+    def _complete(self, req: Request) -> None:
+        req.done = True
+        self._release(req.slot)
+        self._slots[req.slot] = None
+        self.stats.completed += 1
+
+    # ---- the decode loop -------------------------------------------------
+    def _admit_pending(self) -> None:
+        for slot in range(self.B):
+            if not self._pending:
+                return
+            if self._slots[slot] is None:
+                self._admit(self._pending.popleft(), slot)
+
+    def step(self) -> bool:
+        """Admit + one batched decode step. → False when nothing is active."""
+        self._admit_pending()
+        active = [r for r in self._slots if r is not None]
+        if not active:
+            return False
+        for req in active:  # capacity: claim the next slab before overflow
+            if self._len_host[req.slot] + 1 > self.book.npages[req.slot] * self.T:
+                self._claim(req.slot, 1)
+        logits, self.caches = self._decode(
+            self.params, self.cur_tok, self.caches, self.lengths
+        )
+        self.key, k = jax.random.split(self.key)
+        sampled = sample(k, logits, 0.0)
+        self._stream.append(sampled)
+        self.cur_tok = sampled
+        mask = np.zeros((self.B,), np.int32)
+        for req in active:
+            mask[req.slot] = 1
+        self.lengths = self.lengths + jnp.asarray(mask)
+        self._len_host += mask
+        self.stats.decode_steps += 1
+        self.stats.peak_live_tokens = max(
+            self.stats.peak_live_tokens, self.live_tokens
+        )
+        stops = None
+        if self.stop_token is not None:
+            stops = np.asarray(jax.device_get(sampled))  # one (B,) read/step
+            self.stats.host_syncs += 1
+        for req in active:
+            req.generated += 1
+            hit_stop = stops is not None and stops[req.slot] == self.stop_token
+            if req.generated >= req.max_new_tokens or hit_stop:
+                self._complete(req)
+        return True
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain every submitted request → {rid: prompt + generated tokens}.
+
+        One device→host transfer materializes the whole token stream after
+        the loop (plus one for the per-request prefill samples).
+        """
+        while self._pending or any(r is not None for r in self._slots):
+            self.step()
+        rids = sorted(self._requests)
+        firsts = {}
+        if rids:
+            stack = jnp.stack([self._requests[r].first_tok for r in rids])
+            vals = np.asarray(jax.device_get(stack))
+            firsts = {r: int(v) for r, v in zip(rids, vals)}
+        stream = (
+            np.asarray(jax.device_get(jnp.stack(self._stream)))
+            if self._stream
+            else np.zeros((0, self.B), np.int32)
+        )
+        out = {}
+        for rid in rids:
+            req = self._requests[rid]
+            toks = [firsts[rid]]
+            lo = req.admit_step
+            toks.extend(
+                int(t) for t in stream[lo : lo + req.generated - 1, req.slot]
+            )
+            out[rid] = list(req.prompt) + toks
+        return out
+
+    def run_all(self, prompts: list[list[int]], max_new_tokens: int) -> list[list[int]]:
+        """Submit + drain in one call → outputs in prompt order."""
+        rids = [self.submit(p, max_new_tokens) for p in prompts]
+        out = self.run()
+        return [out[r] for r in rids]
+
+    # ---- verification (test/debug only: reads the device) ----------------
+    def check_free_list(self) -> None:
+        """Device bitmap ⇔ host allocator ⇔ page-table consistency."""
+        free = np.asarray(jax.device_get(self.free_dev))
+        assert (free == self.alloc.free).all(), "device free bitmap drifted"
+        self.alloc.check()
+        for i in self._attn_slots():
+            pages = np.asarray(jax.device_get(self.caches[i]["pages"]))[0]
+            claimed = pages[pages >= 0]
+            assert len(claimed) == len(set(claimed.tolist())), "double assign"
+            assert not free[claimed].any() if len(claimed) else True
+            assert len(claimed) == self.alloc.live_count

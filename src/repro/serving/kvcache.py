@@ -16,6 +16,16 @@ decode handoff:
                 growth appends a bucket, never copies; capacity stays < 2×
                 the live context + B0.  Attention walks the bucket chain with
                 online-softmax merging — the rw_b access pattern.
+``paged``       the slab arena (DESIGN.md §4): K/V live in one shared pool
+                of ``slab_tokens``-sized slabs; each sequence holds a page
+                table of slab indices.  Growth is "claim a slab" (no copy,
+                no per-sequence worst case) and the fleet's capacity is
+                bounded by live tokens + one slab per sequence.  Attention
+                walks the pages in *geometric groups* (level b = pages
+                ``[2^b−1, 2^(b+1)−1)``), which reproduces the ggarray bucket
+                walk segment-for-segment — bit-exact when ``slab_tokens ==
+                cache_b0``.  Served by ``serving/engine.py::BatchEngine``
+                (continuous batching, slab reclamation).
 
 A cache *slot* (one attention layer kind) is a dict of arrays; the serving
 stack stacks slots over scan periods.  Bucket count is static per compiled
@@ -63,6 +73,9 @@ def cache_capacity(cfg: ModelConfig, policy: str, length_hint: int) -> int:
         while cap < length_hint:
             cap *= 2
         return cap
+    if policy == "paged":
+        T = cfg.slab_tokens
+        return max(-(-length_hint // T), 1) * T
     return indexing.capacity(cfg.cache_b0, needed_levels(cfg.cache_b0, length_hint))
 
 
@@ -104,6 +117,26 @@ def init_cache(
             out["ks"] = zs(cap)
             out["vs"] = zs(cap)
         return out
+    if policy == "paged":
+        # Standalone slot: slabs pre-assigned batch-major (sequence b owns
+        # slabs [b·maxp, (b+1)·maxp)).  BatchEngine instead manages pages
+        # through a shared SlabAllocator (claim on growth, release on
+        # completion) — see init_paged_caches/serving/engine.py.
+        T = cfg.slab_tokens
+        maxp = max(-(-length_hint // T), 1)
+        n_slabs = batch * maxp
+        base = jnp.arange(n_slabs, dtype=jnp.int32).reshape(batch, maxp)
+        out = {
+            "k_pool": jnp.zeros((*lead, n_slabs, T, kh, dh), dtype),
+            "v_pool": jnp.zeros((*lead, n_slabs, T, kh, dh), dtype),
+            "pages": jnp.broadcast_to(base, (*lead, batch, maxp)).copy()
+            if lead
+            else base,
+        }
+        if quant:
+            out["ks_pool"] = jnp.zeros((*lead, n_slabs, T, kh), jnp.bfloat16)
+            out["vs_pool"] = jnp.zeros((*lead, n_slabs, T, kh), jnp.bfloat16)
+        return out
     nlevels = needed_levels(cfg.cache_b0, length_hint)
     cache: Cache = {}
     for lvl, size in enumerate(_level_shapes(cfg, nlevels)):
@@ -140,16 +173,24 @@ def _is_ggarray(cache: Cache) -> bool:
     return "k0" in cache
 
 
+def _is_paged(cache: Cache) -> bool:
+    return "k_pool" in cache
+
+
 def _is_quant(cache: Cache) -> bool:
-    return "ks0" in cache or "ks" in cache
+    return "ks0" in cache or "ks" in cache or "ks_pool" in cache
 
 
 def capacity_of(cache: Cache) -> int:
     """Sequence-slot capacity of one cache slot — static host-side metadata.
 
     Capacity is pytree *structure* (shapes), never device data, so the
-    engine's per-step growth check costs zero transfers.
+    engine's per-step growth check costs zero transfers.  For paged caches
+    this is the page-table reach (claimed or not); the live guarantee is the
+    allocator's, not the shape's.
     """
+    if _is_paged(cache):
+        return cache["pages"].shape[-1] * cache["k_pool"].shape[-3]
     if "k" in cache:
         return cache["k"].shape[-3]
     return indexing.capacity(cache["k0"].shape[-3], _levels(cache))
@@ -263,6 +304,24 @@ def append(cache: Cache, k: jax.Array, v: jax.Array, pos: jax.Array) -> Cache:
     if quant:
         k, k_s = _quantize_kv(k)
         v, v_s = _quantize_kv(v)
+    if _is_paged(cache):
+        # scatter through the page table: slab = pages[b, pos // T].  An
+        # unclaimed page (−1) or out-of-table position drops the write —
+        # the idle-slot / truncation semantics of the batch engine.
+        n_slabs, T = cache["k_pool"].shape[-4:-2]
+        maxp = cache["pages"].shape[-1]
+        pidx = jnp.clip(pos // T, 0, maxp - 1)
+        slab = cache["pages"][rows, pidx]
+        ok = (slab >= 0) & (pos < maxp * T)
+        slab = jnp.where(ok, slab, n_slabs)  # OOB ⇒ mode="drop"
+        slot = pos % T
+        out = dict(cache)
+        out["k_pool"] = cache["k_pool"].at[slab, slot].set(k[:, 0], mode="drop")
+        out["v_pool"] = cache["v_pool"].at[slab, slot].set(v[:, 0], mode="drop")
+        if quant:
+            out["ks_pool"] = cache["ks_pool"].at[slab, slot].set(k_s[:, 0], mode="drop")
+            out["vs_pool"] = cache["vs_pool"].at[slab, slot].set(v_s[:, 0], mode="drop")
+        return out
     if not _is_ggarray(cache):
         cap = cache["k"].shape[-3]
         tgt = jnp.where(pos < cap, pos, cap)  # static policy truncates past cap
@@ -274,20 +333,28 @@ def append(cache: Cache, k: jax.Array, v: jax.Array, pos: jax.Array) -> Cache:
             out["ks"] = cache["ks"].at[rows, tgt].set(k_s[:, 0], mode="drop")
             out["vs"] = cache["vs"].at[rows, tgt].set(v_s[:, 0], mode="drop")
         return out
+    # ggarray: the decode hot path routes through the fused push-back kernel
+    # (offset + every-level scatter in one aliased pass, kernels/push_back) —
+    # one sequence per kernel row, the write position arriving as `sizes`.
+    # All payloads (k/v + quant scales) share the mask/permutation in ONE
+    # launch via the multi-group variant.
+    from repro.kernels.push_back import ops as push_back_ops
+
     n = _levels(cache)
     b0 = cache["k0"].shape[-3]
-    starts = indexing.bucket_starts(b0, n)
-    sizes = indexing.bucket_sizes(b0, n)
+    lane = jnp.ones((k.shape[0], 1), bool)
+    bases = ["k", "v"] + (["ks", "vs"] if quant else [])
+    payloads = [k, v] + ([k_s, v_s] if quant else [])
+    bucket_groups = tuple(
+        tuple(cache[f"{base}{lvl}"] for lvl in range(n)) for base in bases
+    )
+    groups, _, _ = push_back_ops.push_back_fused_multi(
+        bucket_groups, pos, b0, tuple(payloads), lane
+    )
     out = dict(cache)
-    for lvl in range(n):
-        li = pos - starts[lvl]
-        ok = (li >= 0) & (li < sizes[lvl])
-        li = jnp.where(ok, li, sizes[lvl])
-        out[f"k{lvl}"] = cache[f"k{lvl}"].at[rows, li].set(k[:, 0], mode="drop")
-        out[f"v{lvl}"] = cache[f"v{lvl}"].at[rows, li].set(v[:, 0], mode="drop")
-        if quant:
-            out[f"ks{lvl}"] = cache[f"ks{lvl}"].at[rows, li].set(k_s[:, 0], mode="drop")
-            out[f"vs{lvl}"] = cache[f"vs{lvl}"].at[rows, li].set(v_s[:, 0], mode="drop")
+    for base, levels in zip(bases, groups):
+        for lvl in range(n):
+            out[f"{base}{lvl}"] = levels[lvl]
     return out
 
 
@@ -320,7 +387,11 @@ def attend(
     Returns (B, 1, H, Dh).  For ggarray caches this is the paper's bucket
     walk: one partial-softmax pass per level, merged online — the O(log n)
     'multiple pointers' cost the paper measures in Fig. 5 is the extra
-    per-level masking/merge here.
+    per-level masking/merge here.  Paged caches walk the page table in the
+    same geometric segmentation (level b = pages [2^b−1, 2^(b+1)−1), padded
+    to the full level width), so with ``slab_tokens == cache_b0`` the result
+    is **bit-exact** vs the ggarray walk whenever ``length ≥ 1`` — stale
+    slab contents only ever sit behind exact-zero softmax weights.
     """
     B, _, H, Dh = q.shape
     kh = cfg.n_kv_heads
@@ -340,6 +411,9 @@ def attend(
             return ck, cv
         return _dequant(ck, sk), _dequant(cv, sv)
 
+    if _is_paged(cache):
+        out = _attend_paged(cache, qf, length, cfg, state, _kv)
+        return out.reshape(B, 1, H, Dh).astype(q.dtype)
     if _is_ggarray(cache):
         n = _levels(cache)
         b0 = cache["k0"].shape[-3]
@@ -360,6 +434,46 @@ def attend(
     return out.reshape(B, 1, H, Dh).astype(q.dtype)
 
 
+def _gather_pool(pool: jax.Array, grp: jax.Array) -> jax.Array:
+    """pool (S, T, …), page group (B, w) → (B, w·T, …); −1 pages gather slab 0
+    (the values are dead: every lane they cover is softmax-masked)."""
+    S, T = pool.shape[:2]
+    out = pool[jnp.clip(grp, 0, max(S - 1, 0))]  # (B, w, T, …)
+    return out.reshape(grp.shape[0], grp.shape[1] * T, *pool.shape[2:])
+
+
+def _attend_paged(cache, qf, length, cfg, state, _kv):
+    """The paged walk: geometric page groups, or the flash-decode kernel."""
+    from repro.pool.arena import geometric_page_groups
+
+    pages = cache["pages"]
+    T = cache["k_pool"].shape[-3]
+    if cfg.paged_attend_impl == "pallas" and not _is_quant(cache):
+        from repro.kernels.paged import ops as paged_ops
+
+        return paged_ops.paged_attend(
+            qf, cache["k_pool"], cache["v_pool"], pages, length
+        )
+    for lo, hi in geometric_page_groups(pages.shape[-1]):
+        width = hi - lo
+        full = 1
+        while full < width:
+            full *= 2
+        grp = pages[:, lo:hi]
+        if width < full:  # pad to the ggarray level width (exact no-op lanes)
+            grp = jnp.pad(grp, ((0, 0), (0, full - width)), constant_values=-1)
+        kk, vv = _kv(
+            _gather_pool(cache["k_pool"], grp),
+            _gather_pool(cache["v_pool"], grp),
+            _gather_pool(cache["ks_pool"], grp) if "ks_pool" in cache else None,
+            _gather_pool(cache["vs_pool"], grp) if "vs_pool" in cache else None,
+        )
+        kpos = lo * T + jnp.arange(full * T)
+        state = _partial_scores(qf, kk, vv, kpos, length, state)
+    m, l, acc = state
+    return acc / jnp.maximum(l[..., None], 1e-30)
+
+
 # --------------------------------------------------------------------------
 # prefill → cache (the phase transition: contiguous K/V sliced into buckets).
 # --------------------------------------------------------------------------
@@ -378,6 +492,32 @@ def fill_from_prefill(
     if quant:
         k_full, k_s = _quantize_kv(k_full)
         v_full, v_s = _quantize_kv(v_full)
+    if _is_paged(cache):
+        # page-sliced scatter: page p takes positions [p·T, (p+1)·T); rows
+        # whose page is unclaimed drop (shorter sequences in the batch)
+        n_slabs, T = cache["k_pool"].shape[-4:-2]
+        maxp = cache["pages"].shape[-1]
+        npages = min(-(-S // T), maxp)
+        rows = jnp.arange(k_full.shape[0])
+
+        def _seg(x, p):  # (B, ≤T, …) zero-padded to T
+            seg = x[:, p * T : (p + 1) * T]
+            if seg.shape[1] < T:
+                widths = [(0, 0)] * x.ndim
+                widths[1] = (0, T - seg.shape[1])
+                seg = jnp.pad(seg, widths)
+            return seg
+
+        out = dict(cache)
+        for p in range(npages):
+            slab = cache["pages"][rows, p]
+            tgt = jnp.where(slab >= 0, slab, n_slabs)  # drop unclaimed
+            out["k_pool"] = out["k_pool"].at[tgt].set(_seg(k_full, p), mode="drop")
+            out["v_pool"] = out["v_pool"].at[tgt].set(_seg(v_full, p), mode="drop")
+            if quant:
+                out["ks_pool"] = out["ks_pool"].at[tgt].set(_seg(k_s, p), mode="drop")
+                out["vs_pool"] = out["vs_pool"].at[tgt].set(_seg(v_s, p), mode="drop")
+        return out
     if not _is_ggarray(cache):
         cap = cache["k"].shape[-3]
         n = min(S, cap)

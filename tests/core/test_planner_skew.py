@@ -1,0 +1,73 @@
+"""CapacityPlanner with host-known masks: skew-exact per-block bounds."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ggarray as gg
+
+
+def _run(nwaves, m, make_mask, use_host_mask):
+    arr = gg.init(4, b0=8, nbuckets=2)
+    planner = gg.CapacityPlanner()
+    for w in range(nwaves):
+        mask = make_mask(w)
+        planner_mask = mask if use_host_mask else jnp.asarray(mask)
+        arr = planner.reserve(arr, m, mask=planner_mask)
+        arr, _, hr = gg.append(arr, jnp.ones((4, m)), jnp.asarray(mask))
+        planner.note_append(arr, hr)
+    return arr, planner
+
+
+def test_host_mask_skew_fewer_syncs_than_device_mask():
+    """One dense lane in a wide wave: the scalar bound advances by m per
+    wave and syncs every ~capacity/m waves; the host-mask vector bound
+    advances by 1 and stays silent until the target block really fills."""
+    m = 8
+
+    def one_lane(_w):
+        mask = np.zeros((4, m), bool)
+        mask[2, 0] = True
+        return mask
+
+    _, host_planner = _run(12, m, one_lane, use_host_mask=True)
+    _, dev_planner = _run(12, m, one_lane, use_host_mask=False)
+    assert host_planner.host_syncs == 0
+    assert dev_planner.host_syncs > 0
+    assert host_planner.size_ub == 12  # exact: 12 waves × 1 lane
+
+
+def test_host_mask_growth_is_skew_exact():
+    """Growth under host masks sizes capacity for the true max, not max+m."""
+    m = 16
+
+    def dense_one_block(_w):
+        mask = np.zeros((4, m), bool)
+        mask[0] = True
+        return mask
+
+    arr, planner = _run(4, m, dense_one_block, use_host_mask=True)
+    sizes = np.asarray(jax.device_get(arr.sizes))
+    np.testing.assert_array_equal(sizes, [64, 0, 0, 0])
+    assert planner.size_ub == 64
+    # never grows further than the skewed block needs
+    assert arr.capacity_per_block >= 64
+    assert gg.init(4, b0=8, nbuckets=arr.nbuckets - 1).capacity_per_block < 64
+
+
+def test_device_mask_still_correct_if_pessimistic():
+    m = 4
+
+    def random_mask(w):
+        return (np.arange(4 * m).reshape(4, m) + w) % 3 == 0
+
+    arr_h, _ = _run(6, m, random_mask, use_host_mask=True)
+    arr_d, _ = _run(6, m, random_mask, use_host_mask=False)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(arr_h.sizes)),
+        np.asarray(jax.device_get(arr_d.sizes)),
+    )
+    fh, th = gg.flatten(arr_h)
+    fd, td = gg.flatten(arr_d)
+    n = int(jax.device_get(th))
+    assert n == int(jax.device_get(td))
+    np.testing.assert_array_equal(np.asarray(fh)[:n], np.asarray(fd)[:n])

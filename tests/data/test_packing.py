@@ -44,3 +44,30 @@ def test_property_token_conservation(doc_lens, seed):
     out = p.pack(batch=1, seq=max(total, 1))
     got = np.asarray(out["tokens"]).reshape(-1)[: total]
     assert sorted(got.tolist()) == sorted(all_tokens)
+
+
+def test_arena_backend_matches_pipeline_backend():
+    """Same documents through shared-pool slabs → identical packed batches."""
+    rng = np.random.default_rng(11)
+    docs = [rng.integers(1, 500, rng.integers(1, 30)).tolist() for _ in range(20)]
+    outs = {}
+    for backend in ("pipeline", "arena"):
+        p = Packer(nblocks=4, b0=16, backend=backend)
+        for d in docs:
+            p.add_document(d)
+        outs[backend] = p.pack(batch=4, seq=48)
+        p.add_document([1, 2, 3])  # ingestion resumes after pack (thaw)
+    np.testing.assert_array_equal(
+        np.asarray(outs["pipeline"]["tokens"]), np.asarray(outs["arena"]["tokens"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs["pipeline"]["loss_mask"]),
+        np.asarray(outs["arena"]["loss_mask"]),
+    )
+
+
+def test_arena_backend_is_sync_free():
+    p = Packer(nblocks=4, b0=16, backend="arena")
+    for i in range(10):
+        p.add_document([i] * 7)
+    assert p.stats.host_syncs == 0

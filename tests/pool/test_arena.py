@@ -1,0 +1,146 @@
+"""Slab arena: GGArray parity, free-list invariants, reclamation, quotas."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import ggarray as gg
+from repro.pool import QuotaExceeded, SlabArena
+from repro.runtime import TwoPhasePipeline
+
+
+def test_arena_append_matches_ggarray_bitwise():
+    """Same waves → identical positions, sizes, and flattened contents."""
+    rng = np.random.default_rng(0)
+    arena = SlabArena(4, 8, dtype=jnp.float32)
+    ref = gg.init(4, b0=8, dtype=jnp.float32, nbuckets=1)
+    planner = gg.CapacityPlanner()
+    for _ in range(10):
+        m = int(rng.integers(1, 9))
+        elems = jnp.asarray(rng.standard_normal((4, m)), jnp.float32)
+        mask = rng.random((4, m)) > 0.3
+        pos_a = arena.append(elems, mask)
+        ref = planner.reserve(ref, m, mask=mask)
+        ref, pos_g, hr = gg.append(ref, elems, jnp.asarray(mask))
+        planner.note_append(ref, hr)
+        np.testing.assert_array_equal(np.asarray(pos_a), np.asarray(pos_g))
+    flat_a, tot_a, _ = arena.flatten()
+    flat_g, tot_g = gg.flatten(ref)
+    n = int(jax.device_get(tot_a))
+    assert n == int(jax.device_get(tot_g))
+    np.testing.assert_array_equal(np.asarray(flat_a)[:n], np.asarray(flat_g)[:n])
+    assert arena.host_syncs == 0, "host-known masks must plan without syncs"
+    arena.check_invariants()
+
+
+def test_arena_capacity_bound():
+    """Fleet capacity ≤ live tokens + one slab per array (demand growth)."""
+    rng = np.random.default_rng(1)
+    arena = SlabArena(6, 16, dtype=jnp.float32)
+    for _ in range(8):
+        m = int(rng.integers(1, 20))
+        arena.append(jnp.ones((6, m), jnp.float32))
+    stats = arena.check_invariants()
+    assert stats["capacity_tokens"] <= stats["live_tokens"] + 16 * 6
+    assert stats["capacity_tokens"] < 2 * stats["live_tokens"] + 16 * 6
+
+
+def test_arena_nonscalar_items_flatten():
+    arena = SlabArena(2, 4, item_shape=(3,), dtype=jnp.float32)
+    elems = jnp.arange(2 * 5 * 3, dtype=jnp.float32).reshape(2, 5, 3)
+    arena.append(elems)
+    flat, total, starts = arena.flatten()
+    assert int(jax.device_get(total)) == 10
+    np.testing.assert_array_equal(
+        np.asarray(flat)[:5], np.asarray(elems[0])
+    )
+    np.testing.assert_array_equal(np.asarray(flat)[5:10], np.asarray(elems[1]))
+
+
+def test_release_then_reuse_before_growth():
+    arena = SlabArena(3, 8, dtype=jnp.float32)
+    arena.append(jnp.ones((3, 20), jnp.float32))
+    grown_before = arena.alloc.grown_slabs
+    arena.release(1)
+    freed = arena.alloc.free_count
+    assert freed == 3  # ceil(20/8)
+    # next growth on another tenant must consume the freed slabs first
+    arena.append(
+        jnp.ones((3, 16), jnp.float32),
+        np.asarray([[True] * 16, [False] * 16, [True] * 16]),
+    )
+    assert arena.alloc.reuse_claims >= 3, "freed slabs must be reused"
+    assert arena.alloc.grown_slabs == grown_before + 1, (
+        "pool may grow only for the shortfall beyond the free list"
+    )
+    arena.check_invariants()
+
+
+def test_quota_rejects_runaway_tenant():
+    arena = SlabArena(2, 4, quota_slabs=2, dtype=jnp.float32)
+    arena.append(jnp.ones((2, 8), jnp.float32))  # 2 slabs each: at quota
+    with pytest.raises(QuotaExceeded):
+        arena.append(jnp.ones((2, 4), jnp.float32))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_interleaved_admit_grow_evict_never_double_assigns(seed):
+    """Property: any interleaving of appends and releases keeps every slab
+    either free or owned by exactly one array, with freed slabs reused
+    before the pool grows."""
+    rng = np.random.default_rng(seed)
+    n = 4
+    arena = SlabArena(n, 4, dtype=jnp.float32)
+    for _ in range(12):
+        if rng.random() < 0.3:
+            arena.release(int(rng.integers(0, n)))
+            continue
+        m = int(rng.integers(1, 10))
+        mask = rng.random((n, m)) < 0.7
+        free_before = arena.alloc.free_count
+        grown_before = arena.alloc.grown_slabs
+        arena.append(
+            jnp.asarray(rng.standard_normal((n, m)), jnp.float32), mask
+        )
+        claimed = (
+            arena.alloc.grown_slabs - grown_before
+            + free_before - arena.alloc.free_count
+        )
+        if arena.alloc.grown_slabs > grown_before:
+            # growth only for the shortfall: the free list was consumed
+            assert arena.alloc.free_count == 0 or claimed >= free_before
+    stats = arena.check_invariants()
+    assert stats["capacity_tokens"] <= stats["live_tokens"] + 4 * n + 4 * n
+
+
+def test_pipeline_from_arena_freeze_thaw():
+    """TwoPhasePipeline lifecycle over arena-backed storage."""
+    pipe = TwoPhasePipeline.from_arena(SlabArena(4, 8, dtype=jnp.float32))
+    ref = TwoPhasePipeline(4, 8, dtype=jnp.float32)
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        m = int(rng.integers(1, 12))
+        elems = jnp.asarray(rng.standard_normal((4, m)), jnp.float32)
+        mask = rng.random((4, m)) > 0.4
+        p1 = pipe.append(elems, mask)
+        p2 = ref.append(elems, np.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    fa, fg = pipe.freeze(), ref.freeze()
+    n = int(jax.device_get(fa.size))
+    assert n == int(jax.device_get(fg.size))
+    np.testing.assert_array_equal(
+        np.asarray(fa.data)[:n], np.asarray(fg.data)[:n]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fa.block_starts), np.asarray(fg.block_starts)
+    )
+    pipe.thaw()
+    pipe.append(jnp.ones((4, 3), jnp.float32))  # grow resumes after thaw
+    assert pipe.total_size() == n + 12

@@ -30,7 +30,7 @@ def test_policies_equivalent_over_random_traces(n, seed):
     q = jnp.asarray(rng.standard_normal((B, 1, H, DH)), jnp.float32)
     lengths = jnp.asarray(rng.integers(1, n + 1, B), jnp.int32)
     outs = {}
-    for policy in ("static", "semistatic", "ggarray"):
+    for policy in ("static", "semistatic", "ggarray", "paged"):
         cache = kvcache.init_cache(CFG, B, max(n, 8), policy, dtype=jnp.float32)
         # interleave fill styles: bulk prefill then per-step appends
         split = int(rng.integers(0, n + 1))
@@ -40,3 +40,5 @@ def test_policies_equivalent_over_random_traces(n, seed):
         outs[policy] = np.asarray(kvcache.attend(cache, q, lengths, CFG))
     np.testing.assert_allclose(outs["static"], outs["ggarray"], rtol=3e-5, atol=3e-5)
     np.testing.assert_allclose(outs["static"], outs["semistatic"], rtol=3e-5, atol=3e-5)
+    # the paged walk reproduces the ggarray bucket walk bit-for-bit
+    np.testing.assert_array_equal(outs["paged"], outs["ggarray"])
