@@ -1,0 +1,147 @@
+"""Memory-space kernel matrix — vmem vs hbm tilings, one-hot vs MXU dispatch.
+
+Every indirection kernel family runs under two ``GridPlan`` tilings
+(``kernels/common``, DESIGN.md §4.7): the all-VMEM-resident layout and the
+HBM-resident layout whose scalar-prefetched tables drive per-tile DMA.  The
+rows time both on identical inputs:
+
+``kernels.<family>.{vmem,hbm}.n*``
+    paged gather, slab-append, fused push-back, and segmented flatten.
+    Off-TPU these wall-clocks are interpreter-relative (the hbm tilings run
+    more, smaller grid steps, so they are *slower* under interpretation —
+    the claim under test is bit-identical results and the DMA-sized
+    footprint, not CPU ms; on a real TPU the vmem tiling simply cannot hold
+    serving-scale pools resident).
+
+``kernels.dispatch.{onehot,mxu}.m*``
+    the insert permutation below and above ``common.MXU_DISPATCH_WAVE``
+    lanes — the exact int32 one-hot reduction vs the dispatch matmul
+    (``kernels/dispatch_mxu.permute_rows``), bit-exact by construction.
+
+Usage: ``python benchmarks/bench_kernels.py [--smoke]`` → rows on stdout +
+``BENCH_kernels.json`` (benchmarks/run.py schema).
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, emit, smoke_mode, timeit, write_json
+from repro.core import ggarray as gg
+from repro.core import indexing
+from repro.kernels.flatten import ops as flatten_ops
+from repro.kernels.paged import ops as paged_ops
+from repro.kernels.push_back import ops as pb_ops
+
+SPACES = ("vmem", "hbm")
+
+
+def _paged_setup(rng, S, T, N, P, D):
+    pages = np.full((N, P), -1, np.int32)
+    perm = rng.permutation(S)
+    k = 0
+    for i in range(N):
+        for p in range(rng.integers(1, P + 1)):
+            pages[i, p] = perm[k]
+            k += 1
+    owners = np.full((S,), -1, np.int32)
+    bases = np.zeros((S,), np.int32)
+    for i in range(N):
+        for p in range(P):
+            if pages[i, p] >= 0:
+                owners[pages[i, p]] = i
+                bases[pages[i, p]] = p * T
+    pool = jnp.asarray(rng.standard_normal((S, T, D)), jnp.float32)
+    return pool, jnp.asarray(pages), jnp.asarray(owners), jnp.asarray(bases)
+
+
+def main() -> None:
+    smoke = smoke_mode() or "--smoke" in sys.argv
+    rng = np.random.default_rng(0)
+    reps = dict(repeats=3, warmup=1) if smoke else dict(repeats=5, warmup=2)
+
+    # --- paged gather + slab append --------------------------------------
+    S, T, N, P, D = (16, 8, 8, 2, 4) if smoke else (96, 16, 24, 4, 16)
+    m = 8 if smoke else 32
+    pool, pages, owners, bases = _paged_setup(rng, S, T, N, P, D)
+    sizes = jnp.asarray(rng.integers(0, T, N), jnp.int32)
+    elems = jnp.asarray(rng.standard_normal((N, m, D)), jnp.float32)
+    n = S * T * D
+    for space in SPACES:
+        us = timeit(
+            lambda: paged_ops.paged_gather(pool, pages, memory_space=space), **reps
+        )
+        emit(f"kernels.gather.{space}.n{n}", us, f"S={S} T={T} N={N} P={P}")
+    wave_mask = jnp.ones((N, m), bool)
+    for space in SPACES:
+        us = timeit(
+            lambda: paged_ops.slab_append(
+                pool, owners, bases, sizes, elems, wave_mask, memory_space=space
+            ),
+            **reps,
+        )
+        emit(f"kernels.slab_append.{space}.n{n}", us, f"wave={N}x{m}")
+
+    # --- fused push-back ---------------------------------------------------
+    nblocks, b0, nlev = (8, 8, 3) if smoke else (16, 64, 5)
+    mm = 8 if smoke else 32
+    arr = gg.init(nblocks, b0, dtype=jnp.float32, nbuckets=nlev)
+    wave = jnp.asarray(rng.standard_normal((nblocks, mm)), jnp.float32)
+    wmask = jnp.asarray(rng.random((nblocks, mm)) > 0.3)
+    wsizes = jnp.asarray(rng.integers(0, b0, nblocks), jnp.int32)
+    cap = nblocks * indexing.capacity(b0, nlev)
+    for space in SPACES:
+        us = timeit(
+            lambda: pb_ops.push_back_fused(
+                arr.buckets, wsizes, b0, wave, wmask, memory_space=space
+            ),
+            **reps,
+        )
+        emit(f"kernels.push_back.{space}.n{cap}", us, f"levels={nlev} m={mm}")
+
+    # --- segmented flatten -------------------------------------------------
+    per = rng.integers(0, indexing.capacity(b0, nlev) + 1, nblocks)
+    fm = max(int(per.max()), 1)
+    fel = jnp.asarray(rng.standard_normal((nblocks, fm)), jnp.float32)
+    fmask = jnp.asarray(np.arange(fm)[None, :] < per[:, None])
+    farr, _ = gg.push_back(
+        gg.init(nblocks, b0, dtype=jnp.float32, nbuckets=nlev), fel, fmask
+    )
+    for space in SPACES:
+        us = timeit(
+            lambda: flatten_ops.flatten_segmented(
+                farr.buckets, farr.sizes, farr.b0, memory_space=space
+            ),
+            **reps,
+        )
+        emit(f"kernels.flatten.{space}.n{cap}", us, f"levels={nlev}")
+
+    # --- dispatch: one-hot vs MXU across the wave threshold ----------------
+    waves = (8, 128) if smoke else (32, 128, 256)
+    for wm in waves:
+        delems = jnp.asarray(rng.standard_normal((nblocks, wm)), jnp.float32)
+        dmask = jnp.asarray(rng.random((nblocks, wm)) > 0.3)
+        outs = {}
+        for disp in ("onehot", "mxu"):
+            us = timeit(
+                lambda: pb_ops.push_back_fused(
+                    arr.buckets, wsizes, b0, delems, dmask, dispatch=disp
+                ),
+                **reps,
+            )
+            outs[disp] = pb_ops.push_back_fused(
+                arr.buckets, wsizes, b0, delems, dmask, dispatch=disp
+            )
+            emit(f"kernels.dispatch.{disp}.m{wm}", us, f"threshold=128")
+        for a, b in zip(jax.tree.leaves(outs["onehot"]), jax.tree.leaves(outs["mxu"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+if __name__ == "__main__":
+    start = len(Row.rows)
+    print("name,us_per_call,derived")
+    main()
+    write_json("kernels", Row.rows[start:])

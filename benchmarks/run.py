@@ -17,6 +17,7 @@ def main() -> None:
     from benchmarks import (
         bench_append,
         bench_insertion,
+        bench_kernels,
         bench_kvcache,
         bench_memory,
         bench_nblocks,
@@ -35,6 +36,7 @@ def main() -> None:
         bench_operations,   # Table II / Fig. 5
         bench_append,       # host-sync-free grow protocol (PR 2 headline)
         bench_two_phase,    # Fig. 6
+        bench_kernels,      # memory-space tilings + MXU dispatch (PR 4)
         bench_kvcache,      # beyond-paper serving payoff
         bench_pool,         # slab arena: fleet capacity + sequences/s
     ):

@@ -92,6 +92,9 @@ class ModelConfig:
     # the ggarray bucket walk) and the attend implementation behind it
     cache_slab: int = 0
     paged_attend_impl: Literal["levels", "pallas"] = "levels"
+    # memory space for the indirection kernels (paged / push_back / flatten):
+    # None = auto (hbm on TPU, vmem in interpret mode — kernels/common)
+    kernel_memory_space: Literal["vmem", "hbm"] | None = None
     insertion_method: str = "scan"
     remat: bool = True
 

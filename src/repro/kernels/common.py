@@ -1,22 +1,74 @@
-"""Shared kernel utilities: interpret-mode policy and padding helpers.
+"""Shared kernel utilities: interpret policy, memory-space grid layer, padding.
 
-All kernels target TPU (``pl.pallas_call`` + explicit ``BlockSpec`` VMEM
-tiling).  On non-TPU backends (this container is CPU) they execute in
-``interpret=True`` mode, which runs the kernel body as traced JAX ops — the
-correctness oracle path used by the test suite.  ``REPRO_FORCE_INTERPRET=1``
-forces interpret mode everywhere (CI sets it so kernel regressions surface
-on CPU runners regardless of backend detection).
+All kernels target TPU (``pl.pallas_call`` + explicit ``BlockSpec`` tiling).
+On non-TPU backends (this container is CPU) they execute in ``interpret=True``
+mode, which runs the kernel body as traced JAX ops — the correctness oracle
+path used by the test suite.  ``REPRO_FORCE_INTERPRET=1`` forces interpret
+mode everywhere (CI sets it so kernel regressions surface on CPU runners
+regardless of backend detection).
+
+Memory spaces (DESIGN.md §4 "Memory-space tiers")
+-------------------------------------------------
+The three indirection kernel families (``kernels/paged``,
+``kernels/push_back``, ``kernels/flatten``) each exist in two tilings behind
+one :class:`GridPlan`:
+
+``"vmem"``
+    Every operand is auto-pipelined into VMEM by its ``BlockSpec``; the
+    indirection tables (page tables, size vectors, prefix sums) ride along as
+    ordinary tiled operands and the *data* operands (slab pool, bucket
+    levels, compacted plane) are resident per grid step.  Cheap to launch and
+    exactly what interpret mode wants — but per-step residency scales with
+    the whole pool, which caps the problem size on a real chip.
+
+``"hbm"``
+    The data stays HBM-resident.  The indirection tables become
+    **scalar-prefetch operands** (``pltpu.PrefetchScalarGridSpec``) — they are
+    tiny (Tarjan & Zwick: O(√n)–O(log n) entries), live in SMEM, and are
+    available *before* the kernel body runs, so a ``BlockSpec.index_map`` can
+    read them to DMA exactly one slab / level / block-row tile per grid step.
+    Kernels that need data-dependent tile *counts* (flatten's ragged block
+    spans, push_back's touched levels) instead take ``pltpu.ANY``-space refs
+    and issue explicit ``make_async_copy`` DMAs gated by prefetched touch
+    tables.
+
+Both spaces run the same index math and are bit-exact against the jnp
+oracles; ``resolve_memory_space`` picks ``vmem`` under interpret mode and
+``hbm`` on a real TPU unless overridden (arg > ``REPRO_MEMORY_SPACE`` env >
+backend default).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
+from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["should_interpret", "pad_to", "MXU_LANE"]
+__all__ = [
+    "should_interpret",
+    "pad_to",
+    "MXU_LANE",
+    "MEMORY_SPACES",
+    "resolve_memory_space",
+    "DISPATCH_METHODS",
+    "MXU_DISPATCH_WAVE",
+    "resolve_dispatch",
+    "GridPlan",
+]
 
 MXU_LANE = 128  # MXU systolic dimension / VREG lane count
+
+MEMORY_SPACES = ("vmem", "hbm")
+
+# Wave width at which the insert permutation moves from the exact int32
+# one-hot reduction (VPU, O(m²) compares) to the MXU dispatch matmul — one
+# full lane tile is where the systolic array starts beating the compare tree.
+MXU_DISPATCH_WAVE = MXU_LANE
+DISPATCH_METHODS = ("auto", "onehot", "mxu")
 
 
 def should_interpret(interpret: bool | None) -> bool:
@@ -28,6 +80,47 @@ def should_interpret(interpret: bool | None) -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_memory_space(
+    memory_space: str | None, interpret: bool | None = None
+) -> str:
+    """Resolve the kernel memory space: arg > env > backend default.
+
+    The default is ``"hbm"`` on a real TPU (pools/levels cannot be VMEM
+    resident at serving scale) and ``"vmem"`` in interpret mode (everything
+    is host memory anyway and the simpler tiling traces faster).  Setting
+    ``REPRO_MEMORY_SPACE=vmem|hbm`` overrides the default everywhere — the
+    hook CI uses to run the hbm tilings on CPU runners.
+    """
+    env = os.environ.get("REPRO_MEMORY_SPACE")
+    space = memory_space if memory_space is not None else env
+    if space is None:
+        space = "vmem" if should_interpret(interpret) else "hbm"
+    if space not in MEMORY_SPACES:
+        raise ValueError(f"memory_space {space!r} not in {MEMORY_SPACES}")
+    return space
+
+
+def resolve_dispatch(dispatch: str, m: int, dtype: Any) -> str:
+    """Resolve the insert-permutation backend for an ``m``-wide wave.
+
+    ``"auto"`` routes waves of at least :data:`MXU_DISPATCH_WAVE` lanes
+    through the MXU dispatch matmul — but only for payloads the f32 matmul
+    reproduces bit-for-bit (f32/bf16/f16, int8/int16); wide ints and f64
+    can exceed the f32 mantissa the MXU accumulates in and stay on the
+    exact one-hot reduction.  Explicit ``"onehot"``/``"mxu"`` are honored
+    as given.
+    """
+    if dispatch not in DISPATCH_METHODS:
+        raise ValueError(f"dispatch {dispatch!r} not in {DISPATCH_METHODS}")
+    if dispatch != "auto":
+        return dispatch
+    dt = jnp.dtype(dtype)
+    exact = (jnp.issubdtype(dt, jnp.floating) and dt.itemsize <= 4) or (
+        jnp.issubdtype(dt, jnp.integer) and dt.itemsize <= 2
+    )
+    return "mxu" if m >= MXU_DISPATCH_WAVE and exact else "onehot"
+
+
 def pad_to(x: jax.Array, multiple: int, axis: int, value=0) -> jax.Array:
     """Zero-pad ``axis`` up to the next multiple (VMEM tile alignment)."""
     size = x.shape[axis]
@@ -37,3 +130,76 @@ def pad_to(x: jax.Array, multiple: int, axis: int, value=0) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, rem)
     return jnp.pad(x, widths, constant_values=value)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """One kernel grid, two memory spaces — the shared scalar-prefetch layer.
+
+    A kernel family builds one ``GridPlan`` per memory space and calls
+    :meth:`pallas_call`; the plan owns the mechanics that differ between the
+    spaces so the kernel modules only describe *what* each operand is:
+
+    * operand order is uniform — ``body(*tables, *tensors, *outs, *scratch)``
+      in both spaces, with the ``num_tables`` leading operands being the
+      int32 indirection tables;
+    * on the ``hbm`` path the tables become ``PrefetchScalarGridSpec`` scalar
+      operands (SMEM, readable from every ``index_map``), and
+      ``table_specs`` is ignored;
+    * on the ``vmem`` path the tables are ordinary operands tiled by
+      ``table_specs``;
+    * ``aliases`` maps *tensor*-operand positions to outputs; the plan
+      offsets them by the table count for the flat numbering
+      ``input_output_aliases`` wants (scalar-prefetch operands included).
+
+    ``in_specs`` entries may be ``pl.BlockSpec(memory_space=pltpu.ANY)`` for
+    operands the body DMAs manually (flatten's compact plane, push_back's
+    bucket levels).
+    """
+
+    memory_space: str
+    grid: tuple[int, ...]
+    num_tables: int
+    table_specs: Sequence[Any]
+    in_specs: Sequence[Any]
+    out_specs: Any
+    scratch_shapes: Sequence[Any] = ()
+    aliases: Mapping[int, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.memory_space not in MEMORY_SPACES:
+            raise ValueError(
+                f"memory_space {self.memory_space!r} not in {MEMORY_SPACES}"
+            )
+
+    def pallas_call(self, body, out_shape, *, interpret: bool = False):
+        """→ the configured ``pl.pallas_call`` (call it with tables first)."""
+        aliases = {self.num_tables + i: o for i, o in self.aliases.items()}
+        if self.memory_space == "hbm":
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=self.num_tables,
+                grid=self.grid,
+                in_specs=list(self.in_specs),
+                out_specs=self.out_specs,
+                scratch_shapes=list(self.scratch_shapes),
+            )
+            return pl.pallas_call(
+                body,
+                grid_spec=grid_spec,
+                out_shape=out_shape,
+                input_output_aliases=aliases,
+                interpret=interpret,
+            )
+        kwargs: dict[str, Any] = {}
+        if self.scratch_shapes:
+            kwargs["scratch_shapes"] = list(self.scratch_shapes)
+        return pl.pallas_call(
+            body,
+            grid=self.grid,
+            in_specs=list(self.table_specs) + list(self.in_specs),
+            out_specs=self.out_specs,
+            out_shape=out_shape,
+            input_output_aliases=aliases,
+            interpret=interpret,
+            **kwargs,
+        )

@@ -13,6 +13,11 @@ MoE substrate (models/moe.py) and GGArray's bulk push_back share this kernel
 
 Grid iterates destination tiles in the leading dim and accumulates over source
 tiles in the (sequential) trailing dim; negative slots are dropped.
+
+``permute_rows`` exposes the same one-hot-matmul trick as an *in-body*
+building block: the push_back / slab-append kernels call it to apply their
+insert permutation on the MXU when the wave is at least a lane tile wide
+(``common.MXU_DISPATCH_WAVE``), instead of the exact int32 one-hot reduction.
 """
 from __future__ import annotations
 
@@ -20,7 +25,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dispatch_pallas", "combine_pallas"]
+__all__ = ["dispatch_pallas", "combine_pallas", "permute_rows"]
+
+
+def permute_rows(onehot: jax.Array, elems: jax.Array) -> jax.Array:
+    """Apply a per-row insert permutation as an MXU matmul: ``P·X``.
+
+    ``onehot: (rows, m, m) bool`` with ``onehot[r, o, k]`` = "slot ``o`` takes
+    wave lane ``k``" (at most one ``k`` per ``o``); ``elems: (rows, m, D)``.
+    Returns ``(rows, m, D)`` in ``elems.dtype``.  Each output row of the
+    matmul has exactly one nonzero term (value · 1.0, the rest value · 0.0),
+    so the f32 accumulation is **bit-exact** for any payload whose values are
+    f32-representable — f32/bf16/f16 and narrow ints; wide ints past the f32
+    mantissa are the caller's ``resolve_dispatch`` exclusion.  Slots no lane
+    maps to come back 0 rather than the one-hot path's lane 0 — both are dead
+    under the callers' ``o < count`` write guard.
+    """
+    p = onehot.astype(jnp.float32)
+    x = elems.astype(jnp.float32)
+    out = jax.lax.dot_general(
+        p, x, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    return out.astype(elems.dtype)
 
 DEFAULT_T_TILE = 128
 DEFAULT_S_TILE = 128

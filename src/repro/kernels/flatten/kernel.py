@@ -3,32 +3,35 @@
 The two-phase pattern flattens the bucket chain into a contiguous array once
 per growth phase.  Per-block compaction is *fully static*: bucket level ``b``
 always lands at column ``B0·(2^b − 1)`` of the per-block row (the LFVector
-address map), so that kernel is a pure VMEM copy with static offsets — one
-grid step per block tile, all levels copied inside the body.
+address map), so that kernel is a pure copy with static offsets.
 
 The dynamic part — block-major global ordering by the runtime prefix table —
 has two implementations:
 
 ``segmented_gather_pallas`` (the default, O(n))
     One grid step per output tile.  Each output index ``i`` belongs to the
-    block whose ``block_starts`` interval contains it; with ``nblocks``
-    prefix sums resident on-chip, locating the owner is a broadcasted
-    compare-and-count (a vectorized ``searchsorted``), and the element itself
-    is a single gather from the compacted rows.  Work is
-    O(capacity · log-ish nblocks) — linear in the array, unlike the one-hot
-    dispatch matmul which multiplies a (T × S) one-hot against the data and
-    is quadratic in the element count.  This is what lets the freeze step of
-    the two-phase runtime run at copy speed (DESIGN.md §2).
+    block whose ``block_starts`` interval contains it; locating the owner is
+    a broadcasted compare-and-count against the (tiny) prefix table (a
+    vectorized ``searchsorted``), and the element itself is a single gather
+    from the compacted rows.  Work is O(capacity · log-ish nblocks) — linear
+    in the array, unlike the one-hot dispatch matmul which multiplies a
+    (T × S) one-hot against the data and is quadratic in the element count.
+    This is what lets the freeze step of the two-phase runtime run at copy
+    speed (DESIGN.md §2).
 
 ``dispatch_mxu`` (legacy, O(n²))
     Reuses the one-hot scatter matmul kernel, kept as a comparison point for
     ``benchmarks/bench_two_phase.py`` and as the MXU-friendly fallback.
 
-VMEM note: the gather kernel keeps the whole compacted ``(nblocks, cap)``
-plane plus the tiny ``(nblocks,)`` prefix tables resident per grid step.  A
-production variant would leave ``compact`` in HBM and DMA only the block rows
-an output tile spans (scalar-prefetched ``block_starts`` make those bounds
-computable before the body runs); the grid/index math is unchanged.
+Memory spaces (``common.GridPlan``, DESIGN.md §4.7): the ``vmem`` tilings
+keep the whole compacted ``(nblocks, cap)`` plane (gather) / every level's
+block-tile rows (compaction) resident per grid step.  On the ``hbm`` path
+the prefix tables ride as scalar-prefetch operands and the planes stay in
+HBM: compaction becomes a pure HBM→HBM DMA program (level rows → their
+static columns), and the gather DMAs, per output tile, exactly the block
+rows that tile spans — the span bounds ``[lo_t, hi_t)`` are precomputed from
+the prefix table (``ops``) and prefetched, so the dynamic-trip row loop
+costs sum-of-spans ≈ nblocks + ntiles DMAs total.
 """
 from __future__ import annotations
 
@@ -37,8 +40,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import indexing
+from repro.kernels import common
 
 __all__ = ["compact_blocks_pallas", "segmented_gather_pallas"]
 
@@ -46,7 +51,11 @@ DEFAULT_BLOCK_TILE = 8
 DEFAULT_SEG_TILE = 256
 
 
-def _compact_kernel(*refs, starts):
+# --------------------------------------------------------------------------
+# compaction — bucket levels → (nblocks, capacity) rows, static columns.
+# --------------------------------------------------------------------------
+
+def _compact_vmem(*refs, starts):
     """refs = (*level_refs, out_ref); copy each level to its static columns."""
     *levels, out = refs
     for b, ref in enumerate(levels):
@@ -54,11 +63,27 @@ def _compact_kernel(*refs, starts):
         out[:, starts[b] : starts[b] + size] = ref[...]
 
 
+def _compact_hbm(*refs, starts, sizes, block_tile):
+    """Pure DMA program: level rows → their static output columns (HBM→HBM)."""
+    *levels, out, sem = refs
+    i = pl.program_id(0)
+    rows = pl.ds(i * block_tile, block_tile)
+    for b, ref in enumerate(levels):
+        cp = pltpu.make_async_copy(
+            ref.at[rows],
+            out.at[rows, pl.ds(starts[b], sizes[b])],
+            sem,
+        )
+        cp.start()
+        cp.wait()
+
+
 def compact_blocks_pallas(
     buckets: tuple[jax.Array, ...],  # level b: (nblocks, B0·2^b)
     b0: int,
     *,
     block_tile: int = DEFAULT_BLOCK_TILE,
+    memory_space: str = "vmem",
     interpret: bool = False,
 ) -> jax.Array:
     """→ (nblocks, capacity) row-compacted array (in-block positions)."""
@@ -69,20 +94,41 @@ def compact_blocks_pallas(
     cap = indexing.capacity(b0, nbuckets)
     starts = indexing.bucket_starts(b0, nbuckets)
     sizes = indexing.bucket_sizes(b0, nbuckets)
-    kernel = functools.partial(_compact_kernel, starts=starts)
-    return pl.pallas_call(
-        kernel,
+    out_shape = jax.ShapeDtypeStruct((nblocks, cap), buckets[0].dtype)
+    if memory_space == "hbm":
+        any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        plan = common.GridPlan(
+            memory_space="hbm",
+            grid=(nblocks // block_tile,),
+            num_tables=0,
+            table_specs=(),
+            in_specs=[any_spec] * nbuckets,
+            out_specs=any_spec,
+            scratch_shapes=[pltpu.SemaphoreType.DMA],
+        )
+        kernel = functools.partial(
+            _compact_hbm, starts=starts, sizes=sizes, block_tile=block_tile
+        )
+        return plan.pallas_call(kernel, out_shape, interpret=interpret)(*buckets)
+    plan = common.GridPlan(
+        memory_space="vmem",
         grid=(nblocks // block_tile,),
+        num_tables=0,
+        table_specs=(),
         in_specs=[
             pl.BlockSpec((block_tile, sz), lambda i, s=None: (i, 0)) for sz in sizes
         ],
         out_specs=pl.BlockSpec((block_tile, cap), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nblocks, cap), buckets[0].dtype),
-        interpret=interpret,
-    )(*buckets)
+    )
+    kernel = functools.partial(_compact_vmem, starts=starts)
+    return plan.pallas_call(kernel, out_shape, interpret=interpret)(*buckets)
 
 
-def _segmented_gather_kernel(starts_ref, ends_ref, compact_ref, o_ref, *, seg_tile):
+# --------------------------------------------------------------------------
+# segmented gather — block-major global ordering off the prefix table.
+# --------------------------------------------------------------------------
+
+def _seg_gather_vmem(starts_ref, ends_ref, compact_ref, o_ref, *, seg_tile):
     """One output tile of the block-major global order.
 
     ``starts``/``ends`` are the runtime prefix-sum table (exclusive /
@@ -108,12 +154,42 @@ def _segmented_gather_kernel(starts_ref, ends_ref, compact_ref, o_ref, *, seg_ti
     o_ref[0, :] = jnp.where(live, vals, jnp.zeros_like(vals))
 
 
+def _seg_gather_hbm(
+    starts_ref, ends_ref, lo_ref, hi_ref, compact_ref, o_ref, row, sem,
+    *, seg_tile,
+):
+    """One output tile, compact plane in HBM.
+
+    The tile's block span ``[lo_t, hi_t)`` was precomputed from the prefix
+    table; the dynamic-trip loop DMAs one block row at a time and claims the
+    lanes whose global index falls inside that block's ``[start, end)``
+    interval — intervals are disjoint, so each live lane is claimed exactly
+    once and dead lanes keep the zero init.
+    """
+    t = pl.program_id(0)
+    cap = compact_ref.shape[1]
+    idx = t * seg_tile + jax.lax.broadcasted_iota(jnp.int32, (seg_tile, 1), 0)[:, 0]
+
+    def claim(b, acc):
+        cp = pltpu.make_async_copy(compact_ref.at[pl.ds(b, 1)], row, sem)
+        cp.start()
+        cp.wait()
+        s, e = starts_ref[b], ends_ref[b]
+        take = (idx >= s) & (idx < e)
+        vals = jnp.take(row[0], jnp.clip(idx - s, 0, cap - 1))
+        return jnp.where(take, vals, acc)
+
+    zero = jnp.zeros((seg_tile,), o_ref.dtype)
+    o_ref[0, :] = jax.lax.fori_loop(lo_ref[t], hi_ref[t], claim, zero)
+
+
 def segmented_gather_pallas(
     compact: jax.Array,  # (nblocks, cap) row-compacted in-block positions
     starts: jax.Array,  # (nblocks,) int32 exclusive prefix sums of sizes
     ends: jax.Array,  # (nblocks,) int32 starts + sizes
     *,
     seg_tile: int = DEFAULT_SEG_TILE,
+    memory_space: str = "vmem",
     interpret: bool = False,
 ) -> jax.Array:
     """→ (nblocks·cap,) live elements in block-major global order, rest 0.
@@ -124,21 +200,48 @@ def segmented_gather_pallas(
     """
     nblocks, cap = compact.shape
     total = nblocks * cap
-    total_pad = -(-total // seg_tile) * seg_tile
-    out = pl.pallas_call(
-        functools.partial(_segmented_gather_kernel, seg_tile=seg_tile),
-        grid=(total_pad // seg_tile,),
-        in_specs=[
+    ntiles = -(-total // seg_tile)
+    total_pad = ntiles * seg_tile
+    starts = starts.reshape(nblocks).astype(jnp.int32)
+    ends = ends.reshape(nblocks).astype(jnp.int32)
+    out_shape = jax.ShapeDtypeStruct((1, total_pad), compact.dtype)
+    if memory_space == "hbm":
+        # per-tile block spans off the prefix table (ops-level jnp, tiny)
+        tbase = jnp.arange(ntiles, dtype=jnp.int32) * seg_tile
+        lo = jnp.maximum(
+            jnp.sum(starts[None, :] <= tbase[:, None], axis=1) - 1, 0
+        )
+        hi = jnp.sum(starts[None, :] <= (tbase + seg_tile - 1)[:, None], axis=1)
+        plan = common.GridPlan(
+            memory_space="hbm",
+            grid=(ntiles,),
+            num_tables=4,
+            table_specs=(),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=pl.BlockSpec((1, seg_tile), lambda t, s, e, lo, hi: (0, t)),
+            scratch_shapes=[
+                pltpu.VMEM((1, cap), compact.dtype),
+                pltpu.SemaphoreType.DMA,
+            ],
+        )
+        kernel = functools.partial(_seg_gather_hbm, seg_tile=seg_tile)
+        out = plan.pallas_call(kernel, out_shape, interpret=interpret)(
+            starts, ends, lo, hi, compact
+        )
+        return out[0, :total]
+    plan = common.GridPlan(
+        memory_space="vmem",
+        grid=(ntiles,),
+        num_tables=2,
+        table_specs=[
             pl.BlockSpec((1, nblocks), lambda t: (0, 0)),
             pl.BlockSpec((1, nblocks), lambda t: (0, 0)),
-            pl.BlockSpec((nblocks, cap), lambda t: (0, 0)),
         ],
+        in_specs=[pl.BlockSpec((nblocks, cap), lambda t: (0, 0))],
         out_specs=pl.BlockSpec((1, seg_tile), lambda t: (0, t)),
-        out_shape=jax.ShapeDtypeStruct((1, total_pad), compact.dtype),
-        interpret=interpret,
-    )(
-        starts.reshape(1, nblocks).astype(jnp.int32),
-        ends.reshape(1, nblocks).astype(jnp.int32),
-        compact,
+    )
+    kernel = functools.partial(_seg_gather_vmem, seg_tile=seg_tile)
+    out = plan.pallas_call(kernel, out_shape, interpret=interpret)(
+        starts.reshape(1, nblocks), ends.reshape(1, nblocks), compact
     )
     return out[0, :total]

@@ -9,6 +9,12 @@ Two global-ordering implementations sit behind ``flatten(..., impl=...)``:
 ``"dispatch"``
     The legacy one-hot dispatch matmul (kernels/dispatch_mxu) — O(n²) work;
     kept as the MXU comparison point for ``benchmarks/bench_two_phase.py``.
+
+``memory_space`` selects the kernel tiling (``common.resolve_memory_space``:
+explicit > ``REPRO_MEMORY_SPACE`` > hbm on TPU / vmem in interpret mode);
+the hbm tiling keeps the compacted plane in HBM with the prefix tables as
+scalar-prefetch operands (the ``"dispatch"`` ordering is vmem-only legacy —
+``memory_space`` there applies to the compaction stage).
 """
 from __future__ import annotations
 
@@ -26,13 +32,14 @@ from repro.kernels.flatten import ref as _ref
 __all__ = ["compact_blocks", "flatten", "flatten_segmented", "flatten_dispatch"]
 
 
-@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref", "memory_space"))
 def compact_blocks(
     buckets: tuple[jax.Array, ...],
     b0: int,
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
+    memory_space: str | None = None,
 ) -> jax.Array:
     if use_ref:
         return _ref.compact_blocks(buckets, b0)
@@ -42,12 +49,15 @@ def compact_blocks(
     if pad:
         buckets = tuple(common.pad_to(b, tile, axis=0) for b in buckets)
     out = _kernel.compact_blocks_pallas(
-        buckets, b0, interpret=common.should_interpret(interpret)
+        buckets,
+        b0,
+        memory_space=common.resolve_memory_space(memory_space, interpret),
+        interpret=common.should_interpret(interpret),
     )
     return out[:nblocks]
 
 
-@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref", "memory_space"))
 def flatten_segmented(
     buckets: tuple[jax.Array, ...],
     sizes: jax.Array,
@@ -55,19 +65,27 @@ def flatten_segmented(
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
+    memory_space: str | None = None,
 ) -> jax.Array:
     """GGArray flatten: compact + linear-time segmented gather."""
-    compact = compact_blocks(buckets, b0, interpret=interpret, use_ref=use_ref)
+    compact = compact_blocks(
+        buckets, b0, interpret=interpret, use_ref=use_ref,
+        memory_space=memory_space,
+    )
     starts = indexing.block_starts(sizes).astype(jnp.int32)
     ends = starts + sizes.astype(jnp.int32)
     if use_ref:
         return _ref.gather_global(compact, starts, ends)
     return _kernel.segmented_gather_pallas(
-        compact, starts, ends, interpret=common.should_interpret(interpret)
+        compact,
+        starts,
+        ends,
+        memory_space=common.resolve_memory_space(memory_space, interpret),
+        interpret=common.should_interpret(interpret),
     )
 
 
-@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref", "memory_space"))
 def flatten_dispatch(
     buckets: tuple[jax.Array, ...],
     sizes: jax.Array,
@@ -75,9 +93,13 @@ def flatten_dispatch(
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
+    memory_space: str | None = None,
 ) -> jax.Array:
     """GGArray flatten: compact + one-hot dispatch scatter-matmul (legacy)."""
-    compact = compact_blocks(buckets, b0, interpret=interpret, use_ref=use_ref)
+    compact = compact_blocks(
+        buckets, b0, interpret=interpret, use_ref=use_ref,
+        memory_space=memory_space,
+    )
     nblocks, cap = compact.shape
     starts = indexing.block_starts(sizes)
     posn = jnp.arange(cap, dtype=jnp.int32)[None, :]
@@ -90,7 +112,10 @@ def flatten_dispatch(
     return out[:, 0]
 
 
-@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref", "impl"))
+@partial(
+    jax.jit,
+    static_argnames=("b0", "interpret", "use_ref", "impl", "memory_space"),
+)
 def flatten(
     buckets: tuple[jax.Array, ...],
     sizes: jax.Array,
@@ -99,14 +124,17 @@ def flatten(
     interpret: bool | None = None,
     use_ref: bool = False,
     impl: str = "segmented",
+    memory_space: str | None = None,
 ) -> jax.Array:
     """Full GGArray flatten on kernels → (nblocks·cap,) block-major order."""
     if impl == "segmented":
         return flatten_segmented(
-            buckets, sizes, b0, interpret=interpret, use_ref=use_ref
+            buckets, sizes, b0, interpret=interpret, use_ref=use_ref,
+            memory_space=memory_space,
         )
     if impl == "dispatch":
         return flatten_dispatch(
-            buckets, sizes, b0, interpret=interpret, use_ref=use_ref
+            buckets, sizes, b0, interpret=interpret, use_ref=use_ref,
+            memory_space=memory_space,
         )
     raise ValueError(f"unknown flatten impl {impl!r} (want 'segmented'|'dispatch')")

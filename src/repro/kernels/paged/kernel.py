@@ -1,30 +1,38 @@
 """Paged Pallas kernels — read/write a slab pool through page tables.
 
-Three kernels back the arena subsystem (``repro.pool``, DESIGN.md §4):
+Three kernels back the arena subsystem (``repro.pool``, DESIGN.md §4), each
+built on the shared :class:`repro.kernels.common.GridPlan` memory-space layer
+(two tilings per kernel, one index math — DESIGN.md §4.7):
 
 ``paged_gather_pallas``
     Materialize each logical array's contiguous view by walking its page
-    table — the indirection-table read the arena's flatten path uses.
+    table — the indirection-table read the arena's flatten path uses.  vmem:
+    one grid step per row tile against the resident pool.  hbm: grid
+    ``(narrays, pages)`` with the page table scalar-prefetched; the pool
+    ``index_map`` reads ``pages[n, p]`` so each grid step DMAs exactly the
+    one slab tile it emits.
 
 ``paged_attend_pallas``
     Flash-decode attention against paged K/V pools: grid ``(batch, kv_heads,
     pages)`` with the online-softmax state in VMEM scratch (the
     ``kernels/decode_attention`` structure), the per-step KV tile selected by
     the page table.  Pages past the live length — GGArray tail slabs — are
-    skipped entirely.
+    skipped entirely.  hbm: lengths and pages are scalar-prefetched and the
+    K/V ``index_map`` DMAs one ``(slab_tokens, head_dim)`` tile per step
+    instead of holding the pools resident.
 
 ``slab_append_pallas``
-    The push_back prefix-sum machinery (exclusive mask scan + exact int32
-    one-hot permutation, see ``kernels/push_back``) retargeted at the pool:
-    one grid step per slab tile resolves each slot's wave element through the
-    slab's *owner* row, and the pool aliases its output so untouched slabs
-    are never copied.
-
-VMEM note: like the flatten/push_back kernels, pool operands are resident
-per grid step (fine in interpret mode / at test scale).  A production
-variant keeps pools in HBM and DMAs one slab per grid step with the page
-table as a ``PrefetchScalarGridSpec`` scalar operand driving the index_map —
-the index math is unchanged.
+    The push_back prefix-sum machinery (exclusive mask scan + insert
+    permutation, see ``kernels/push_back``) retargeted at the pool: each grid
+    step resolves its slab's wave elements through the slab's *owner* row,
+    and the pool aliases its output so untouched slabs are never copied.
+    hbm: one slab per grid step, with the owner/base/size tables
+    scalar-prefetched — the owner table drives the wave-row ``index_map``, so
+    only the owning array's wave lane block is DMA'd alongside the slab tile.
+    Waves at least ``common.MXU_DISPATCH_WAVE`` lanes wide apply the insert
+    permutation as an MXU dispatch matmul (``kernels/dispatch_mxu``) instead
+    of the exact int32 one-hot reduction — bit-exact for f32-representable
+    payloads (``common.resolve_dispatch``).
 """
 from __future__ import annotations
 
@@ -35,7 +43,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.paged.ref import MASK_VALUE
+from repro.kernels.push_back.kernel import apply_insert_permutation
 
 __all__ = [
     "paged_gather_pallas",
@@ -51,7 +61,7 @@ DEFAULT_ROW_TILE = 8
 # gather — logical contiguous view through the page table.
 # --------------------------------------------------------------------------
 
-def _gather_kernel(pages_ref, pool_ref, out_ref):
+def _gather_vmem(pages_ref, pool_ref, out_ref):
     pages = pages_ref[...]  # (rows, P) int32
     pool = pool_ref[...]  # (S, T, D)
     rows, P = pages.shape
@@ -62,36 +72,86 @@ def _gather_kernel(pages_ref, pool_ref, out_ref):
     out_ref[...] = jnp.where(valid, g, 0).reshape(rows, P * T, D)
 
 
+def _gather_hbm(pages_ref, pool_ref, out_ref):
+    n, p = pl.program_id(0), pl.program_id(1)
+    slab = pages_ref[n, p]  # this step's one DMA'd tile is pool[slab]
+    out_ref[...] = jnp.where(slab >= 0, pool_ref[...], 0)
+
+
 def paged_gather_pallas(
     pool: jax.Array,  # (S, T, D)
     pages: jax.Array,  # (N, P) int32
     *,
     row_tile: int = DEFAULT_ROW_TILE,
+    memory_space: str = "vmem",
     interpret: bool = False,
 ) -> jax.Array:
-    """→ (N, P·T, D) contiguous logical views (zeros under page −1)."""
+    """→ (N, P·T, D) contiguous logical views (zeros under page −1).
+
+    Any row count works: the vmem tiling pads ``N`` up to ``row_tile`` with
+    page-table rows of −1 (provably inert — every lane reads as zero) and
+    slices the result; the hbm tiling grids over rows directly.
+    """
     N, P = pages.shape
     S, T, D = pool.shape
-    if N % row_tile:
-        raise ValueError(f"narrays {N} must divide by tile {row_tile}")
-    return pl.pallas_call(
-        _gather_kernel,
-        grid=(N // row_tile,),
-        in_specs=[
-            pl.BlockSpec((row_tile, P), lambda i: (i, 0)),
-            pl.BlockSpec((S, T, D), lambda i: (0, 0, 0)),
-        ],
+    if memory_space == "hbm":
+        plan = common.GridPlan(
+            memory_space="hbm",
+            grid=(N, P),
+            num_tables=1,
+            table_specs=(),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, T, D),
+                    lambda n, p, pages: (jnp.clip(pages[n, p], 0, S - 1), 0, 0),
+                )
+            ],
+            out_specs=pl.BlockSpec((1, T, D), lambda n, p, pages: (n, p, 0)),
+        )
+        return plan.pallas_call(
+            _gather_hbm,
+            jax.ShapeDtypeStruct((N, P * T, D), pool.dtype),
+            interpret=interpret,
+        )(pages, pool)
+    pages_p = common.pad_to(pages, row_tile, axis=0, value=-1)
+    Np = pages_p.shape[0]
+    plan = common.GridPlan(
+        memory_space="vmem",
+        grid=(Np // row_tile,),
+        num_tables=1,
+        table_specs=[pl.BlockSpec((row_tile, P), lambda i: (i, 0))],
+        in_specs=[pl.BlockSpec((S, T, D), lambda i: (0, 0, 0))],
         out_specs=pl.BlockSpec((row_tile, P * T, D), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, P * T, D), pool.dtype),
+    )
+    out = plan.pallas_call(
+        _gather_vmem,
+        jax.ShapeDtypeStruct((Np, P * T, D), pool.dtype),
         interpret=interpret,
-    )(pages, pool)
+    )(pages_p, pool)
+    return out[:N]
 
 
 # --------------------------------------------------------------------------
 # attend — flash-decode through the page table.
 # --------------------------------------------------------------------------
 
-def _attend_kernel(
+def _attend_step(q, k, v, kv_len, p, slab_tokens, m_ref, l_ref, acc_ref):
+    """One page's online-softmax update — shared by both memory spaces."""
+    s = jnp.dot(q, k.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+    kpos = p * slab_tokens + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < kv_len, s, MASK_VALUE)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    pw = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(pw, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        pw, v.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+
+def _attend_vmem(
     len_ref, pages_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     *, slab_tokens, n_pages,
 ):
@@ -111,18 +171,37 @@ def _attend_kernel(
         q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
         k = k_ref[0, pl.ds(jnp.maximum(slab, 0), 1)][0]  # (T, D)
         v = v_ref[0, pl.ds(jnp.maximum(slab, 0), 1)][0]
-        s = jnp.dot(q, k.astype(jnp.float32).T, preferred_element_type=jnp.float32)
-        kpos = p * slab_tokens + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kpos < kv_len, s, MASK_VALUE)
-        m_prev, l_prev = m_ref[...], l_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        pw = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_prev * alpha + jnp.sum(pw, axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-            pw, v.astype(jnp.float32), preferred_element_type=jnp.float32
+        _attend_step(q, k, v, kv_len, p, slab_tokens, m_ref, l_ref, acc_ref)
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _attend_hbm(
+    len_ref, pages_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, slab_tokens, n_pages,
+):
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    slab = pages_ref[b, p]
+
+    @pl.when((slab >= 0) & (p * slab_tokens < kv_len))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        # this step's DMA'd tiles: k/v_pool[head, pages[b, p]]
+        _attend_step(
+            q, k_ref[0, 0], v_ref[0, 0], kv_len, p, slab_tokens,
+            m_ref, l_ref, acc_ref,
         )
-        m_ref[...] = m_new
 
     @pl.when(p == n_pages - 1)
     def _finish():
@@ -137,98 +216,201 @@ def paged_attend_pallas(
     pages: jax.Array,  # (B, P) int32
     lengths: jax.Array,  # (B,) int32
     *,
+    memory_space: str = "vmem",
     interpret: bool = False,
 ) -> jax.Array:
     B, KH, G, D = q.shape
     _, S, T, _ = k_pool.shape
     P = pages.shape[1]
-    kernel = functools.partial(_attend_kernel, slab_tokens=T, n_pages=P)
-    return pl.pallas_call(
-        kernel,
+    pages = pages.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    scratch = [
+        pltpu.VMEM((G, 1), jnp.float32),
+        pltpu.VMEM((G, 1), jnp.float32),
+        pltpu.VMEM((G, D), jnp.float32),
+    ]
+    out_shape = jax.ShapeDtypeStruct((B, KH, G, D), jnp.float32)
+    if memory_space == "hbm":
+        kv_spec = pl.BlockSpec(
+            (1, 1, T, D),
+            lambda b, h, p, lens, pages: (h, jnp.clip(pages[b, p], 0, S - 1), 0, 0),
+        )
+        plan = common.GridPlan(
+            memory_space="hbm",
+            grid=(B, KH, P),
+            num_tables=2,
+            table_specs=(),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, p, lens, pages: (b, h, 0, 0)),
+                kv_spec,
+                kv_spec,
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, G, D), lambda b, h, p, lens, pages: (b, h, 0, 0)
+            ),
+            scratch_shapes=scratch,
+        )
+        kernel = functools.partial(_attend_hbm, slab_tokens=T, n_pages=P)
+        return plan.pallas_call(kernel, out_shape, interpret=interpret)(
+            lengths, pages, q, k_pool, v_pool
+        )
+    plan = common.GridPlan(
+        memory_space="vmem",
         grid=(B, KH, P),
-        in_specs=[
+        num_tables=2,
+        table_specs=[
             pl.BlockSpec((1, 1), lambda b, h, p: (b, 0)),
             pl.BlockSpec((1, P), lambda b, h, p: (b, 0)),
+        ],
+        in_specs=[
             pl.BlockSpec((1, 1, G, D), lambda b, h, p: (b, h, 0, 0)),
             pl.BlockSpec((1, S, T, D), lambda b, h, p: (h, 0, 0, 0)),
             pl.BlockSpec((1, S, T, D), lambda b, h, p: (h, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, D), jnp.float32),
-        ],
-        interpret=interpret,
-    )(lengths.reshape(B, 1).astype(jnp.int32), pages, q, k_pool, v_pool)
+        scratch_shapes=scratch,
+    )
+    kernel = functools.partial(_attend_vmem, slab_tokens=T, n_pages=P)
+    return plan.pallas_call(kernel, out_shape, interpret=interpret)(
+        lengths.reshape(B, 1), pages, q, k_pool, v_pool
+    )
 
 
 # --------------------------------------------------------------------------
 # slab append — multi-array wave insert, scattered through slab ownership.
 # --------------------------------------------------------------------------
 
-def _slab_append_kernel(
-    mask_ref, elems_ref, sizes_ref, owners_ref, bases_ref, pool_in_ref, pool_out_ref
+def _slab_scatter(gathered, owner, base, size, count, pool_in, m):
+    """Write wave elements into one slab tile row set — shared index math.
+
+    ``gathered (rows, m, D)``, ``owner/base/size/count`` broadcastable over
+    the tile's slab rows; returns the updated ``(tile, T, D)`` tile.
+    """
+    tile, T = pool_in.shape[:2]
+    j = jax.lax.broadcasted_iota(jnp.int32, (tile, T), 1)
+    o = base + j - size
+    valid = (owner[:, None] >= 0) & (o >= 0) & (o < count)
+    vals = jnp.take_along_axis(gathered, jnp.clip(o, 0, m - 1)[:, :, None], axis=1)
+    return jnp.where(valid[:, :, None], vals, pool_in)
+
+
+def _slab_append_vmem(
+    owners_ref, bases_ref, sizes_ref, mask_ref, elems_ref, pool_in_ref,
+    pool_out_ref, *, dispatch,
 ):
     mask = mask_ref[...]  # (N, m) int32 0/1
     elems = elems_ref[...]  # (N, m, D)
     sizes = sizes_ref[...]  # (N, 1) int32
     N, m = mask.shape
 
-    # push_back machinery: exclusive scan + exact one-hot insert permutation
+    # push_back machinery: exclusive scan + insert permutation
     inc = jnp.cumsum(mask, axis=1)
     off = inc - mask
     count = inc[:, -1:]  # (N, 1)
-    iota_o = jax.lax.broadcasted_iota(jnp.int32, (N, m, m), 1)
-    iota_k = jax.lax.broadcasted_iota(jnp.int32, (N, m, m), 2)
-    onehot = (off[:, None, :] == iota_o) & (mask[:, None, :] > 0)
-    sel = jnp.sum(jnp.where(onehot, iota_k, 0), axis=2)
-    gathered = jnp.take_along_axis(elems, sel[:, :, None], axis=1)  # (N, m, D)
+    gathered = apply_insert_permutation(off, mask, elems, dispatch)  # (N, m, D)
 
     owners = owners_ref[...][:, 0]  # (tile,) — owner array per slab, −1 free
     bases = bases_ref[...]  # (tile, 1) logical position of slot 0
     own = jnp.clip(owners, 0, N - 1)
-    tile, T = pool_in_ref.shape[:2]
-    j = jax.lax.broadcasted_iota(jnp.int32, (tile, T), 1)
-    o = bases + j - jnp.take(sizes[:, 0], own)[:, None]
-    valid = (owners[:, None] >= 0) & (o >= 0) & (o < jnp.take(count[:, 0], own)[:, None])
-    vals = jnp.take_along_axis(
-        jnp.take(gathered, own, axis=0), jnp.clip(o, 0, m - 1)[:, :, None], axis=1
+    pool_out_ref[...] = _slab_scatter(
+        jnp.take(gathered, own, axis=0),
+        owners,
+        bases,
+        jnp.take(sizes[:, 0], own)[:, None],
+        jnp.take(count[:, 0], own)[:, None],
+        pool_in_ref[...],
+        m,
     )
-    pool_out_ref[...] = jnp.where(valid[:, :, None], vals, pool_in_ref[...])
+
+
+def _slab_append_hbm(
+    owners_ref, bases_ref, sizes_ref, mask_ref, elems_ref, pool_in_ref,
+    pool_out_ref, *, narrays, dispatch,
+):
+    s = pl.program_id(0)
+    owner = owners_ref[s]
+    own = jnp.clip(owner, 0, narrays - 1)
+    mask = mask_ref[...]  # (1, m) — the owner's wave row (this step's DMA)
+    elems = elems_ref[...]  # (1, m, D)
+    _, m = mask.shape
+    inc = jnp.cumsum(mask, axis=1)
+    off = inc - mask
+    count = inc[:, -1:]  # (1, 1)
+    gathered = apply_insert_permutation(off, mask, elems, dispatch)  # (1, m, D)
+    pool_out_ref[...] = _slab_scatter(
+        gathered,
+        owner.reshape(1),
+        bases_ref[s].reshape(1, 1),
+        sizes_ref[own].reshape(1, 1),
+        count,
+        pool_in_ref[...],
+        m,
+    )
 
 
 def slab_append_pallas(
     pool: jax.Array,  # (S, T, D)
-    owners: jax.Array,  # (S, 1) int32
-    bases: jax.Array,  # (S, 1) int32
-    sizes: jax.Array,  # (N, 1) int32
+    owners: jax.Array,  # (S,) int32
+    bases: jax.Array,  # (S,) int32
+    sizes: jax.Array,  # (N,) int32
     elems: jax.Array,  # (N, m, D)
     mask: jax.Array,  # (N, m) int32 0/1
     *,
     slab_tile: int = DEFAULT_ROW_TILE,
+    memory_space: str = "vmem",
+    dispatch: str = "onehot",
     interpret: bool = False,
 ) -> jax.Array:
     """→ new pool (S, T, D); untouched slabs alias through unscathed."""
     S, T, D = pool.shape
     N, m = mask.shape
+    owners = owners.reshape(S).astype(jnp.int32)
+    bases = bases.reshape(S).astype(jnp.int32)
+    sizes = sizes.reshape(N).astype(jnp.int32)
+    out_shape = jax.ShapeDtypeStruct((S, T, D), pool.dtype)
+    if memory_space == "hbm":
+        # one slab per grid step; the scalar-prefetched owner table selects
+        # which array's wave lane block rides along in the DMA.
+        row_of = lambda s, owners, bases, sizes: jnp.clip(owners[s], 0, N - 1)
+        plan = common.GridPlan(
+            memory_space="hbm",
+            grid=(S,),
+            num_tables=3,
+            table_specs=(),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, m), lambda s, ow, ba, si: (row_of(s, ow, ba, si), 0)
+                ),
+                pl.BlockSpec(
+                    (1, m, D), lambda s, ow, ba, si: (row_of(s, ow, ba, si), 0, 0)
+                ),
+                pl.BlockSpec((1, T, D), lambda s, ow, ba, si: (s, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, T, D), lambda s, ow, ba, si: (s, 0, 0)),
+            aliases={2: 0},  # pool in-place: O(wave) writes
+        )
+        kernel = functools.partial(_slab_append_hbm, narrays=N, dispatch=dispatch)
+        return plan.pallas_call(kernel, out_shape, interpret=interpret)(
+            owners, bases, sizes, mask, elems, pool
+        )
     if S % slab_tile:
         raise ValueError(f"n_slabs {S} must divide by tile {slab_tile}")
     row = lambda width: pl.BlockSpec((slab_tile, width), lambda i: (i, 0))
-    return pl.pallas_call(
-        _slab_append_kernel,
+    plan = common.GridPlan(
+        memory_space="vmem",
         grid=(S // slab_tile,),
+        num_tables=3,
+        table_specs=[row(1), row(1), pl.BlockSpec((N, 1), lambda i: (0, 0))],
         in_specs=[
             pl.BlockSpec((N, m), lambda i: (0, 0)),
             pl.BlockSpec((N, m, D), lambda i: (0, 0, 0)),
-            pl.BlockSpec((N, 1), lambda i: (0, 0)),
-            row(1),
-            row(1),
             pl.BlockSpec((slab_tile, T, D), lambda i: (i, 0, 0)),
         ],
         out_specs=pl.BlockSpec((slab_tile, T, D), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((S, T, D), pool.dtype),
-        input_output_aliases={5: 0},  # pool in-place: O(wave) writes
-        interpret=interpret,
-    )(mask, elems, sizes, owners, bases, pool)
+        aliases={2: 0},  # pool in-place: O(wave) writes
+    )
+    kernel = functools.partial(_slab_append_vmem, dispatch=dispatch)
+    return plan.pallas_call(kernel, out_shape, interpret=interpret)(
+        owners.reshape(S, 1), bases.reshape(S, 1), sizes.reshape(N, 1),
+        mask, elems, pool
+    )

@@ -4,6 +4,11 @@ All three ops flatten ``item_shape`` into one trailing feature axis around
 the 3-D/4-D kernels (the ``kernels/push_back`` convention) and pad row/slab
 counts to the kernel tile with provably inert rows (page −1 / owner −1).
 ``use_ref=True`` runs the jnp oracle — bit-identical in interpret mode.
+
+``memory_space`` selects the kernel tiling (``common.resolve_memory_space``:
+explicit > ``REPRO_MEMORY_SPACE`` > hbm on TPU / vmem in interpret mode);
+``slab_append``'s ``dispatch`` selects the insert-permutation backend
+(``common.resolve_dispatch`` — MXU matmul for wide waves).
 """
 from __future__ import annotations
 
@@ -28,13 +33,14 @@ def _flat_item(x: jax.Array, lead: int) -> tuple[jax.Array, tuple[int, ...]]:
     return x.reshape(*x.shape[:lead], d), item
 
 
-@partial(jax.jit, static_argnames=("interpret", "use_ref"))
+@partial(jax.jit, static_argnames=("interpret", "use_ref", "memory_space"))
 def paged_gather(
     pool: jax.Array,  # (S, T, *item)
     pages: jax.Array,  # (N, P) int32
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
+    memory_space: str | None = None,
 ) -> jax.Array:
     """→ (N, P·T, *item) contiguous logical views (zeros under page −1)."""
     N, P = pages.shape
@@ -42,15 +48,16 @@ def paged_gather(
     if use_ref:
         out = _ref.gather_pages(pool3, pages)
     else:
-        tile = _kernel.DEFAULT_ROW_TILE
-        padded = common.pad_to(pages, tile, axis=0, value=-1)
         out = _kernel.paged_gather_pallas(
-            pool3, padded, interpret=common.should_interpret(interpret)
-        )[:N]
+            pool3,
+            pages,
+            memory_space=common.resolve_memory_space(memory_space, interpret),
+            interpret=common.should_interpret(interpret),
+        )
     return out.reshape(N, P * pool.shape[1], *item)
 
 
-@partial(jax.jit, static_argnames=("interpret", "use_ref"))
+@partial(jax.jit, static_argnames=("interpret", "use_ref", "memory_space"))
 def paged_attend(
     q: jax.Array,  # (B, KH, G, D) f32, pre-scaled
     k_pool: jax.Array,  # (S, T, KH, D) — token-major pool (cache layout)
@@ -60,6 +67,7 @@ def paged_attend(
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
+    memory_space: str | None = None,
 ) -> jax.Array:
     """→ (B, KH, G, D) f32 attention output through the page table.
 
@@ -72,7 +80,9 @@ def paged_attend(
     if use_ref:
         return _ref.attend_paged(q, kh, vh, pages, lengths)
     return _kernel.paged_attend_pallas(
-        q, kh, vh, pages, lengths, interpret=common.should_interpret(interpret)
+        q, kh, vh, pages, lengths,
+        memory_space=common.resolve_memory_space(memory_space, interpret),
+        interpret=common.should_interpret(interpret),
     )
 
 
@@ -86,6 +96,8 @@ def _slab_append(
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
+    memory_space: str | None = None,
+    dispatch: str = "auto",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """→ (new pool, new sizes (N,), positions (N, m) (−1 where masked))."""
     if mask.dtype != jnp.bool_:
@@ -107,19 +119,26 @@ def _slab_append(
     inc = jnp.cumsum(mask_i, axis=1)
     counts = inc[:, -1]
     pos = sizes[:, None].astype(jnp.int32) + inc - mask_i
+    space = common.resolve_memory_space(memory_space, interpret)
+    disp = common.resolve_dispatch(dispatch, m, elems.dtype)
     tile = _kernel.DEFAULT_ROW_TILE
-    pool_p = common.pad_to(pool3, tile, axis=0)
-    owners_p = common.pad_to(owners.reshape(S, 1), tile, axis=0, value=-1)
-    bases_p = common.pad_to(bases.reshape(S, 1), tile, axis=0)
+    if space == "hbm":
+        pool_p, owners_p, bases_p = pool3, owners, bases
+    else:  # padded slabs: owner −1 — provably inert
+        pool_p = common.pad_to(pool3, tile, axis=0)
+        owners_p = common.pad_to(owners.reshape(S), tile, axis=0, value=-1)
+        bases_p = common.pad_to(bases.reshape(S), tile, axis=0)
     elems_p = common.pad_to(elems3, common.MXU_LANE, axis=1)
     mask_p = common.pad_to(mask_i, common.MXU_LANE, axis=1)
     new_pool = _kernel.slab_append_pallas(
         pool_p,
         owners_p,
         bases_p,
-        sizes.reshape(N, 1).astype(jnp.int32),
+        sizes.astype(jnp.int32),
         elems_p,
         mask_p,
+        memory_space=space,
+        dispatch=disp,
         interpret=common.should_interpret(interpret),
     )[:S]
     return (
@@ -129,11 +148,10 @@ def _slab_append(
     )
 
 
-slab_append = partial(jax.jit, static_argnames=("interpret", "use_ref"))(
-    _slab_append
-)
+_SLAB_STATICS = ("interpret", "use_ref", "memory_space", "dispatch")
+slab_append = partial(jax.jit, static_argnames=_SLAB_STATICS)(_slab_append)
 # The arena's hot path: the pool is donated, so together with the kernel's
 # input_output_aliases an append is O(wave) writes, not O(pool) copies.
 slab_append_donated = jax.jit(
-    _slab_append, static_argnames=("interpret", "use_ref"), donate_argnums=(0,)
+    _slab_append, static_argnames=_SLAB_STATICS, donate_argnums=(0,)
 )

@@ -3,10 +3,10 @@
 The jnp append path is two dispatches: an exclusive prefix sum of the mask
 (``core.insertion``) and then one scatter per bucket level.  This kernel fuses
 the whole write phase: one grid step per block tile computes the per-block
-offsets on the VPU (``cumsum``), resolves the dense insert permutation with an
-exact int32 one-hot reduction (the ``dispatch_mxu`` idiom — no float
-accumulation, so results are bit-identical to the jnp oracle), and writes
-every bucket level in the same pass.
+offsets on the VPU (``cumsum``), resolves the dense insert permutation
+(:func:`apply_insert_permutation` — exact int32 one-hot reduction, or the
+``kernels/dispatch_mxu`` matmul for waves at least ``common.MXU_DISPATCH_WAVE``
+lanes wide), and writes every bucket level in the same pass.
 
 The scatter is expressed as a *gather* per level — output slot ``start_b + j``
 takes wave element ``sel[start_b + j − size_row]`` when that offset is live —
@@ -29,11 +29,15 @@ tiny wave — are computed **once** and reused for every group's scatter.
 This is what lets the quantized KV-cache decode write k/v/ks/vs in a single
 launch instead of four.
 
-VMEM note: like the flatten kernel, every bucket level's block-tile rows stay
-resident per grid step (total = per-block capacity · tile rows), plus an
-(m × m) one-hot for the permutation.  A production variant would keep levels
-in HBM and DMA only those the wave's position interval [min sizes, max pos)
-can touch; the index math is unchanged.
+Memory spaces (``common.GridPlan``, DESIGN.md §4.7): the ``vmem`` tiling
+keeps every level's block-tile rows resident per grid step (total =
+per-block capacity · tile rows).  The ``hbm`` tiling leaves the levels in
+HBM (``pltpu.ANY``, aliased in place): a scalar-prefetched *touch table* —
+level ``b`` is touched by a tile iff some row's write interval
+``[size, size+count)`` meets ``[start_b, start_b+width_b)`` — gates explicit
+DMAs that stream exactly the touched level tiles through one
+largest-level-sized scratch buffer, so per-step VMEM is one level tile plus
+the wave, never the whole chain.
 """
 from __future__ import annotations
 
@@ -42,15 +46,56 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import indexing
+from repro.kernels import common
+from repro.kernels.dispatch_mxu import kernel as dispatch_kernel
 
-__all__ = ["push_back_pallas"]
+__all__ = ["push_back_pallas", "apply_insert_permutation"]
 
 DEFAULT_BLOCK_TILE = 8
 
 
-def _push_back_kernel(mask_ref, sizes_ref, *refs, starts, bsizes, ngroups):
+def apply_insert_permutation(
+    off: jax.Array,  # (rows, m) exclusive prefix sums of the mask
+    mask: jax.Array,  # (rows, m) int32 0/1
+    elems: jax.Array,  # (rows, m, D)
+    dispatch: str,
+) -> jax.Array:
+    """Dense insert permutation: out[r, o] = elems[r, k] for the unique masked
+    lane ``k`` with ``off[r, k] == o``.
+
+    ``dispatch="onehot"``: exact int32 one-hot reduction + gather — value
+    bits never touch arithmetic, bit-identical to the jnp scatter for every
+    dtype.  ``dispatch="mxu"``: the one-hot becomes a dispatch matmul
+    (``kernels/dispatch_mxu.permute_rows``) — the MXU path for wide waves,
+    bit-exact for f32-representable payloads.  Slots past the row's lane
+    count differ between the two (lane 0's value vs 0) but are dead under
+    every caller's ``o < count`` write guard.
+    """
+    rows, m = mask.shape
+    iota_o = jax.lax.broadcasted_iota(jnp.int32, (rows, m, m), 1)
+    onehot = (off[:, None, :] == iota_o) & (mask[:, None, :] > 0)
+    if dispatch == "mxu":
+        return dispatch_kernel.permute_rows(onehot, elems)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (rows, m, m), 2)
+    sel = jnp.sum(jnp.where(onehot, iota_k, 0), axis=2)  # (rows, m)
+    return jnp.take_along_axis(elems, sel[:, :, None], axis=1)
+
+
+def _level_window(gathered, sizes, count, level_tile, start, width, m):
+    """One level's shifted-window gather — shared by both memory spaces."""
+    rows = sizes.shape[0]
+    j = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 1)
+    o = start + j - sizes  # wave offset landing at this slot
+    valid = (o >= 0) & (o < count)
+    oc = jnp.clip(o, 0, m - 1)
+    vals = jnp.take_along_axis(gathered, oc[:, :, None], axis=1)
+    return jnp.where(valid[:, :, None], vals, level_tile)
+
+
+def _push_back_vmem(mask_ref, sizes_ref, *refs, starts, bsizes, ngroups, dispatches):
     nlev = len(bsizes)
     elems_refs = refs[:ngroups]
     level_in = refs[ngroups : ngroups + ngroups * nlev]  # group-major
@@ -67,27 +112,65 @@ def _push_back_kernel(mask_ref, sizes_ref, *refs, starts, bsizes, ngroups):
     count = inc[:, -1:]  # (rows, 1)
     pos = sizes + off  # absolute in-block positions
 
-    # Dense insert permutation: sel[r, o] = the unique masked lane k with
-    # off[r, k] == o.  Exact int32 one-hot reduction — value bits never touch
-    # arithmetic, so the gather below is bit-identical to the jnp scatter.
-    # Computed ONCE, reused by every payload group's scatter.
-    iota_o = jax.lax.broadcasted_iota(jnp.int32, (rows, m, m), 1)
-    iota_k = jax.lax.broadcasted_iota(jnp.int32, (rows, m, m), 2)
-    onehot = (off[:, None, :] == iota_o) & (mask[:, None, :] > 0)
-    sel = jnp.sum(jnp.where(onehot, iota_k, 0), axis=2)  # (rows, m)
-
     for g in range(ngroups):
-        elems = elems_refs[g][...]  # (rows, m, D_g)
-        gathered = jnp.take_along_axis(elems, sel[:, :, None], axis=1)
+        # permutation resolved ONCE per group, reused by every level's scatter
+        gathered = apply_insert_permutation(
+            off, mask, elems_refs[g][...], dispatches[g]
+        )
         for b in range(nlev):
-            j = jax.lax.broadcasted_iota(jnp.int32, (rows, bsizes[b]), 1)
-            o = starts[b] + j - sizes  # wave offset landing at this slot
-            valid = (o >= 0) & (o < count)
-            oc = jnp.clip(o, 0, m - 1)
-            vals = jnp.take_along_axis(gathered, oc[:, :, None], axis=1)
-            level_out[g * nlev + b][...] = jnp.where(
-                valid[:, :, None], vals, level_in[g * nlev + b][...]
+            level_out[g * nlev + b][...] = _level_window(
+                gathered, sizes, count, level_in[g * nlev + b][...],
+                starts[b], bsizes[b], m,
             )
+
+    pos_ref[...] = jnp.where(mask > 0, pos, -1)
+    nsz_ref[...] = sizes + count
+
+
+def _push_back_hbm(
+    touch_ref, mask_ref, sizes_ref, *refs, starts, bsizes, ngroups, dispatches,
+):
+    nlev = len(bsizes)
+    elems_refs = refs[:ngroups]
+    # level inputs are aliased to the outputs — one HBM buffer; use the outs
+    level_out = refs[ngroups + ngroups * nlev : ngroups + 2 * ngroups * nlev]
+    pos_ref = refs[ngroups + 2 * ngroups * nlev]
+    nsz_ref = refs[ngroups + 2 * ngroups * nlev + 1]
+    scratch = refs[-ngroups - 2 : -2]
+    sem_in, sem_out = refs[-2], refs[-1]
+
+    i = pl.program_id(0)
+    mask = mask_ref[...]
+    sizes = sizes_ref[...]
+    rows, m = mask.shape
+
+    inc = jnp.cumsum(mask, axis=1)
+    off = inc - mask
+    count = inc[:, -1:]
+    pos = sizes + off
+
+    gathered = [
+        apply_insert_permutation(off, mask, elems_refs[g][...], dispatches[g])
+        for g in range(ngroups)
+    ]
+    for b in range(nlev):
+
+        @pl.when(touch_ref[i, b] > 0)
+        def _scatter_level(b=b):
+            width = bsizes[b]
+            for g in range(ngroups):
+                rows_hbm = level_out[g * nlev + b].at[pl.ds(i * rows, rows)]
+                tile = scratch[g].at[:, pl.ds(0, width)]
+                cp = pltpu.make_async_copy(rows_hbm, tile, sem_in)
+                cp.start()
+                cp.wait()
+                scratch[g][:, :width] = _level_window(
+                    gathered[g], sizes, count, scratch[g][:, :width],
+                    starts[b], width, m,
+                )
+                cp = pltpu.make_async_copy(tile, rows_hbm, sem_out)
+                cp.start()
+                cp.wait()
 
     pos_ref[...] = jnp.where(mask > 0, pos, -1)
     nsz_ref[...] = sizes + count
@@ -101,6 +184,9 @@ def push_back_pallas(
     mask: jax.Array,  # (nblocks, m) int32 0/1
     *,
     block_tile: int = DEFAULT_BLOCK_TILE,
+    memory_space: str = "vmem",
+    dispatches: tuple[str, ...] | None = None,
+    touch: jax.Array | None = None,  # (ntiles, nlev) int32 — hbm level gating
     interpret: bool = False,
 ) -> tuple[tuple[tuple[jax.Array, ...], ...], jax.Array, jax.Array]:
     """→ (new level groups, positions (−1 where masked), new sizes (nblocks, 1))."""
@@ -111,40 +197,84 @@ def push_back_pallas(
     nlev = len(bucket_groups[0])
     starts = indexing.bucket_starts(b0, nlev)
     bsizes = indexing.bucket_sizes(b0, nlev)
-    kernel = functools.partial(
-        _push_back_kernel, starts=starts, bsizes=bsizes, ngroups=ngroups
-    )
+    if dispatches is None:
+        dispatches = ("onehot",) * ngroups
+    dims = [e.shape[2] for e in elem_groups]
     row_spec = lambda width: pl.BlockSpec((block_tile, width), lambda i: (i, 0))
     item_spec = lambda width, d: pl.BlockSpec(
         (block_tile, width, d), lambda i: (i, 0, 0)
     )
-    dims = [e.shape[2] for e in elem_groups]
-    level_specs = [
-        item_spec(sz, d) for d in dims for sz in bsizes
+    level_shapes = [
+        jax.ShapeDtypeStruct((nblocks, sz, d), grp[0].dtype)
+        for grp, d in zip(bucket_groups, dims)
+        for sz in bsizes
     ]
-    outs = pl.pallas_call(
-        kernel,
-        grid=(nblocks // block_tile,),
-        in_specs=[row_spec(m), row_spec(1)]
-        + [item_spec(m, d) for d in dims]
-        + level_specs,
-        out_specs=level_specs + [row_spec(m), row_spec(1)],
-        out_shape=[
-            jax.ShapeDtypeStruct((nblocks, sz, d), grp[0].dtype)
-            for grp, d in zip(bucket_groups, dims)
-            for sz in bsizes
-        ]
-        + [
-            jax.ShapeDtypeStruct((nblocks, m), jnp.int32),
-            jax.ShapeDtypeStruct((nblocks, 1), jnp.int32),
-        ],
-        # level inputs alias their outputs: untouched slots are never copied.
-        input_output_aliases={
-            2 + ngroups + i: i for i in range(ngroups * nlev)
-        },
-        interpret=interpret,
-    )(mask, sizes, *elem_groups, *(lvl for grp in bucket_groups for lvl in grp))
+    out_shape = level_shapes + [
+        jax.ShapeDtypeStruct((nblocks, m), jnp.int32),
+        jax.ShapeDtypeStruct((nblocks, 1), jnp.int32),
+    ]
     nl = ngroups * nlev
+    # level inputs alias their outputs: untouched slots are never copied.
+    aliases = {2 + ngroups + i: i for i in range(nl)}
+    if memory_space == "hbm":
+        if touch is None:
+            raise ValueError("hbm push_back needs the level-touch table")
+        any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        plan = common.GridPlan(
+            memory_space="hbm",
+            grid=(nblocks // block_tile,),
+            num_tables=1,
+            table_specs=(),
+            in_specs=[
+                pl.BlockSpec((block_tile, m), lambda i, touch: (i, 0)),
+                pl.BlockSpec((block_tile, 1), lambda i, touch: (i, 0)),
+            ]
+            + [
+                pl.BlockSpec((block_tile, m, d), lambda i, touch: (i, 0, 0))
+                for d in dims
+            ]
+            + [any_spec] * nl,
+            out_specs=[any_spec] * nl
+            + [
+                pl.BlockSpec((block_tile, m), lambda i, touch: (i, 0)),
+                pl.BlockSpec((block_tile, 1), lambda i, touch: (i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_tile, bsizes[-1], d), grp[0].dtype)
+                for grp, d in zip(bucket_groups, dims)
+            ]
+            + [pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
+            aliases=aliases,
+        )
+        kernel = functools.partial(
+            _push_back_hbm,
+            starts=starts, bsizes=bsizes, ngroups=ngroups, dispatches=dispatches,
+        )
+        outs = plan.pallas_call(kernel, out_shape, interpret=interpret)(
+            touch, mask, sizes, *elem_groups,
+            *(lvl for grp in bucket_groups for lvl in grp),
+        )
+    else:
+        level_specs = [item_spec(sz, d) for d in dims for sz in bsizes]
+        plan = common.GridPlan(
+            memory_space="vmem",
+            grid=(nblocks // block_tile,),
+            num_tables=0,
+            table_specs=(),
+            in_specs=[row_spec(m), row_spec(1)]
+            + [item_spec(m, d) for d in dims]
+            + level_specs,
+            out_specs=level_specs + [row_spec(m), row_spec(1)],
+            aliases=aliases,
+        )
+        kernel = functools.partial(
+            _push_back_vmem,
+            starts=starts, bsizes=bsizes, ngroups=ngroups, dispatches=dispatches,
+        )
+        outs = plan.pallas_call(kernel, out_shape, interpret=interpret)(
+            mask, sizes, *elem_groups,
+            *(lvl for grp in bucket_groups for lvl in grp),
+        )
     groups = tuple(
         tuple(outs[g * nlev : (g + 1) * nlev]) for g in range(ngroups)
     )

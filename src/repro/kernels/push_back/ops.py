@@ -5,7 +5,7 @@
 scatter into every bucket level fused into one tiled pass.  The jnp
 scan-then-scatter path (also reachable as ``use_ref=True``) is the
 correctness oracle — results are bit-identical across the round-trip test
-matrix (``tests/kernels/test_push_back.py``).
+matrix (``tests/kernels/test_push_back.py``) in **both** memory spaces.
 
 Non-scalar items are supported by flattening ``item_shape`` into one trailing
 feature axis around the 3-D kernel.  ``push_back_fused_multi`` scatters
@@ -13,6 +13,15 @@ several payload *groups* (own buckets / feature width / dtype each) that
 share one mask and size vector in a single launch, computing the offsets and
 the insert permutation once — the KV-cache decode path writes k/v (and the
 int8 quant scales) this way (``serving/kvcache.py::append``).
+
+``memory_space`` selects the kernel tiling (``common.resolve_memory_space``:
+explicit > ``REPRO_MEMORY_SPACE`` > hbm on TPU / vmem in interpret mode).
+The hbm tiling additionally takes a *level-touch table* computed here — per
+block tile and level, whether any row's write interval ``[size, size+count)``
+meets the level — which is what lets the kernel DMA only the touched level
+tiles out of HBM.  ``dispatch`` selects the insert-permutation backend per
+payload group (``common.resolve_dispatch``: ``"auto"`` routes waves at least
+``MXU_DISPATCH_WAVE`` lanes wide through the MXU dispatch matmul).
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import indexing
 from repro.kernels import common
 from repro.kernels.push_back import kernel as _kernel
 from repro.kernels.push_back import ref as _ref
@@ -28,7 +38,24 @@ from repro.kernels.push_back import ref as _ref
 __all__ = ["push_back_fused", "push_back_fused_multi"]
 
 
-@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+def _level_touch(
+    sizes: jax.Array, mask_i: jax.Array, b0: int, nlev: int, block_tile: int
+) -> jax.Array:
+    """→ (ntiles, nlev) int32: does any row in the tile write into level b?"""
+    starts = jnp.asarray(indexing.bucket_starts(b0, nlev), jnp.int32)
+    ends = starts + jnp.asarray(indexing.bucket_sizes(b0, nlev), jnp.int32)
+    lo = sizes.astype(jnp.int32)  # (nblocks,)
+    hi = lo + jnp.sum(mask_i, axis=1, dtype=jnp.int32)
+    row = (hi[:, None] > starts[None, :]) & (lo[:, None] < ends[None, :])
+    return (
+        row.reshape(-1, block_tile, nlev).any(axis=1).astype(jnp.int32)
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("b0", "interpret", "use_ref", "memory_space", "dispatch"),
+)
 def push_back_fused_multi(
     bucket_groups: tuple[tuple[jax.Array, ...], ...],
     sizes: jax.Array,  # (nblocks,) int32
@@ -38,6 +65,8 @@ def push_back_fused_multi(
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
+    memory_space: str | None = None,
+    dispatch: str = "auto",
 ) -> tuple[tuple[tuple[jax.Array, ...], ...], jax.Array, jax.Array]:
     """→ (new bucket groups, new sizes (nblocks,), positions (−1 masked))."""
     if mask.dtype != jnp.bool_:
@@ -52,7 +81,11 @@ def push_back_fused_multi(
             groups.append(levels)
         return tuple(groups), new_sizes, pos
 
+    space = common.resolve_memory_space(memory_space, interpret)
     item_shapes = [e.shape[2:] for e in elem_groups]
+    dispatches = tuple(
+        common.resolve_dispatch(dispatch, m, e.dtype) for e in elem_groups
+    )
 
     def flat(x, item):
         d = 1
@@ -77,12 +110,21 @@ def push_back_fused_multi(
     elems3 = [common.pad_to(e, common.MXU_LANE, axis=1) for e in elems3]
     mask = common.pad_to(mask, common.MXU_LANE, axis=1)
 
+    nlev = len(bucket_groups[0])
+    touch = (
+        _level_touch(sizes, mask.astype(jnp.int32), b0, nlev, tile)
+        if space == "hbm"
+        else None
+    )
     groups, pos, new_sizes = _kernel.push_back_pallas(
         tuple(buckets3),
         sizes.reshape(-1, 1).astype(jnp.int32),
         b0,
         tuple(elems3),
         mask.astype(jnp.int32),
+        memory_space=space,
+        dispatches=dispatches,
+        touch=touch,
         interpret=common.should_interpret(interpret),
     )
     out_groups = tuple(
@@ -95,7 +137,10 @@ def push_back_fused_multi(
     return out_groups, new_sizes[:nblocks, 0], pos[:nblocks, :m]
 
 
-@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref"))
+@partial(
+    jax.jit,
+    static_argnames=("b0", "interpret", "use_ref", "memory_space", "dispatch"),
+)
 def push_back_fused(
     buckets: tuple[jax.Array, ...],
     sizes: jax.Array,  # (nblocks,) int32
@@ -105,10 +150,13 @@ def push_back_fused(
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
+    memory_space: str | None = None,
+    dispatch: str = "auto",
 ) -> tuple[tuple[jax.Array, ...], jax.Array, jax.Array]:
     """→ (new bucket levels, new sizes (nblocks,), positions (−1 masked))."""
     groups, new_sizes, pos = push_back_fused_multi(
         (buckets,), sizes, b0, (elems,), mask,
         interpret=interpret, use_ref=use_ref,
+        memory_space=memory_space, dispatch=dispatch,
     )
     return groups[0], new_sizes, pos

@@ -18,6 +18,7 @@ from repro.pool.planner import (
     QuotaExceeded,
     SlabAllocator,
     TenantPlanner,
+    growth_amount,
 )
 
 __all__ = [
@@ -30,4 +31,5 @@ __all__ = [
     "QuotaExceeded",
     "init_pool",
     "grow_pool",
+    "growth_amount",
 ]

@@ -31,7 +31,7 @@ from repro.core import indexing
 from repro.kernels import common
 from repro.kernels.flatten import kernel as flatten_kernel
 from repro.kernels.paged import ops as paged_ops
-from repro.pool.planner import PageBook, TenantPlanner
+from repro.pool.planner import PageBook, TenantPlanner, growth_amount
 
 __all__ = [
     "SlabPool",
@@ -153,7 +153,16 @@ class SlabArena:
         max_pages: int = 1,
         quota_slabs: int | None = None,
         append_method: str = "fused",
+        memory_space: str | None = None,
+        dispatch: str = "auto",
+        grow_chunk: int | str = 1,
     ):
+        """``initial_slabs`` pre-carves the pool at start (the high-water
+        knob); ``grow_chunk`` is the over-provisioning policy on exhaustion
+        (``pool.planner.growth_amount``: int floor or ``"geometric"``
+        doubling → O(log slabs) realloc copies).  ``memory_space`` /
+        ``dispatch`` select the paged-kernel tiling and insert-permutation
+        backend (``kernels/common``; None/"auto" = backend defaults)."""
         if slab_size < 1:
             raise ValueError("slab_size must be >= 1")
         self.pool = init_pool(initial_slabs, slab_size, item_shape, dtype)
@@ -167,6 +176,9 @@ class SlabArena:
         self.book.max_pages = max(max_pages, 1)
         self.planner = TenantPlanner(narrays)
         self.append_method = append_method
+        self.memory_space = memory_space
+        self.dispatch = dispatch
+        self.grow_chunk = grow_chunk
         # device mirrors of owners/bases, refreshed only when claims change
         self._tables_dev: tuple[jax.Array, jax.Array] | None = None
         self.appends = 0
@@ -236,8 +248,9 @@ class SlabArena:
         short = self.book.shortfall(k)
         if short == 0:
             return
-        self.pool = grow_pool(self.pool, short)
-        self.book.grow(short)
+        extra = growth_amount(self.pool.n_slabs, short, self.grow_chunk)
+        self.pool = grow_pool(self.pool, extra)
+        self.book.grow(extra)
         self.pool_grow_events += 1
 
     def _claim(self, per_tenant: np.ndarray) -> None:
@@ -312,6 +325,8 @@ class SlabArena:
             elems,
             mask_dev,
             use_ref=self.append_method in ("ref", "jnp"),
+            memory_space=self.memory_space,
+            dispatch=self.dispatch,
         )
         self.pool = dataclasses.replace(self.pool, data=data)
         self.arr = dataclasses.replace(self.arr, sizes=sizes)
@@ -344,7 +359,9 @@ class SlabArena:
     # ---- reads -----------------------------------------------------------
     def logical_view(self) -> jax.Array:
         """(narrays, max_pages·T, *item) contiguous views (paged gather)."""
-        return paged_ops.paged_gather(self.pool.data, self.arr.pages)
+        return paged_ops.paged_gather(
+            self.pool.data, self.arr.pages, memory_space=self.memory_space
+        )
 
     def flatten(self) -> tuple[jax.Array, jax.Array, jax.Array]:
         """→ (flat, total, block_starts) in block-major global order.
@@ -368,6 +385,7 @@ class SlabArena:
                 compact,
                 starts,
                 starts + self.arr.sizes.astype(jnp.int32),
+                memory_space=common.resolve_memory_space(self.memory_space),
                 interpret=common.should_interpret(None),
             )
             return flat, total, starts

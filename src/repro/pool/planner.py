@@ -19,7 +19,34 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["SlabAllocator", "TenantPlanner", "PageBook", "QuotaExceeded"]
+__all__ = [
+    "SlabAllocator",
+    "TenantPlanner",
+    "PageBook",
+    "QuotaExceeded",
+    "growth_amount",
+]
+
+
+def growth_amount(n_slabs: int, short: int, grow_chunk: int | str) -> int:
+    """Slabs to add when the free list is ``short`` of a claim.
+
+    ``grow_chunk`` is the over-provisioning policy:
+
+    * an int ``c`` — demand growth with a floor: add ``max(short, c)``
+      (``1`` = exact demand, the tight-capacity default);
+    * ``"geometric"`` — double the pool: add ``max(short, n_slabs, 1)``,
+      so a fleet that keeps growing pays **O(log n_slabs)** realloc copies
+      total instead of one per growth wave (Tarjan & Zwick amortization;
+      asserted in ``tests/pool/test_arena.py``).
+
+    Pre-carving (``SlabArena(initial_slabs=...)`` / a pool sized to the
+    expected high-water mark at engine start) composes with either policy —
+    growth only begins once the pre-carve is exhausted.
+    """
+    if grow_chunk == "geometric":
+        return max(short, n_slabs, 1)
+    return max(short, int(grow_chunk))
 
 
 class QuotaExceeded(RuntimeError):

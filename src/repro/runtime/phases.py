@@ -140,6 +140,7 @@ class TwoPhasePipeline:
         nbuckets: int = 1,
         *,
         flatten_impl: str = "segmented",
+        memory_space: str | None = None,
     ):
         if flatten_impl not in FLATTEN_IMPLS:
             raise ValueError(f"flatten_impl {flatten_impl!r} not in {FLATTEN_IMPLS}")
@@ -148,11 +149,18 @@ class TwoPhasePipeline:
         self._frozen: FrozenArray | None = None
         self._phase = Phase.GROW
         self.flatten_impl = flatten_impl
+        self.memory_space = memory_space
         self.stats = FreezeStats()
         self._planner = gg.CapacityPlanner()  # fresh array: bound 0, no sync
 
     @classmethod
-    def from_ggarray(cls, arr: gg.GGArray, *, flatten_impl: str = "segmented"):
+    def from_ggarray(
+        cls,
+        arr: gg.GGArray,
+        *,
+        flatten_impl: str = "segmented",
+        memory_space: str | None = None,
+    ):
         """Adopt an existing GGArray (no throwaway default allocation)."""
         if flatten_impl not in FLATTEN_IMPLS:
             raise ValueError(f"flatten_impl {flatten_impl!r} not in {FLATTEN_IMPLS}")
@@ -162,6 +170,7 @@ class TwoPhasePipeline:
         pipe._frozen = None
         pipe._phase = Phase.GROW
         pipe.flatten_impl = flatten_impl
+        pipe.memory_space = memory_space
         pipe.stats = FreezeStats()
         pipe._planner = gg.CapacityPlanner.for_array(arr)  # one seed read
         pipe.stats.host_syncs = pipe._planner.host_syncs
@@ -185,6 +194,7 @@ class TwoPhasePipeline:
         pipe._frozen = None
         pipe._phase = Phase.GROW
         pipe.flatten_impl = "segmented"
+        pipe.memory_space = arena.memory_space  # the arena owns the choice
         pipe.stats = FreezeStats()
         pipe._planner = None  # the arena's TenantPlanner owns the bounds
         return pipe
@@ -283,7 +293,8 @@ class TwoPhasePipeline:
                 flat, total = gg.flatten(arr)
             else:
                 flat = flatten_ops.flatten(
-                    arr.buckets, arr.sizes, arr.b0, impl=self.flatten_impl
+                    arr.buckets, arr.sizes, arr.b0, impl=self.flatten_impl,
+                    memory_space=self.memory_space,
                 )
                 total = jnp.sum(arr.sizes)
         flat = jax.block_until_ready(flat)

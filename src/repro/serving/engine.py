@@ -262,11 +262,16 @@ class BatchEngine:
     in ``stats.host_syncs``).
 
     Pool sizing: the pool grows only when the free list is exhausted
-    (released slabs are always reused first), by ``max(shortfall,
-    grow_chunk)`` slabs.  With the default ``grow_chunk=1`` capacity tracks
-    demand exactly: at every instant ``pool_tokens ≤ live_tokens +
-    slab_tokens · active_sequences`` — the fleet-level analog of the paper's
-    2× bound, asserted in the acceptance test.
+    (released slabs are always reused first), by
+    ``pool.planner.growth_amount(n_slabs, shortfall, grow_chunk)`` slabs.
+    With the default ``grow_chunk=1`` capacity tracks demand exactly: at
+    every instant ``pool_tokens ≤ live_tokens + slab_tokens ·
+    active_sequences`` — the fleet-level analog of the paper's 2× bound,
+    asserted in the acceptance test.  ``grow_chunk="geometric"`` doubles the
+    pool instead (O(log slabs) realloc copies over a run), and a high-water
+    pre-carve trades idle capacity for zero growth copies at steady state.
+    Kernel memory space follows ``cfg.kernel_memory_space``
+    (``kernels/common``: hbm on TPU, vmem in interpret mode by default).
     """
 
     def __init__(
@@ -275,7 +280,7 @@ class BatchEngine:
         cfg: ModelConfig,
         *,
         max_batch: int = 8,
-        grow_chunk: int = 1,
+        grow_chunk: int | str = 1,
         quota_slabs: int | None = None,
         stop_token: int | None = None,
         seed: int = 0,
@@ -385,7 +390,11 @@ class BatchEngine:
         self._ensure_table_width(int(self.book.npages[slot]) + k)
         short = self.book.shortfall(k)
         if short:
-            self._grow_pool(max(short, self.grow_chunk))
+            from repro.pool import growth_amount
+
+            self._grow_pool(
+                growth_amount(self.alloc.n_slabs, short, self.grow_chunk)
+            )
         before_reuse = self.alloc.reuse_claims
         ids, page0 = self.book.claim(slot, k)
         self.stats.reused_slabs += self.alloc.reuse_claims - before_reuse

@@ -297,7 +297,16 @@ def thaw_cache(cache: Cache, b0: int) -> Cache:
 # append — push_back of one decode step. k/v: (B, 1, KH, Dh); pos: (B,) or ().
 # --------------------------------------------------------------------------
 
-def append(cache: Cache, k: jax.Array, v: jax.Array, pos: jax.Array) -> Cache:
+def append(
+    cache: Cache,
+    k: jax.Array,
+    v: jax.Array,
+    pos: jax.Array,
+    cfg: ModelConfig | None = None,
+) -> Cache:
+    """``cfg`` (optional) threads ``kernel_memory_space`` to the fused
+    push-back kernel; without it the kernel-layer default applies (hbm on
+    TPU, vmem in interpret mode — ``kernels/common``)."""
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), k.shape[:1])  # (B,)
     rows = jnp.arange(k.shape[0])
     quant = _is_quant(cache)
@@ -349,7 +358,8 @@ def append(cache: Cache, k: jax.Array, v: jax.Array, pos: jax.Array) -> Cache:
         tuple(cache[f"{base}{lvl}"] for lvl in range(n)) for base in bases
     )
     groups, _, _ = push_back_ops.push_back_fused_multi(
-        bucket_groups, pos, b0, tuple(payloads), lane
+        bucket_groups, pos, b0, tuple(payloads), lane,
+        memory_space=cfg.kernel_memory_space if cfg is not None else None,
     )
     out = dict(cache)
     for base, levels in zip(bases, groups):
@@ -452,7 +462,8 @@ def _attend_paged(cache, qf, length, cfg, state, _kv):
         from repro.kernels.paged import ops as paged_ops
 
         return paged_ops.paged_attend(
-            qf, cache["k_pool"], cache["v_pool"], pages, length
+            qf, cache["k_pool"], cache["v_pool"], pages, length,
+            memory_space=cfg.kernel_memory_space,
         )
     for lo, hi in geometric_page_groups(pages.shape[-1]):
         width = hi - lo

@@ -193,7 +193,7 @@ def decode_step(
                 continue
             q, k, v = project_qkv(sp["attn"], h, cfg, positions)
             kv_only = {key: val for key, val in c.items() if not key.startswith("cross")}
-            c2 = kvcache.append(kv_only, k, v, pos)
+            c2 = kvcache.append(kv_only, k, v, pos, cfg)
             att = kvcache.attend(c2, q, pos + 1, cfg)
             x = x + project_out(sp["attn"], att)
             if "cross_k" in c:

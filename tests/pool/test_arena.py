@@ -120,6 +120,62 @@ def test_interleaved_admit_grow_evict_never_double_assigns(seed):
     assert stats["capacity_tokens"] <= stats["live_tokens"] + 4 * n + 4 * n
 
 
+def test_geometric_growth_pays_o_log_copies():
+    """grow_chunk="geometric": pool realloc copies are O(log final slabs),
+    while demand growth (the tight-capacity default) pays ~one per wave."""
+    geo = SlabArena(2, 4, dtype=jnp.float32, grow_chunk="geometric")
+    demand = SlabArena(2, 4, dtype=jnp.float32)
+    waves = 40
+    for _ in range(waves):
+        elems = jnp.ones((2, 6), jnp.float32)
+        geo.append(elems)
+        demand.append(elems)
+    n = geo.pool.n_slabs
+    assert geo.pool_grow_events <= int(np.ceil(np.log2(max(n, 2)))) + 1, (
+        f"{geo.pool_grow_events} realloc copies for {n} slabs is not O(log)"
+    )
+    assert demand.pool_grow_events > 2 * geo.pool_grow_events
+    # the data is identical either way — over-provisioning is capacity-only
+    fg, tg, _ = geo.flatten()
+    fd, td, _ = demand.flatten()
+    ng = int(jax.device_get(tg))
+    assert ng == int(jax.device_get(td))
+    np.testing.assert_array_equal(np.asarray(fg)[:ng], np.asarray(fd)[:ng])
+    geo.check_invariants()
+
+
+def test_high_water_pre_carve_never_grows():
+    """initial_slabs at the expected high-water mark: zero realloc copies."""
+    arena = SlabArena(2, 4, dtype=jnp.float32, initial_slabs=32)
+    for _ in range(10):
+        arena.append(jnp.ones((2, 6), jnp.float32))  # 60 tokens < 64 carved
+    assert arena.pool_grow_events == 0
+    arena.check_invariants()
+
+
+def test_arena_memory_space_paths_agree():
+    """vmem- and hbm-pinned arenas produce identical appends and flattens."""
+    rng = np.random.default_rng(9)
+    arenas = {
+        sp: SlabArena(3, 4, dtype=jnp.float32, memory_space=sp)
+        for sp in ("vmem", "hbm")
+    }
+    for _ in range(6):
+        m = int(rng.integers(1, 9))
+        elems = jnp.asarray(rng.standard_normal((3, m)), jnp.float32)
+        mask = rng.random((3, m)) > 0.3
+        pos = {sp: a.append(elems, mask) for sp, a in arenas.items()}
+        np.testing.assert_array_equal(
+            np.asarray(pos["vmem"]), np.asarray(pos["hbm"])
+        )
+    flats = {sp: a.flatten() for sp, a in arenas.items()}
+    np.testing.assert_array_equal(
+        np.asarray(flats["vmem"][0]), np.asarray(flats["hbm"][0])
+    )
+    for a in arenas.values():
+        a.check_invariants()
+
+
 def test_pipeline_from_arena_freeze_thaw():
     """TwoPhasePipeline lifecycle over arena-backed storage."""
     pipe = TwoPhasePipeline.from_arena(SlabArena(4, 8, dtype=jnp.float32))
