@@ -98,11 +98,25 @@ def bench_protocol() -> None:
 
 
 def bench_insert_method() -> None:
+    from repro.kernels.tuning import FUSED_PUSH_BACK_MIN_WAVE, resolve_push_back_method
+
     for n in _sizes():
+        m = n // WAVES // NBLOCKS
         t_fused = timeit(lambda: _grow_donated(n, "fused"), repeats=3, warmup=1)
         t_scan = timeit(lambda: _grow_donated(n, "scan"), repeats=3, warmup=1)
+        t_auto = timeit(lambda: _grow_donated(n, "auto"), repeats=3, warmup=1)
         emit(f"append.fused.n{n}", t_fused, f"speedup_vs_scan={t_scan / t_fused:.2f}")
         emit(f"append.scan.n{n}", t_scan, "")
+        # "auto" must track the better side of the tuned crossover — the
+        # resolved method and the threshold it came from go in the artifact
+        # so a re-tune of kernels/tuning.py shows up in the bench history.
+        emit(
+            f"append.auto.n{n}",
+            t_auto,
+            f"resolved={resolve_push_back_method('auto', m)} m={m} "
+            f"threshold={FUSED_PUSH_BACK_MIN_WAVE} "
+            f"vs_best={min(t_fused, t_scan) / t_auto:.2f}",
+        )
 
 
 def main() -> None:

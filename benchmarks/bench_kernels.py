@@ -14,8 +14,9 @@ rows time both on identical inputs:
     serving-scale pools resident).
 
 ``kernels.dispatch.{onehot,mxu}.m*``
-    the insert permutation below and above ``common.MXU_DISPATCH_WAVE``
-    lanes — the exact int32 one-hot reduction vs the dispatch matmul
+    the insert permutation below and above the measured
+    ``kernels/tuning.MXU_DISPATCH_WAVE`` crossover — the exact int32
+    one-hot reduction vs the dispatch matmul
     (``kernels/dispatch_mxu.permute_rows``), bit-exact by construction.
 
 Usage: ``python benchmarks/bench_kernels.py [--smoke]`` → rows on stdout +
@@ -34,6 +35,7 @@ from repro.core import ggarray as gg
 from repro.core import indexing
 from repro.kernels.flatten import ops as flatten_ops
 from repro.kernels.paged import ops as paged_ops
+from repro.kernels import tuning
 from repro.kernels.push_back import ops as pb_ops
 
 SPACES = ("vmem", "hbm")
@@ -120,7 +122,10 @@ def main() -> None:
         emit(f"kernels.flatten.{space}.n{cap}", us, f"levels={nlev}")
 
     # --- dispatch: one-hot vs MXU across the wave threshold ----------------
-    waves = (8, 128) if smoke else (32, 128, 256)
+    # Bracket the *measured* crossover (kernels/tuning.py) so a re-tune moves
+    # the sweep with it — the threshold cannot drift from what the kernels use.
+    thr = tuning.MXU_DISPATCH_WAVE
+    waves = (8, thr) if smoke else (thr // 4, thr // 2, thr, 2 * thr)
     for wm in waves:
         delems = jnp.asarray(rng.standard_normal((nblocks, wm)), jnp.float32)
         dmask = jnp.asarray(rng.random((nblocks, wm)) > 0.3)
@@ -135,7 +140,7 @@ def main() -> None:
             outs[disp] = pb_ops.push_back_fused(
                 arr.buckets, wsizes, b0, delems, dmask, dispatch=disp
             )
-            emit(f"kernels.dispatch.{disp}.m{wm}", us, f"threshold=128")
+            emit(f"kernels.dispatch.{disp}.m{wm}", us, f"threshold={thr}")
         for a, b in zip(jax.tree.leaves(outs["onehot"]), jax.tree.leaves(outs["mxu"])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 

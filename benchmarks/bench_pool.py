@@ -1,25 +1,35 @@
-"""Slab-arena serving benchmark — sequences/s and pool utilization.
+"""Slab-arena serving benchmark — sequences/s, TTFT, and pool utilization.
 
-Compares the paged-policy ``BatchEngine`` (one shared slab pool, continuous
-batching, slab reclamation) against the per-array ``ggarray`` policy
-(``Engine.generate``: every sequence owns a geometric bucket chain) on the
-same ragged request fleet:
+Compares the paged-policy ``BatchEngine`` (one shared slab pool, bucketed
+chunked-prefill admission, continuous batching, slab reclamation) against
+(a) the same engine under monolithic admission and (b) the per-array
+``ggarray`` policy (``Engine.generate``: every sequence owns a geometric
+bucket chain) on the same ragged request fleet:
 
 * ``seqs_per_s`` — completed sequences per wall second, end to end
   (admission prefill + decode + reclamation).  CPU-relative like every
   wall-clock number here: the claim under test is the *ordering*, not ms.
-* ``pool_utilization`` — peak live tokens / peak pool capacity.  The arena's
-  capacity bound (live + one slab per sequence, DESIGN.md §4) keeps this
-  high under ragged loads, where the per-array policy pays each sequence's
-  bucket-chain rounding (capacity ≈ next bucket boundary per sequence).
-* ``capacity_ratio`` — allocated token slots / peak live tokens for each
-  policy (the §V memory metric at fleet scale).
+  Timed engines are fresh instances after a warm-up engine over the same
+  fleet: the step jits are shared per-``ModelConfig`` (module-level
+  factories), so the timed run measures steady-state serving, not tracing.
+* ``ttft_ms`` — mean time-to-first-token over the fleet (chunked admission
+  interleaves prefill chunks with decode, so long prompts no longer block
+  the queue for their whole prefill).
+* ``prefill_traces`` — distinct prefill compilations; bounded by the
+  bucket table (O(log chunk)), not by distinct prompt lengths.
+* ``pool_utilization`` / ``capacity_ratio`` — peak live tokens vs peak pool
+  capacity (the §V memory metric at fleet scale); the arena's bound is
+  live + one slab per sequence, the per-array policy pays bucket rounding.
 
-Usage: ``python benchmarks/bench_pool.py [--smoke]`` → rows on stdout +
-``BENCH_pool.json`` (via benchmarks/run.py schema).
+Usage: ``python benchmarks/bench_pool.py [--smoke] [--profile]`` → rows on
+stdout + ``BENCH_pool.json`` (benchmarks/run.py schema).  ``--profile``
+additionally writes a ``jax.profiler`` trace of the timed paged run under
+``REPRO_BENCH_DIR`` (default ``.``)/``profile_pool`` for the CI artifact.
 """
 from __future__ import annotations
 
+import contextlib
+import os
 import sys
 import time
 
@@ -40,10 +50,23 @@ def _fleet(rng, nseqs, max_prompt):
     ]
 
 
+def _serve(params, cfg, prompts, new_tokens, max_batch, admission):
+    """One fresh engine over the fleet → (engine, wall seconds, ttfts)."""
+    be = BatchEngine(params, cfg, max_batch=max_batch, admission=admission)
+    rids = [be.submit(p, new_tokens) for p in prompts]
+    t0 = time.perf_counter()
+    be.run()
+    dt = time.perf_counter() - t0
+    ttfts = [be._requests[r].ttft for r in rids]
+    return be, dt, ttfts
+
+
 def main() -> None:
     smoke = smoke_mode() or "--smoke" in sys.argv
+    profile = "--profile" in sys.argv
     nseqs = 6 if smoke else 12
-    max_prompt = 8 if smoke else 24
+    # past attention_chunk=32 so the chunked path really chunks
+    max_prompt = 40 if smoke else 70
     new_tokens = 5 if smoke else 16
     max_batch = 4 if smoke else 8
 
@@ -52,16 +75,39 @@ def main() -> None:
     rng = np.random.default_rng(0)
     prompts = _fleet(rng, nseqs, max_prompt)
 
-    # --- paged: shared pool, continuous batching --------------------------
-    warm = BatchEngine(params, cfg, max_batch=max_batch)
-    warm.run_all(prompts[:2], 2)  # compile cache warm-up
-    be = BatchEngine(params, cfg, max_batch=max_batch)
-    t0 = time.perf_counter()
-    be.run_all(prompts, new_tokens)
-    dt_paged = time.perf_counter() - t0
+    # --- paged: shared pool, chunked admission ----------------------------
+    # The warm-up engine compiles every (bucket, first) prefill trace and
+    # the decode trace into the shared per-config jit cache; the timed
+    # engine reuses them all (tests/serving/test_trace_count.py pins this).
+    _serve(params, cfg, prompts, new_tokens, max_batch, "chunked")
+    prof = (
+        jax.profiler.trace(
+            os.path.join(os.environ.get("REPRO_BENCH_DIR", "."), "profile_pool")
+        )
+        if profile
+        else contextlib.nullcontext()
+    )
+    with prof:
+        be, dt_paged, ttfts = _serve(
+            params, cfg, prompts, new_tokens, max_batch, "chunked"
+        )
     peak_live = be.stats.peak_live_tokens
     util = peak_live / max(be.stats.peak_pool_tokens, 1)
-    emit("pool_paged_seqs_per_s", dt_paged / nseqs * 1e6, f"{nseqs / dt_paged:.2f}/s")
+    emit(
+        "pool_paged_seqs_per_s",
+        dt_paged / nseqs * 1e6,
+        f"{nseqs / dt_paged:.2f}/s chunks={be.stats.prefill_chunks}",
+    )
+    emit(
+        "pool_paged_ttft_ms",
+        float(np.mean(ttfts)) * 1e6,
+        f"mean={np.mean(ttfts) * 1e3:.1f}ms p95={np.quantile(ttfts, 0.95) * 1e3:.1f}ms",
+    )
+    emit(
+        "pool_paged_prefill_traces",
+        float(be.stats.prefill_traces),
+        f"buckets={be.sched.buckets} distinct_lengths={len({len(p) for p in prompts})}",
+    )
     emit(
         "pool_paged_utilization",
         util * 100.0,
@@ -74,9 +120,25 @@ def main() -> None:
         f"bound<2x+slab/seq grow_events={be.stats.pool_grow_events}",
     )
 
+    # --- paged, monolithic admission: the pre-chunking scheduler ----------
+    _serve(params, cfg, prompts, new_tokens, max_batch, "monolithic")
+    bm, dt_mono, ttfts_m = _serve(
+        params, cfg, prompts, new_tokens, max_batch, "monolithic"
+    )
+    emit(
+        "pool_monolithic_seqs_per_s",
+        dt_mono / nseqs * 1e6,
+        f"{nseqs / dt_mono:.2f}/s chunked_speedup={dt_mono / dt_paged:.2f}",
+    )
+    emit(
+        "pool_monolithic_ttft_ms",
+        float(np.mean(ttfts_m)) * 1e6,
+        f"chunked_ttft_ratio={np.mean(ttfts) / max(np.mean(ttfts_m), 1e-12):.2f}",
+    )
+
     # --- ggarray oracle: one bucket chain per sequence --------------------
     eng = Engine(params, cfg, policy="ggarray", max_len=256)
-    eng.generate(prompts[:2], 2)  # warm-up
+    eng.generate(prompts, new_tokens)  # warm-up
     eng = Engine(params, cfg, policy="ggarray", max_len=256)
     t0 = time.perf_counter()
     eng.generate(prompts, new_tokens)
@@ -85,7 +147,11 @@ def main() -> None:
     lens = [len(p) + new_tokens for p in prompts]
     caps = [kvcache.cache_capacity(cfg, "ggarray", n) for n in lens]
     live = sum(lens)
-    emit("pool_ggarray_seqs_per_s", dt_gg / nseqs * 1e6, f"{nseqs / dt_gg:.2f}/s")
+    emit(
+        "pool_ggarray_seqs_per_s",
+        dt_gg / nseqs * 1e6,
+        f"{nseqs / dt_gg:.2f}/s paged_vs_ggarray={dt_gg / dt_paged:.2f}",
+    )
     emit(
         "pool_ggarray_capacity_ratio",
         sum(caps) / live,

@@ -1,0 +1,96 @@
+"""CI gate: paged-engine throughput must not regress vs the committed baseline.
+
+Reads ``BENCH_pool.json`` (the smoke artifact the CI job just produced),
+computes the paged/ggarray sequences-per-second ratio — both engines run on
+the same machine in the same process, so the ratio self-normalizes away the
+runner's absolute speed — and fails (exit 1) if it has dropped more than
+``--tolerance`` (default 20%) below the committed baseline ratio in
+``benchmarks/baselines/pool_smoke.json``.  Two floors are enforced:
+
+* relative: ``ratio ≥ (1 − tolerance) · baseline_ratio`` — catches a
+  scheduler/jit-cache regression even while the ratio is comfortably > 1;
+* absolute: ``ratio ≥ 0.8`` — the ISSUE 6 acceptance bound (the paged
+  engine must serve at least 0.8× ggarray's seqs/s, up from 0.21×).
+
+``--update`` rewrites the baseline from the current artifact (a deliberate,
+reviewed re-tune — commit the diff).
+
+Usage::
+
+    python benchmarks/check_regression.py [--bench BENCH_pool.json]
+        [--baseline benchmarks/baselines/pool_smoke.json]
+        [--tolerance 0.2] [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ABSOLUTE_FLOOR = 0.8  # ISSUE 6 acceptance: paged ≥ 0.8× ggarray seqs/s
+
+
+def _rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r["us_per_call"] for r in payload["rows"]}
+
+
+def main(argv: list[str] | None = None) -> int:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="BENCH_pool.json")
+    ap.add_argument(
+        "--baseline", default=os.path.join(here, "baselines", "pool_smoke.json")
+    )
+    ap.add_argument("--tolerance", type=float, default=0.2)
+    ap.add_argument("--update", action="store_true")
+    args = ap.parse_args(argv)
+
+    rows = _rows(args.bench)
+    try:
+        us_paged = rows["pool_paged_seqs_per_s"]
+        us_gg = rows["pool_ggarray_seqs_per_s"]
+    except KeyError as e:
+        print(f"check_regression: {args.bench} is missing row {e}", file=sys.stderr)
+        return 1
+    # rows record µs per sequence, so throughput ratio inverts them
+    ratio = us_gg / us_paged
+
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(
+                {
+                    "metric": "paged_vs_ggarray_seqs_per_s_ratio",
+                    "value": round(ratio, 3),
+                    "source": "benchmarks/bench_pool.py --smoke",
+                },
+                f,
+                indent=2,
+            )
+            f.write("\n")
+        print(f"check_regression: baseline updated to {ratio:.3f}")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)["value"]
+    floor = (1.0 - args.tolerance) * base
+    verdict = (
+        f"paged/ggarray seqs/s ratio {ratio:.3f} "
+        f"(baseline {base:.3f}, relative floor {floor:.3f}, "
+        f"absolute floor {ABSOLUTE_FLOOR})"
+    )
+    if ratio < ABSOLUTE_FLOOR:
+        print(f"check_regression: FAIL — below acceptance bound: {verdict}")
+        return 1
+    if ratio < floor:
+        print(f"check_regression: FAIL — >{args.tolerance:.0%} regression: {verdict}")
+        return 1
+    print(f"check_regression: OK — {verdict}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -301,8 +301,10 @@ def _scatter_positions(
 
 # push_back's insertion backends: the offsets-only algorithms from
 # core.insertion plus "fused", the Pallas kernel that computes offsets and
-# scatters into every bucket level in one tiled pass (kernels/push_back).
-PUSH_BACK_METHODS = ("atomic", "fused", "mxu", "scan", "tile")
+# scatters into every bucket level in one tiled pass (kernels/push_back),
+# plus "auto" — the measured wave-width crossover (kernels/tuning.py):
+# fused at or above FUSED_PUSH_BACK_MIN_WAVE lanes, scan below it.
+PUSH_BACK_METHODS = ("atomic", "auto", "fused", "mxu", "scan", "tile")
 
 
 def _push_back_impl(
@@ -314,6 +316,10 @@ def _push_back_impl(
     """Shared body of the jitted ``push_back`` / donated ``append``."""
     if elems.ndim < 2 or elems.shape[0] != gg.nblocks:
         raise ValueError(f"elems must be (nblocks={gg.nblocks}, m, ...), got {elems.shape}")
+    if method == "auto":
+        from repro.kernels.tuning import resolve_push_back_method
+
+        method = resolve_push_back_method(method, elems.shape[1])
     if mask is None:
         mask = jnp.ones(elems.shape[:2], dtype=bool)
     if jnp.issubdtype(mask.dtype, jnp.floating):
@@ -341,7 +347,7 @@ def push_back(
     gg: GGArray,
     elems: jax.Array,
     mask: jax.Array | None = None,
-    method: str = "scan",
+    method: str = "auto",
 ) -> tuple[GGArray, jax.Array]:
     """Parallel push_back of up to ``m`` elements per block (paper Alg. 1).
 
@@ -363,7 +369,7 @@ def append(
     gg: GGArray,
     elems: jax.Array,
     mask: jax.Array | None = None,
-    method: str = "scan",
+    method: str = "auto",
 ) -> tuple[GGArray, jax.Array, jax.Array]:
     """Donated push_back — the host-sync-free hot path.
 

@@ -65,9 +65,11 @@ MXU_LANE = 128  # MXU systolic dimension / VREG lane count
 MEMORY_SPACES = ("vmem", "hbm")
 
 # Wave width at which the insert permutation moves from the exact int32
-# one-hot reduction (VPU, O(m²) compares) to the MXU dispatch matmul — one
-# full lane tile is where the systolic array starts beating the compare tree.
-MXU_DISPATCH_WAVE = MXU_LANE
+# one-hot reduction (VPU, O(m²) compares) to the MXU dispatch matmul.
+# Measured, not a-priori: the threshold lives in kernels/tuning.py (single
+# source of truth shared with the benchmark sweeps).
+from repro.kernels.tuning import MXU_DISPATCH_WAVE  # noqa: E402
+
 DISPATCH_METHODS = ("auto", "onehot", "mxu")
 
 

@@ -1,0 +1,56 @@
+"""Measured kernel crossover thresholds — one source of truth.
+
+Every ``"auto"`` resolver (``common.resolve_dispatch``, the push-back method
+resolution in ``core/ggarray`` and ``serving/kvcache``) and every benchmark
+sweep that brackets a crossover (``benchmarks/bench_kernels.py``,
+``benchmarks/bench_append.py``) imports the constants from here, so a re-tune
+is a one-line edit that kernels and benchmarks see simultaneously —
+``tests/kernels/test_crossovers.py`` pins both sides to this module.
+
+The values are **empirical**, re-measured for this revision in interpret
+mode (the container/CI substrate; re-run the sweeps on real hardware and
+edit here when a TPU is available):
+
+* fused push-back vs. the jnp scan+scatter path: the fused kernel's launch
+  overhead dominates below ~32 inserted lanes per block and it loses at any
+  capacity (0.1–0.8×, worst at the decode wave ``m=1``); from ``m=32`` it is
+  ≥1× everywhere measured and grows to 3–17× by ``m=128``.  Hence
+  :data:`FUSED_PUSH_BACK_MIN_WAVE` = 32 — this pins the serving decode
+  append (one lane per sequence) to the scan path, closing the 0.08×-at-
+  n=256 regression BENCH_append recorded.
+* MXU dispatch matmul vs. the exact one-hot reduction: at ``m=128`` the
+  emulated matmul is decisively slower (the 6× regression BENCH_kernels
+  recorded); parity arrives at ``m≈256`` and holds above.  Hence
+  :data:`MXU_DISPATCH_WAVE` = 256, raised from the a-priori 128 (one MXU
+  lane tile) the previous revision shipped.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "FUSED_PUSH_BACK_MIN_WAVE",
+    "MXU_DISPATCH_WAVE",
+    "resolve_push_back_method",
+]
+
+# Smallest per-block wave width m at which the fused Pallas push-back beats
+# the jnp scan+scatter fallback (measured: 0.15× at m=1, ~1× at m=32,
+# 7–17× at m=128).
+FUSED_PUSH_BACK_MIN_WAVE = 32
+
+# Smallest wave width at which the MXU dispatch matmul beats the exact
+# one-hot reduction for the insert permutation (measured: 0.5× at m=128,
+# ~1.05× from m=256).
+MXU_DISPATCH_WAVE = 256
+
+
+def resolve_push_back_method(method: str, m: int) -> str:
+    """Resolve ``method="auto"`` for an ``m``-lane push-back wave.
+
+    Explicit methods pass through untouched; ``"auto"`` picks the fused
+    Pallas kernel at or above :data:`FUSED_PUSH_BACK_MIN_WAVE` lanes and the
+    jnp scan+scatter path below it (launch overhead dominates small waves —
+    the serving decode append is ``m=1``).
+    """
+    if method != "auto":
+        return method
+    return "fused" if m >= FUSED_PUSH_BACK_MIN_WAVE else "scan"

@@ -92,22 +92,41 @@ def mamba_block(
     *,
     return_state: bool = False,
 ):
-    """Full-sequence SSD pass. x: (B, L, D) → (B, L, D) [, final MambaState]."""
+    """Full-sequence SSD pass. x: (B, L, D) → (B, L, D) [, final MambaState].
+
+    ``state`` makes this a *resumable* chunk step (serving's chunked
+    prefill): ``state.ssd`` seeds the inter-chunk recurrence and
+    ``state.conv`` supplies the raw pre-conv history the causal conv window
+    reaches back into.  With a zero state the history rows are zeros — the
+    exact values the implicit left zero-pad used to contribute — so the
+    ``state=None`` path is bit-identical to before.
+    """
     s, di, nh, hd, g, n = _dims(cfg)
     B, L, _ = x.shape
-    Q = min(s.chunk_size, L)
+    # Resumable calls keep the full chunk grid: a short tail (L < chunk_size)
+    # must pad up to the same Q the monolithic pass used, or the repartition
+    # changes fp association (pad steps are dt-zeroed, hence state-neutral).
+    Q = s.chunk_size if state is not None else min(s.chunk_size, L)
     pad = (-L) % Q
     Lp = L + pad
     nc = Lp // Q
 
     z, xBC, dt = _split_proj(p, x, cfg)
-    conv_tail = xBC[:, max(L - (s.d_conv - 1), 0) :, :]  # raw tail → decode window
+    hist = (
+        state.conv.astype(xBC.dtype)
+        if state is not None
+        else jnp.zeros((B, s.d_conv - 1, xBC.shape[-1]), xBC.dtype)
+    )
+    xBC = jnp.concatenate([hist, xBC], axis=1)  # (B, d_conv-1 + L, ch)
+    # raw (pre-conv) tail → the next step's conv window; the history concat
+    # keeps it full-width even for L < d_conv-1 prompts
+    conv_tail = xBC[:, xBC.shape[1] - (s.d_conv - 1) :, :]
     if pad:  # pad to a chunk multiple; dt is zeroed on pad steps below, which
         # makes them state-neutral (decay=exp(0)=1, contribution dt·B·x=0)
         z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
         xBC = jnp.pad(xBC, ((0, 0), (0, pad), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
-    xBC = _causal_conv(p, xBC, s.d_conv)
+    xBC = _causal_conv(p, xBC, s.d_conv)[:, s.d_conv - 1 :]
     xs, Bm, Cm = jnp.split(xBC, [di, di + g * n], axis=-1)
     xs = xs.reshape(B, Lp, nh, hd)
     Bm = Bm.reshape(B, Lp, g, n)

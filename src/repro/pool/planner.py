@@ -70,6 +70,11 @@ class SlabAllocator:
         self.releases = 0
         self.grown_slabs = 0
         self.peak_live = 0
+        # Reservation ledger: slab *counts* (not ids) promised to tenants with
+        # in-flight chunked prefills.  Reserved counts are subtracted from the
+        # availability other claims see, so decode growth can never starve a
+        # prefill that was already admitted (DESIGN.md §7 invariant).
+        self.reserved: dict[int, int] = {}
         self._ever_released = np.zeros((n_slabs,), bool)
 
     @property
@@ -84,12 +89,56 @@ class SlabAllocator:
     def live_count(self) -> int:
         return self.n_slabs - self.free_count
 
+    @property
+    def reserved_total(self) -> int:
+        return sum(self.reserved.values())
+
     def tenant_slabs(self, tenant: int) -> int:
         return int((self.owner == tenant).sum())
 
-    def shortfall(self, k: int) -> int:
-        """Slabs the pool must grow by before ``claim(·, k)`` can succeed."""
-        return max(k - self.free_count, 0)
+    def shortfall(self, k: int, *, tenant: int | None = None) -> int:
+        """Slabs the pool must grow by before ``claim(·, k)`` can succeed.
+
+        Outstanding reservations are unavailable to everyone except their own
+        tenant: pass ``tenant`` to count that tenant's reservation as usable
+        (the claim-from-reservation path).
+        """
+        avail = self.free_count - self.reserved_total
+        if tenant is not None:
+            avail += self.reserved.get(tenant, 0)
+        return max(k - avail, 0)
+
+    def reserve(self, tenant: int, k: int) -> None:
+        """Promise ``k`` slabs to ``tenant`` (quota-checked, ids unassigned).
+
+        The pool must already cover the reservation (grow on
+        ``shortfall(k)`` first, like a claim).
+        """
+        if k == 0:
+            return
+        if self.quota_slabs is not None:
+            held = self.tenant_slabs(tenant) + self.reserved.get(tenant, 0)
+            if held + k > self.quota_slabs:
+                raise QuotaExceeded(
+                    f"tenant {tenant}: {held} + {k} slabs > quota "
+                    f"{self.quota_slabs}"
+                )
+        if self.shortfall(k) > 0:
+            raise RuntimeError(
+                f"cannot reserve {k}: only "
+                f"{self.free_count - self.reserved_total} unreserved slabs free"
+            )
+        self.reserved[tenant] = self.reserved.get(tenant, 0) + k
+
+    def unreserve(self, tenant: int, k: int | None = None) -> int:
+        """Cancel (part of) a tenant's reservation → slabs returned."""
+        held = self.reserved.get(tenant, 0)
+        k = held if k is None else min(k, held)
+        if k:
+            self.reserved[tenant] = held - k
+            if self.reserved[tenant] == 0:
+                del self.reserved[tenant]
+        return k
 
     def grow(self, extra: int) -> None:
         self.free = np.concatenate([self.free, np.ones((extra,), bool)])
@@ -99,14 +148,24 @@ class SlabAllocator:
         )
         self.grown_slabs += extra
 
-    def claim(self, tenant: int, k: int) -> np.ndarray:
-        """Claim ``k`` slabs for ``tenant`` → int32 slab ids (lowest first)."""
+    def claim(
+        self, tenant: int, k: int, *, from_reservation: bool = False
+    ) -> np.ndarray:
+        """Claim ``k`` slabs for ``tenant`` → int32 slab ids (lowest first).
+
+        ``from_reservation`` draws down the tenant's reservation first (that
+        part was quota-checked at ``reserve`` time); any excess is treated as
+        a fresh claim.
+        """
         if k == 0:
             return np.zeros((0,), np.int32)
-        if self.quota_slabs is not None:
-            if self.tenant_slabs(tenant) + k > self.quota_slabs:
+        from_res = min(k, self.reserved.get(tenant, 0)) if from_reservation else 0
+        fresh = k - from_res
+        if self.quota_slabs is not None and fresh > 0:
+            held = self.tenant_slabs(tenant) + self.reserved.get(tenant, 0)
+            if held + fresh > self.quota_slabs:
                 raise QuotaExceeded(
-                    f"tenant {tenant}: {self.tenant_slabs(tenant)} + {k} slabs "
+                    f"tenant {tenant}: {held} + {fresh} slabs "
                     f"> quota {self.quota_slabs}"
                 )
         ids = np.flatnonzero(self.free)[:k].astype(np.int32)
@@ -115,6 +174,7 @@ class SlabAllocator:
                 f"free list exhausted: want {k}, have {len(ids)} "
                 "(grow the pool first — see SlabArena._ensure_slabs)"
             )
+        self.unreserve(tenant, from_res)
         self.free[ids] = False
         self.owner[ids] = tenant
         self.claims += k
@@ -140,11 +200,16 @@ class SlabAllocator:
         return ids
 
     def check(self) -> None:
-        """Internal free-xor-owned invariant."""
+        """Internal free-xor-owned + reservation-coverage invariants."""
         bad = self.free & (self.owner >= 0)
         assert not bad.any(), f"slabs both free and owned: {np.flatnonzero(bad)}"
         bad = ~self.free & (self.owner < 0)
         assert not bad.any(), f"slabs claimed but unowned: {np.flatnonzero(bad)}"
+        assert all(v > 0 for v in self.reserved.values()), self.reserved
+        assert self.reserved_total <= self.free_count, (
+            f"reservations ({self.reserved_total}) exceed free slabs "
+            f"({self.free_count}) — a claim ate reserved capacity"
+        )
 
 
 class PageBook:
@@ -173,8 +238,15 @@ class PageBook:
             [self.page_of_slab, np.full((extra,), -1, np.int64)]
         )
 
-    def shortfall(self, k: int) -> int:
-        return self.alloc.shortfall(k)
+    def shortfall(self, k: int, *, tenant: int | None = None) -> int:
+        return self.alloc.shortfall(k, tenant=tenant)
+
+    def reserve(self, tenant: int, k: int) -> None:
+        """Promise ``k`` slabs to ``tenant`` (see ``SlabAllocator.reserve``)."""
+        self.alloc.reserve(tenant, k)
+
+    def unreserve(self, tenant: int, k: int | None = None) -> int:
+        return self.alloc.unreserve(tenant, k)
 
     def widen(self, need: int) -> tuple[int, int] | None:
         """Geometric table widening → (old, new) widths, or None if covered."""
@@ -183,17 +255,20 @@ class PageBook:
         old, self.max_pages = self.max_pages, max(need, 2 * self.max_pages)
         return old, self.max_pages
 
-    def claim(self, tenant: int, k: int) -> tuple[np.ndarray, int]:
+    def claim(
+        self, tenant: int, k: int, *, from_reservation: bool = False
+    ) -> tuple[np.ndarray, int]:
         """Claim ``k`` slabs → (ids, first page index).  Reuse-first; the
         free list must already cover ``k`` (grow the pool on shortfall)."""
-        ids = self.alloc.claim(tenant, k)
+        ids = self.alloc.claim(tenant, k, from_reservation=from_reservation)
         page0 = int(self.npages[tenant])
         self.page_of_slab[ids] = page0 + np.arange(k)
         self.npages[tenant] += k
         return ids, page0
 
     def release(self, tenant: int) -> np.ndarray:
-        """Free every slab of ``tenant`` → the freed ids."""
+        """Free every slab of ``tenant`` (and any leftover reservation)."""
+        self.alloc.unreserve(tenant)
         ids = self.alloc.release_tenant(tenant)
         self.page_of_slab[ids] = -1
         self.npages[tenant] = 0

@@ -49,10 +49,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.serving import kvcache, steps
+from repro.serving import kvcache, scheduler as sched_mod, steps
 from repro.serving.sampler import sample
 
 __all__ = ["Engine", "EngineStats", "BatchEngine", "BatchStats", "Request"]
+
+
+# --------------------------------------------------------------------------
+# Shared jit factories — keyed on the (hashable, frozen) ModelConfig, so
+# every engine instance serving the same config reuses one traced executable
+# instead of re-tracing per instance (``jax.jit`` caches per function object:
+# a per-engine ``functools.partial`` made warm-up engines useless).
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _decode_step_fn(cfg: ModelConfig):
+    return jax.jit(
+        functools.partial(steps.decode_step, cfg=cfg), donate_argnums=(2,)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_chunk_fn(cfg: ModelConfig):
+    return jax.jit(
+        functools.partial(steps.prefill_chunk, cfg=cfg),
+        donate_argnums=(2,), static_argnames=("first",),
+    )
 
 
 @dataclasses.dataclass
@@ -227,6 +249,8 @@ class Request:
     generated: int = 0  # tokens sampled so far (incl. the prefill sample)
     first_tok: Any = None  # device scalar — materialized once, at the end
     done: bool = False
+    submit_t: float = 0.0  # host wall-clock at submit()
+    ttft: float = 0.0  # submit → first sampled token (dispatch wall-clock)
 
 
 @dataclasses.dataclass
@@ -234,6 +258,8 @@ class BatchStats:
     admitted: int = 0
     completed: int = 0
     prefills: int = 0
+    prefill_chunks: int = 0  # chunked-admission kernels launched
+    prefill_traces: int = 0  # distinct (width, pool, table) trace keys seen
     decode_steps: int = 0
     pool_grow_events: int = 0
     grown_slabs: int = 0
@@ -248,12 +274,30 @@ class BatchEngine:
     """Continuous-batch serving over one shared slab pool (DESIGN.md §4).
 
     ``max_batch`` decode *slots* run in lockstep; requests stream through
-    them: admit (single-sequence prefill scattered into freshly claimed
-    slabs) → batched donated decode steps (idle slots are inert: their page
-    rows are −1 so appends drop, and zero lengths mask their attention) →
-    completion (slabs released to the free list, slot re-admitted).  All
-    per-layer caches share one page table per sequence; K/V pools are per
-    scan period.
+    them: admit → prefill → batched donated decode steps (idle slots are
+    inert: their page rows are −1 so appends drop, and zero lengths mask
+    their attention) → completion (slabs released to the free list, slot
+    re-admitted).  All per-layer caches share one page table per sequence;
+    K/V pools are per scan period.
+
+    Admission (``admission=``, see ``serving/scheduler``):
+
+    - ``"chunked"`` (default) — the scheduler reserves the prompt's whole
+      slab need up front, then streams the prompt through ``prefill_chunk``
+      in bucket-padded windows *interleaved with decode steps* (vLLM-style
+      chunked prefill).  Prefill compiles O(log chunk) traces total; decode
+      keeps running for already-admitted sequences while new prompts fill.
+      A prefilling slot is inert to the decode step: its device page row
+      stays −1 (appends drop), its length is 0 (attention masked), and the
+      ``active`` mask gates its Mamba state rows; its claimed pages land in
+      the device table only on the final chunk.  Attention is bit-identical
+      to monolithic admission (dead-lane contract, DESIGN.md §7); int8
+      caches attend the *dequantized* prefix on chunks after the first, so
+      multi-chunk quantized prompts are approximate (stored codes still
+      match exactly).
+    - ``"monolithic"`` — the original path: one eager whole-prompt prefill
+      scattered into the claimed slabs at admission (compiles per prompt
+      length, decode stalls for the whole prompt).
 
     Scheduling is **host-sync-free** by default: completion is budget
     arithmetic on host length mirrors, and every sampled token stays on
@@ -283,18 +327,26 @@ class BatchEngine:
         grow_chunk: int | str = 1,
         quota_slabs: int | None = None,
         stop_token: int | None = None,
+        admission: str = "chunked",
+        prefill_chunk: int | None = None,
+        max_chunks_per_step: int | None = None,
+        initial_slabs: int = 0,
+        max_pages_hint: int = 0,
         seed: int = 0,
     ):
         from repro.pool import PageBook
 
         if cfg.n_enc_layers or cfg.n_prefix_embeds:
             raise NotImplementedError("BatchEngine serves decoder-only stacks")
+        if admission not in ("chunked", "monolithic"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.params = params
         self.cfg = cfg
         self.T = cfg.slab_tokens
         self.B = max_batch
         self.grow_chunk = grow_chunk
         self.stop_token = stop_token
+        self.admission = admission
         self.key = jax.random.PRNGKey(seed)
         self.stats = BatchStats()
         # shared host bookkeeping (same object the arena uses): allocator +
@@ -311,10 +363,37 @@ class BatchEngine:
         self._requests: dict[int, Request] = {}
         self._stream: list[jax.Array] = []  # sampled (B,) per decode step
         self._next_rid = 0
-        cfg_ = cfg
-        self._decode = jax.jit(
-            functools.partial(steps.decode_step, cfg=cfg_), donate_argnums=(2,)
-        )
+        self._decode = _decode_step_fn(cfg)
+        self.sched: sched_mod.Scheduler | None = None
+        self._trace_keys: set = set()
+        if admission == "chunked":
+            C = cfg.attention_chunk if prefill_chunk is None else prefill_chunk
+            hybrid = "mamba" in cfg.layout
+            # Bit-exactness alignment (DESIGN.md §7): chunk boundaries must
+            # land on the monolithic attention grid, and on the SSD chunk
+            # grid for hybrid layouts.
+            if "attn" in cfg.layout and C % cfg.attention_chunk:
+                raise ValueError(
+                    f"prefill_chunk={C} must be a multiple of "
+                    f"attention_chunk={cfg.attention_chunk}"
+                )
+            if hybrid and C % cfg.ssm.chunk_size:
+                raise ValueError(
+                    f"prefill_chunk={C} must be a multiple of "
+                    f"ssm.chunk_size={cfg.ssm.chunk_size}"
+                )
+            self.sched = sched_mod.Scheduler(
+                self.book, slab_tokens=self.T, chunk=C,
+                exact_tail=hybrid, max_chunks_per_step=max_chunks_per_step,
+            )
+        # pre-carve: pool capacity / table width paid at init (not counted as
+        # growth events — growth stats measure *demand*-driven reallocs)
+        if max_pages_hint:
+            self._ensure_table_width(max_pages_hint)
+        if initial_slabs:
+            self._grow_pool(initial_slabs)
+            self.stats.pool_grow_events = 0
+            self.stats.grown_slabs = 0
 
     @property
     def alloc(self):
@@ -432,9 +511,15 @@ class BatchEngine:
     def submit(self, prompt: list[int], max_new_tokens: int) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid=rid, prompt=list(prompt), max_new_tokens=max_new_tokens)
+        req = Request(
+            rid=rid, prompt=list(prompt), max_new_tokens=max_new_tokens,
+            submit_t=time.time(),
+        )
         self._requests[rid] = req
-        self._pending.append(req)
+        if self.sched is not None:
+            self.sched.submit(rid, len(req.prompt))
+        else:
+            self._pending.append(req)
         return rid
 
     def _admit(self, req: Request, slot: int) -> None:
@@ -470,6 +555,7 @@ class BatchEngine:
         self.key, k = jax.random.split(self.key)
         first = sample(k, logits, 0.0)[0]
         req.first_tok = first
+        req.ttft = time.time() - req.submit_t
         self.cur_tok = self.cur_tok.at[slot].set(first)
         req.slot = slot
         req.admit_step = len(self._stream)
@@ -501,11 +587,83 @@ class BatchEngine:
     def _complete(self, req: Request) -> None:
         req.done = True
         self._release(req.slot)
+        if self.sched is not None:
+            self.sched.complete(req.slot)
         self._slots[req.slot] = None
         self.stats.completed += 1
 
+    # ---- chunked admission ----------------------------------------------
+    def _ensure_free_slabs(self, short: int) -> bool:
+        """Scheduler grow hook: the engine always covers a reservation."""
+        from repro.pool import growth_amount
+
+        self._grow_pool(growth_amount(self.alloc.n_slabs, short, self.grow_chunk))
+        return True
+
+    def _run_chunk(self, task) -> None:
+        """Execute one scheduler ChunkTask: claim → prefill_chunk → advance."""
+        req = self._requests[task.rid]
+        slot = task.slot
+        if task.new_slabs:
+            before = self.alloc.reuse_claims
+            ids, _ = self.book.claim(slot, task.new_slabs, from_reservation=True)
+            self.stats.reused_slabs += self.alloc.reuse_claims - before
+            self.free_dev = self.free_dev.at[jnp.asarray(ids)].set(False)
+        row = np.full((self.book.max_pages,), -1, np.int32)
+        order = self.book.pages_in_order(slot)
+        row[: len(order)] = order
+        toks = np.zeros((1, task.width), np.int32)
+        toks[0, : task.live] = req.prompt[task.t0 : task.t0 + task.live]
+        first = task.t0 == 0
+        key = (task.width, first, self.alloc.n_slabs, self.book.max_pages)
+        if key not in self._trace_keys:
+            self._trace_keys.add(key)
+            self.stats.prefill_traces = len(self._trace_keys)
+        logits, self.caches = _prefill_chunk_fn(self.cfg)(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(slot, jnp.int32), jnp.asarray(task.t0, jnp.int32),
+            jnp.asarray(task.live, jnp.int32), jnp.asarray(row), first=first,
+        )
+        self.stats.prefill_chunks += 1
+        self.sched.chunk_done(task)
+        if task.final:
+            self._finish_prefill(req, slot, logits)
+
+    def _finish_prefill(self, req: Request, slot: int, logits) -> None:
+        """Final chunk done: publish pages to the device table, arm decode."""
+        npages = int(self.book.npages[slot])
+        ids = jnp.asarray(self.book.pages_in_order(slot), jnp.int32)
+        cols = jnp.arange(npages)
+        for i in self._attn_slots():
+            c = self.caches[i]
+            c["pages"] = c["pages"].at[:, slot, cols].set(ids)
+        Lp = len(req.prompt)
+        self.lengths = self.lengths.at[slot].set(Lp)
+        self._len_host[slot] = Lp
+        self.stats.prefills += 1
+        self.stats.peak_live_tokens = max(
+            self.stats.peak_live_tokens, self.live_tokens
+        )
+        self.key, k = jax.random.split(self.key)
+        first = sample(k, logits, 0.0)[0]
+        req.first_tok = first
+        req.ttft = time.time() - req.submit_t
+        self.cur_tok = self.cur_tok.at[slot].set(first)
+        req.admit_step = len(self._stream)
+        req.generated = 1
+        if req.generated >= req.max_new_tokens:
+            self._complete(req)
+
     # ---- the decode loop -------------------------------------------------
     def _admit_pending(self) -> None:
+        if self.sched is not None:
+            for rid, slot, need in self.sched.admit(self._ensure_free_slabs):
+                req = self._requests[rid]
+                req.slot = slot
+                self._slots[slot] = req
+                self._ensure_table_width(need)
+                self.stats.admitted += 1
+            return
         for slot in range(self.B):
             if not self._pending:
                 return
@@ -513,16 +671,38 @@ class BatchEngine:
                 self._admit(self._pending.popleft(), slot)
 
     def step(self) -> bool:
-        """Admit + one batched decode step. → False when nothing is active."""
+        """Admit, run prefill chunks, one batched decode step (interleaved).
+
+        → False when nothing is active.  Chunked admission runs up to
+        ``max_chunks_per_step`` prefill chunks *and then* decodes the slots
+        already in the decode phase — admitted sequences keep generating
+        while new prompts stream in.
+        """
         self._admit_pending()
-        active = [r for r in self._slots if r is not None]
+        tasks = self.sched.next_chunks() if self.sched is not None else []
+        for task in tasks:
+            self._run_chunk(task)
+        if self.sched is not None:
+            active = [
+                r for r in self._slots
+                if r is not None and self.sched.phase[r.slot] == "decode"
+            ]
+        else:
+            active = [r for r in self._slots if r is not None]
         if not active:
-            return False
+            return bool(tasks)
         for req in active:  # capacity: claim the next slab before overflow
             if self._len_host[req.slot] + 1 > self.book.npages[req.slot] * self.T:
                 self._claim(req.slot, 1)
+        if self.sched is not None and self.sched.prefilling:
+            act = np.zeros((self.B,), bool)
+            act[[r.slot for r in active]] = True
+            active_mask = jnp.asarray(act)
+        else:
+            active_mask = None
         logits, self.caches = self._decode(
-            self.params, self.cur_tok, self.caches, self.lengths
+            self.params, self.cur_tok, self.caches, self.lengths,
+            active=active_mask,
         )
         self.key, k = jax.random.split(self.key)
         sampled = sample(k, logits, 0.0)
@@ -548,13 +728,20 @@ class BatchEngine:
                 self._complete(req)
         return True
 
+    def _has_work(self) -> bool:
+        if any(r is not None for r in self._slots):
+            return True
+        if self.sched is not None:
+            return self.sched.busy
+        return bool(self._pending)
+
     def run(self) -> dict[int, list[int]]:
         """Drain every submitted request → {rid: prompt + generated tokens}.
 
         One device→host transfer materializes the whole token stream after
         the loop (plus one for the per-request prefill samples).
         """
-        while self._pending or any(r is not None for r in self._slots):
+        while self._has_work():
             self.step()
         rids = sorted(self._requests)
         firsts = {}
@@ -590,9 +777,16 @@ class BatchEngine:
         free = np.asarray(jax.device_get(self.free_dev))
         assert (free == self.alloc.free).all(), "device free bitmap drifted"
         self.alloc.check()
+        # chunked prefills hold claimed slabs the device table doesn't list
+        # yet (rows stay −1 until the final chunk publishes them)
+        hidden = (
+            sum(int(self.book.npages[s]) for s in self.sched.prefilling)
+            if self.sched is not None
+            else 0
+        )
         for i in self._attn_slots():
             pages = np.asarray(jax.device_get(self.caches[i]["pages"]))[0]
             claimed = pages[pages >= 0]
             assert len(claimed) == len(set(claimed.tolist())), "double assign"
             assert not free[claimed].any() if len(claimed) else True
-            assert len(claimed) == self.alloc.live_count
+            assert len(claimed) + hidden == self.alloc.live_count

@@ -50,6 +50,8 @@ __all__ = [
     "capacity_of",
     "append",
     "attend",
+    "chunk_attend",
+    "scatter_chunk",
     "grow_ggarray",
     "freeze_cache",
     "thaw_cache",
@@ -342,12 +344,16 @@ def append(
             out["ks"] = cache["ks"].at[rows, tgt].set(k_s[:, 0], mode="drop")
             out["vs"] = cache["vs"].at[rows, tgt].set(v_s[:, 0], mode="drop")
         return out
-    # ggarray: the decode hot path routes through the fused push-back kernel
-    # (offset + every-level scatter in one aliased pass, kernels/push_back) —
-    # one sequence per kernel row, the write position arriving as `sizes`.
-    # All payloads (k/v + quant scales) share the mask/permutation in ONE
-    # launch via the multi-group variant.
+    # ggarray: the decode hot path is a one-lane-per-sequence wave (m=1),
+    # which sits far below the measured fused-kernel crossover
+    # (kernels/tuning.FUSED_PUSH_BACK_MIN_WAVE) — the empirical "auto"
+    # resolution pins it to the jnp scan+scatter path (``use_ref``), which is
+    # bit-identical and ~7× faster at this wave width.  Wider waves (batched
+    # cache refill) go through the fused Pallas kernel: offsets + every-level
+    # scatter in one aliased pass, all payloads (k/v + quant scales) sharing
+    # one mask/permutation via the multi-group variant.
     from repro.kernels.push_back import ops as push_back_ops
+    from repro.kernels.tuning import resolve_push_back_method
 
     n = _levels(cache)
     b0 = cache["k0"].shape[-3]
@@ -359,6 +365,7 @@ def append(
     )
     groups, _, _ = push_back_ops.push_back_fused_multi(
         bucket_groups, pos, b0, tuple(payloads), lane,
+        use_ref=resolve_push_back_method("auto", k.shape[1]) != "fused",
         memory_space=cfg.kernel_memory_space if cfg is not None else None,
     )
     out = dict(cache)
@@ -483,6 +490,162 @@ def _attend_paged(cache, qf, length, cfg, state, _kv):
         state = _partial_scores(qf, kk, vv, kpos, length, state)
     m, l, acc = state
     return acc / jnp.maximum(l[..., None], 1e-30)
+
+
+# --------------------------------------------------------------------------
+# chunked prefill over a paged slot — prefix walk + in-chunk causal pass.
+#
+# Bit-exactness contract (DESIGN.md §7): with ``attention_chunk`` c in the
+# cache's geometric chain and the prefill chunk size a multiple of c, the
+# chunk/monolithic partitions put the same *live* score lanes into the same
+# online-softmax updates, and dead lanes (pad tokens, unwritten slab slots,
+# whole future chunks) contribute exactly 0.0 — ``exp(MASK_VALUE − m)``
+# underflows to 0.0 and ``x + 0.0 == x`` — so chunked prefill reproduces the
+# monolithic blockwise attention bit for bit.  The update body below is a
+# verbatim transcription of ``attention._blockwise_attention``'s scan body
+# for that reason: same einsums, same mask/max/exp/accumulate order.
+# --------------------------------------------------------------------------
+
+
+def _chunk_state_update(state, qr, kk, vv, live):
+    """One online-softmax update — attention._blockwise_attention's body."""
+    from repro.models.attention import SoftmaxState
+
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qr, kk.astype(jnp.float32))
+    s = jnp.where(live, s, MASK_VALUE)
+    m_new = jnp.maximum(state.m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(state.m - m_new)
+    l = state.l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bqkgc,bckd->bqkgd", p, vv.astype(jnp.float32))
+    acc = state.acc * alpha[..., None] + pv
+    return SoftmaxState(m_new, l, acc)
+
+
+def chunk_attend(
+    cache: Cache,
+    pages_row: jax.Array,  # (maxp,) claimed slab ids for this slot (−1 pad)
+    q: jax.Array,  # (1, Cb, H, Dh) chunk queries
+    k_chunk: jax.Array,  # (1, Cb, KH, Dh) chunk keys (pre-scatter)
+    v_chunk: jax.Array,
+    t0: jax.Array,  # () tokens already prefilled (chunk's global offset)
+    live: jax.Array,  # () live tokens in this chunk (≤ Cb; rest is padding)
+    cfg: ModelConfig,
+    first: bool = False,  # STATIC t0 == 0: skip the (all-dead) prefix walk
+) -> jax.Array:
+    """Chunk-of-prefill attention for one paged slot → (1, Cb, H, Dh).
+
+    The prefix ([0, t0), gathered through ``pages_row``) is walked in
+    ``attention_chunk`` steps carrying the online-softmax state, then the
+    chunk attends itself causally — one linear pass, exactly the monolithic
+    chunk sequence restricted to this chunk's queries.  ``first=True`` skips
+    the prefix walk: at t0 = 0 every prefix lane is dead, and dead-lane
+    updates are exact no-ops (the §7 contract), so dropping them is
+    bit-identical and saves the gather.
+    """
+    from repro.models.attention import SoftmaxState
+
+    B, Sq, H, Dh = q.shape
+    kh = cfg.n_kv_heads
+    g = H // kh
+    c = cfg.attention_chunk
+    qr = q.reshape(B, Sq, kh, g, Dh).astype(jnp.float32) * (Dh ** -0.5)
+    state = SoftmaxState(
+        m=jnp.full((B, Sq, kh, g), MASK_VALUE, jnp.float32),
+        l=jnp.zeros((B, Sq, kh, g), jnp.float32),
+        acc=jnp.zeros((B, Sq, kh, g, Dh), jnp.float32),
+    )
+    quant = _is_quant(cache)
+
+    def _kv(ck, cv, sk, sv):
+        if not quant:
+            return ck, cv
+        return _dequant(ck, sk), _dequant(cv, sv)
+
+    # ---- prefix: pool gather, fixed maxp·T width (one trace ∀ t0 > 0) ----
+    T = cache["k_pool"].shape[-3]
+    Skv = pages_row.shape[0] * T
+    if Skv and not first:
+        grp = pages_row[None]  # (1, maxp)
+        pk, pv_ = _kv(
+            _gather_pool(cache["k_pool"], grp),
+            _gather_pool(cache["v_pool"], grp),
+            _gather_pool(cache["ks_pool"], grp) if quant else None,
+            _gather_pool(cache["vs_pool"], grp) if quant else None,
+        )
+        cc = min(c, Skv)
+        pad = (-Skv) % cc
+        if pad:
+            pk = jnp.pad(pk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            pv_ = jnp.pad(pv_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        nch = pk.shape[1] // cc
+        kc = jnp.moveaxis(pk.reshape(B, nch, cc, kh, Dh), 1, 0)
+        vc = jnp.moveaxis(pv_.reshape(B, nch, cc, kh, Dh), 1, 0)
+
+        def body(st, xs):
+            ci, kk, vv = xs
+            kpos = ci * cc + jnp.arange(cc)
+            live_m = (kpos < t0)[None, None, None, None, :]
+            return _chunk_state_update(st, qr, kk, vv, live_m), None
+
+        state, _ = jax.lax.scan(body, state, (jnp.arange(nch), kc, vc))
+
+    # ---- the chunk itself: causal, pad lanes (≥ live) dead ---------------
+    co = min(c, Sq)
+    pad = (-Sq) % co
+    kc_own = jnp.pad(k_chunk, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k_chunk
+    vc_own = jnp.pad(v_chunk, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v_chunk
+    qpos = jnp.arange(Sq)
+    for ci in range(kc_own.shape[1] // co):
+        j = ci * co + jnp.arange(co)
+        live_m = (j[None, :] < live) & (qpos[:, None] >= j[None, :])
+        state = _chunk_state_update(
+            state,
+            qr,
+            kc_own[:, ci * co : (ci + 1) * co],
+            vc_own[:, ci * co : (ci + 1) * co],
+            live_m[None, :, None, None, :],
+        )
+    out = state.acc / jnp.maximum(state.l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def scatter_chunk(
+    cache: Cache,
+    pages_row: jax.Array,  # (maxp,) claimed slab ids (−1 pad)
+    k_chunk: jax.Array,  # (1, Cb, KH, Dh)
+    v_chunk: jax.Array,
+    t0: jax.Array,
+    live: jax.Array,
+    cfg: ModelConfig,
+) -> Cache:
+    """Write a chunk's live K/V into the slot's claimed slabs → new pools.
+
+    Per-token int8 quantization is chunk-invariant, so the stored codes are
+    identical to a monolithic fill.  Dead lanes (pad, unclaimed page) route
+    to the out-of-bounds slab and drop.
+    """
+    n_slabs, T = cache["k_pool"].shape[-4:-2]
+    maxp = pages_row.shape[0]
+    Cb = k_chunk.shape[1]
+    quant = _is_quant(cache)
+    k, v = k_chunk[0], v_chunk[0]  # (Cb, KH, Dh)
+    if quant:
+        k, k_s = _quantize_kv(k)
+        v, v_s = _quantize_kv(v)
+    pos = t0 + jnp.arange(Cb)
+    pidx = jnp.clip(pos // T, 0, maxp - 1)
+    slab = pages_row[pidx]
+    ok = (jnp.arange(Cb) < live) & (slab >= 0) & (pos < maxp * T)
+    slab = jnp.where(ok, slab, n_slabs)  # OOB ⇒ mode="drop"
+    slot = pos % T
+    out = dict(cache)
+    out["k_pool"] = cache["k_pool"].at[slab, slot].set(k, mode="drop")
+    out["v_pool"] = cache["v_pool"].at[slab, slot].set(v, mode="drop")
+    if quant:
+        out["ks_pool"] = cache["ks_pool"].at[slab, slot].set(k_s, mode="drop")
+        out["vs_pool"] = cache["vs_pool"].at[slab, slot].set(v_s, mode="drop")
+    return out
 
 
 # --------------------------------------------------------------------------

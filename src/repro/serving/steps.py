@@ -23,7 +23,13 @@ from repro.models.modules import embed, rms_norm, unembed
 
 from repro.serving import kvcache
 
-__all__ = ["prefill", "decode_step", "init_decode_caches", "logits_from_hidden"]
+__all__ = [
+    "prefill",
+    "prefill_chunk",
+    "decode_step",
+    "init_decode_caches",
+    "logits_from_hidden",
+]
 
 
 def logits_from_hidden(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
@@ -108,6 +114,106 @@ def prefill(
 
 
 # --------------------------------------------------------------------------
+# Chunked prefill: one chunk of one slot's prompt into the shared paged
+# caches (BatchEngine admission, DESIGN.md §7).  Compiles per chunk *bucket*
+# width, never per prompt length — the O(log C) trace bound.
+# --------------------------------------------------------------------------
+
+def prefill_chunk(
+    params: dict,
+    tokens: jax.Array,  # (1, Cb) bucket-padded chunk of one prompt
+    caches: list,  # the BatchEngine's shared (donated) caches
+    slot: jax.Array,  # () decode-slot index owning this prompt
+    t0: jax.Array,  # () tokens of this prompt already prefilled
+    live: jax.Array,  # () live tokens in this chunk (Cb − live are padding)
+    pages_row: jax.Array,  # (maxp,) the slot's claimed slab ids, −1-padded
+    cfg: ModelConfig,
+    first: bool = True,  # STATIC: t0 == 0 (fresh state, no prefix to attend)
+) -> tuple[jax.Array, list]:
+    """→ (last-live-position logits (1, V), updated caches).
+
+    The engine's device page table stays −1 for the slot until the final
+    chunk (prefilling slots are inert under concurrent decode steps), so the
+    claimed pages arrive as the separate ``pages_row`` operand.  K/V scatter
+    targets the claimed slabs; Mamba layers run the resumable SSD block
+    against the slot's state row.  Logits only matter on the final chunk.
+
+    ``first`` must be static (it is known at chunk-planning time): the first
+    chunk runs from a ZERO recurrence — a reused slot's state rows still
+    hold the previous occupant's final state — on the monolithic SSD chunk
+    grid (``state=None`` → ``Q = min(chunk_size, L)``), and skips the prefix
+    walk outright (every prefix lane is dead at t0 = 0).
+    """
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    Cb = tokens.shape[1]
+    positions = (t0 + jnp.arange(Cb))[None, :]  # (1, Cb) global positions
+
+    def _get(full: dict, i):
+        return {
+            k: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+            for k, a in full.items()
+        }
+
+    def _put(full: dict, part: dict, i):
+        out = dict(full)
+        for k, p in part.items():
+            out[k] = jax.lax.dynamic_update_index_in_dim(
+                full[k], p.astype(full[k].dtype), i, 0
+            )
+        return out
+
+    def period_body(carry, xs):
+        x, caches = carry
+        x = constrain(x, ("batch", None, None))
+        period_params, idx = xs
+        for lslot, kind in enumerate(cfg.layout):
+            sp = period_params[lslot]
+            c = _get(caches[lslot], idx)
+            h = rms_norm(x, sp["norm1"], cfg.norm_eps)
+            if kind == "mamba":
+                st = (
+                    None
+                    if first
+                    else ssm_mod.MambaState(
+                        conv=c["conv"][slot][None], ssd=c["ssd"][slot][None]
+                    )
+                )
+                y, st = ssm_mod.mamba_block(
+                    sp["mamba"], h, cfg, state=st, return_state=True
+                )
+                x = x + y
+                caches[lslot] = _put(
+                    caches[lslot],
+                    {
+                        "conv": c["conv"].at[slot].set(
+                            st.conv[0].astype(c["conv"].dtype)
+                        ),
+                        "ssd": c["ssd"].at[slot].set(st.ssd[0]),
+                    },
+                    idx,
+                )
+                continue
+            q, k, v = project_qkv(sp["attn"], h, cfg, positions)
+            att = kvcache.chunk_attend(
+                c, pages_row, q, k, v, t0, live, cfg, first=first
+            )
+            x = x + project_out(sp["attn"], att)
+            c2 = kvcache.scatter_chunk(c, pages_row, k, v, t0, live, cfg)
+            x = _mlp_or_moe(sp, x, lslot, cfg)
+            caches[lslot] = _put(caches[lslot], c2, idx)
+        return (x, caches), None
+
+    (x, new_caches), _ = jax.lax.scan(
+        period_body,
+        (x, list(caches)),
+        (params["layers"], jnp.arange(cfg.n_periods)),
+    )
+    last = jax.lax.dynamic_index_in_dim(x[0], live - 1, 0, keepdims=False)
+    logits = logits_from_hidden(params, last[None], cfg)
+    return logits, new_caches
+
+
+# --------------------------------------------------------------------------
 # Decode: one token, cache push_back + bucket-walk attention.
 # --------------------------------------------------------------------------
 
@@ -151,8 +257,14 @@ def decode_step(
     caches: list,
     length: jax.Array,  # () or (B,) live context length
     cfg: ModelConfig,
+    active: jax.Array | None = None,  # (B,) bool — rows whose state may move
 ) -> tuple[jax.Array, list]:
-    """One serve step → (logits (B, V), updated caches)."""
+    """One serve step → (logits (B, V), updated caches).
+
+    ``active`` masks *state writes* for rows mid-chunked-prefill: their KV
+    appends already drop (page table −1) but Mamba conv/SSD rows would be
+    clobbered by the batch-wide recurrence without the gate.
+    """
     token = token.reshape(token.shape[0], 1)
     x = embed(params["embed"], token).astype(jnp.dtype(cfg.dtype))
     B = x.shape[0]
@@ -189,7 +301,14 @@ def decode_step(
                     sp["mamba"], h, ssm_mod.MambaState(c["conv"], c["ssd"]), cfg
                 )
                 x = x + y
-                caches[slot] = _put(caches[slot], {"conv": st.conv, "ssd": st.ssd}, idx)
+                new_conv, new_ssd = st.conv, st.ssd
+                if active is not None:
+                    keep = active[:, None, None]
+                    new_conv = jnp.where(keep, new_conv, c["conv"])
+                    new_ssd = jnp.where(keep[..., None], new_ssd, c["ssd"])
+                caches[slot] = _put(
+                    caches[slot], {"conv": new_conv, "ssd": new_ssd}, idx
+                )
                 continue
             q, k, v = project_qkv(sp["attn"], h, cfg, positions)
             kv_only = {key: val for key, val in c.items() if not key.startswith("cross")}

@@ -1,0 +1,91 @@
+"""Crossover regression: every "auto" resolver pins to kernels/tuning.py.
+
+The measured thresholds live in ONE module (``repro.kernels.tuning``); the
+kernels' ``"auto"`` resolvers and the benchmark sweeps both import from it.
+These tests pin (a) the committed values — so a re-tune is a deliberate,
+reviewed edit here and there together, never a silent drift — (b) the
+resolver routing on both sides of each crossover, and (c) that the
+``"auto"`` route is numerically identical to the path it resolves to (the
+whole point of a *resolver*: auto changes speed, never values).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ggarray as gg
+from repro.kernels import common, tuning
+
+
+def test_committed_thresholds():
+    # Re-measured for this revision (interpret mode; see tuning.py docstring
+    # for the sweep numbers).  Edit tuning.py AND this pin together.
+    assert tuning.FUSED_PUSH_BACK_MIN_WAVE == 32
+    assert tuning.MXU_DISPATCH_WAVE == 256
+    # common.py re-exports the tuning value — one source of truth
+    assert common.MXU_DISPATCH_WAVE == tuning.MXU_DISPATCH_WAVE
+
+
+@pytest.mark.parametrize(
+    "m,want",
+    [
+        (1, "scan"),  # the serving decode append — one lane per sequence
+        (31, "scan"),
+        (32, "fused"),
+        (512, "fused"),
+    ],
+)
+def test_push_back_auto_routes_on_wave_width(m, want):
+    assert tuning.resolve_push_back_method("auto", m) == want
+
+
+def test_push_back_explicit_methods_pass_through():
+    assert tuning.resolve_push_back_method("scan", 10**9) == "scan"
+    assert tuning.resolve_push_back_method("fused", 1) == "fused"
+
+
+@pytest.mark.parametrize(
+    "m,dtype,want",
+    [
+        (255, jnp.float32, "onehot"),  # below the crossover
+        (256, jnp.float32, "mxu"),
+        (256, jnp.bfloat16, "mxu"),
+        (256, jnp.int8, "mxu"),
+        (256, jnp.int32, "onehot"),  # wide ints exceed the f32 mantissa
+        (4096, jnp.int32, "onehot"),
+    ],
+)
+def test_dispatch_auto_routes_on_wave_and_dtype(m, dtype, want):
+    assert common.resolve_dispatch("auto", m, dtype) == want
+
+
+def test_dispatch_explicit_methods_pass_through():
+    assert common.resolve_dispatch("onehot", 10**9, jnp.float32) == "onehot"
+    assert common.resolve_dispatch("mxu", 1, jnp.float64) == "mxu"
+
+
+def _wave(rng, nblocks, m):
+    elems = jnp.asarray(rng.standard_normal((nblocks, m)), jnp.float32)
+    mask = jnp.asarray(rng.random((nblocks, m)) < 0.6)
+    return elems, mask
+
+
+@pytest.mark.parametrize("m", [1, 31, 32, 40])
+def test_auto_push_back_bit_exact_across_the_crossover(m):
+    """auto == scan == fused values on waves straddling the threshold —
+    m=1 is the decode append that the re-tune moved back to scan."""
+    rng = np.random.default_rng(m)
+    arrs = {meth: gg.init(4, 4, dtype=jnp.float32, nbuckets=1) for meth in
+            ("auto", "scan", "fused")}
+    pos = {}
+    for meth in arrs:
+        arr = gg.ensure_capacity(arrs[meth], m)
+        rng2 = np.random.default_rng(m)  # same wave for every method
+        elems, mask = _wave(rng2, 4, m)
+        arrs[meth], pos[meth] = gg.push_back(arr, elems, mask, method=meth)
+    for meth in ("scan", "fused"):
+        np.testing.assert_array_equal(np.asarray(pos["auto"]), np.asarray(pos[meth]))
+        for a, b in zip(arrs["auto"].buckets, arrs[meth].buckets):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(
+            np.asarray(arrs["auto"].sizes), np.asarray(arrs[meth].sizes)
+        )
