@@ -119,9 +119,42 @@ def bench_insert_method() -> None:
         )
 
 
+def bench_arena_growth() -> None:
+    """Slab-arena append waves under each pool growth schedule.
+
+    The flat schedules realloc+memcpy the whole pool on growth; the extent
+    schedules (``"doubling"``/``"tz"``, DESIGN.md §8) append fresh extents
+    and copy nothing — ``derived`` records grow events, bytes memcpy'd, and
+    the final extent count so the tradeoff shows up in the bench history.
+    """
+    from repro.pool import SlabArena
+
+    labels = {1: "flat", "geometric": "geometric", "doubling": "doubling", "tz": "tz"}
+    for n in _sizes():
+        m = max(n // WAVES // NBLOCKS, 1)
+        wave = jnp.ones((NBLOCKS, m), jnp.float32)
+
+        def run(sched):
+            arena = SlabArena(NBLOCKS, m, dtype=jnp.float32, grow_chunk=sched)
+            for _ in range(WAVES):
+                arena.append(wave)
+            return arena
+
+        for sched, label in labels.items():
+            t = timeit(lambda: run(sched).pool.extents[-1], repeats=3, warmup=1)
+            a = run(sched)
+            emit(
+                f"append.arena.{label}.n{n}",
+                t,
+                f"grow_events={a.pool_grow_events} "
+                f"copied={a.pool_copied_bytes}B extents={a.pool.n_extents}",
+            )
+
+
 def main() -> None:
     bench_protocol()
     bench_insert_method()
+    bench_arena_growth()
 
 
 if __name__ == "__main__":

@@ -30,15 +30,18 @@ from __future__ import annotations
 
 import contextlib
 import os
+import shutil
 import sys
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, emit, smoke_mode, write_json
 from repro.configs import reduced
 from repro.models import transformer
+from repro.pool.extents import grow_extents, grow_flat, init_extent_pool, plan_extents
 from repro.serving import kvcache
 from repro.serving.engine import BatchEngine, Engine
 
@@ -50,15 +53,41 @@ def _fleet(rng, nseqs, max_prompt):
     ]
 
 
-def _serve(params, cfg, prompts, new_tokens, max_batch, admission):
+def _serve(params, cfg, prompts, new_tokens, max_batch, admission, grow_chunk=1):
     """One fresh engine over the fleet → (engine, wall seconds, ttfts)."""
-    be = BatchEngine(params, cfg, max_batch=max_batch, admission=admission)
+    be = BatchEngine(
+        params, cfg, max_batch=max_batch, admission=admission, grow_chunk=grow_chunk
+    )
     rids = [be.submit(p, new_tokens) for p in prompts]
     t0 = time.perf_counter()
     be.run()
     dt = time.perf_counter() - t0
     ttfts = [be._requests[r].ttft for r in rids]
     return be, dt, ttfts
+
+
+def _grow_sweep(schedule: str, waves: int, slab_size: int):
+    """Per-grow latency of doubling demand ``waves`` times from one slab.
+
+    ``"flat"`` is the realloc pool (alloc + memcpy of the live prefix);
+    the extent schedules allocate one fresh extent and copy nothing.
+    Returns (p95 µs per grow step, total live bytes memcpy'd).
+    """
+    pool = init_extent_pool(1, slab_size, (), jnp.float32)
+    times, copied = [], 0
+    for _ in range(waves):
+        short = pool.n_slabs  # double the fleet's demand each wave
+        t0 = time.perf_counter()
+        if schedule == "flat":
+            copied += pool.extents[0].size * pool.dtype.itemsize
+            pool = grow_flat(pool, short)
+        else:
+            pool = grow_extents(
+                pool, plan_extents(pool.extent_sizes, short, schedule)
+            )
+        jax.block_until_ready(pool.extents[-1])
+        times.append(time.perf_counter() - t0)
+    return float(np.quantile(times, 0.95)) * 1e6, copied
 
 
 def main() -> None:
@@ -80,17 +109,19 @@ def main() -> None:
     # the decode trace into the shared per-config jit cache; the timed
     # engine reuses them all (tests/serving/test_trace_count.py pins this).
     _serve(params, cfg, prompts, new_tokens, max_batch, "chunked")
-    prof = (
-        jax.profiler.trace(
-            os.path.join(os.environ.get("REPRO_BENCH_DIR", "."), "profile_pool")
-        )
-        if profile
-        else contextlib.nullcontext()
-    )
-    with prof:
-        be, dt_paged, ttfts = _serve(
-            params, cfg, prompts, new_tokens, max_batch, "chunked"
-        )
+    prof_dir = os.path.join(os.environ.get("REPRO_BENCH_DIR", "."), "profile_pool")
+    prof = jax.profiler.trace(prof_dir) if profile else contextlib.nullcontext()
+    try:
+        with prof:
+            be, dt_paged, ttfts = _serve(
+                params, cfg, prompts, new_tokens, max_batch, "chunked"
+            )
+    except BaseException:
+        # a run that dies mid-trace must not leave a half-written trace dir
+        # behind — CI would upload it as if it were a real profile artifact
+        if profile:
+            shutil.rmtree(prof_dir, ignore_errors=True)
+        raise
     peak_live = be.stats.peak_live_tokens
     util = peak_live / max(be.stats.peak_pool_tokens, 1)
     emit(
@@ -119,6 +150,47 @@ def main() -> None:
         be.stats.peak_pool_tokens / max(peak_live, 1),
         f"bound<2x+slab/seq grow_events={be.stats.pool_grow_events}",
     )
+
+    # --- extent growth schedules: zero-copy pool growth (DESIGN.md §8) ----
+    # Grow-step microbench: p95 latency of one growth under doubling demand,
+    # realloc pool ("flat": alloc + full-pool memcpy) vs extent appends.
+    grow_waves = 8 if smoke else 12
+    grow_slab = 1024 if smoke else 4096
+    grow_p95 = {}
+    for sched in ("flat", "doubling", "tz"):
+        p95_us, copied = _grow_sweep(sched, grow_waves, grow_slab)
+        grow_p95[sched] = p95_us
+        emit(
+            f"pool_grow_p95_us_{sched}",
+            p95_us,
+            f"{grow_waves} doublings slab={grow_slab}f32 copied={copied}B",
+        )
+        emit(
+            f"pool_grow_copied_bytes_{sched}",
+            float(copied),
+            "live bytes memcpy'd by growth (extent schedules must be 0)",
+        )
+    # Steady-state serving under each extent schedule: same fleet, growth
+    # retraces bounded by the extent count instead of realloc copies.
+    for sched in ("doubling", "tz"):
+        _serve(params, cfg, prompts, new_tokens, max_batch, "chunked", sched)
+        bs, dt_s, _ = _serve(
+            params, cfg, prompts, new_tokens, max_batch, "chunked", sched
+        )
+        nx = sum(1 for s in bs._extent_sizes if s > 0)
+        emit(
+            f"pool_paged_seqs_per_s_{sched}",
+            dt_s / nseqs * 1e6,
+            f"{nseqs / dt_s:.2f}/s vs_flat={dt_paged / dt_s:.2f} extents={nx} "
+            f"grow_events={bs.stats.pool_grow_events} "
+            f"copied={bs.stats.pool_copied_bytes}B",
+        )
+        emit(
+            f"pool_serve_copied_bytes_{sched}",
+            float(bs.stats.pool_copied_bytes),
+            f"engine pool bytes memcpy'd end-to-end (flat engine: "
+            f"{be.stats.pool_copied_bytes}B)",
+        )
 
     # --- paged, monolithic admission: the pre-chunking scheduler ----------
     _serve(params, cfg, prompts, new_tokens, max_batch, "monolithic")

@@ -12,6 +12,17 @@ runner's absolute speed — and fails (exit 1) if it has dropped more than
 * absolute: ``ratio ≥ 0.8`` — the ISSUE 6 acceptance bound (the paged
   engine must serve at least 0.8× ggarray's seqs/s, up from 0.21×).
 
+The extent pool's zero-copy growth contract (ISSUE 7, DESIGN.md §8) is
+gated too:
+
+* hard: ``pool_grow_copied_bytes_{doubling,tz}`` and
+  ``pool_serve_copied_bytes_{doubling,tz}`` must be **exactly 0** — a
+  reintroduced full-pool copy fails CI deterministically (a missing row
+  fails as well, so the gate cannot be dodged by dropping the bench);
+* relative: the grow-step p95 advantage ``flat / max(extent)`` is a
+  same-process self-normalizing ratio gated against the committed
+  ``grow_step`` baseline with the same ``--tolerance``.
+
 ``--update`` rewrites the baseline from the current artifact (a deliberate,
 reviewed re-tune — commit the diff).
 
@@ -58,6 +69,29 @@ def main(argv: list[str] | None = None) -> int:
     # rows record µs per sequence, so throughput ratio inverts them
     ratio = us_gg / us_paged
 
+    # zero-copy growth contract: every copied-bytes row must exist and be 0
+    copy_rows = [
+        f"pool_{kind}_copied_bytes_{sched}"
+        for kind in ("grow", "serve")
+        for sched in ("doubling", "tz")
+    ]
+    missing = [r for r in copy_rows if r not in rows]
+    if missing:
+        print(
+            f"check_regression: {args.bench} is missing zero-copy gate "
+            f"row(s) {missing}",
+            file=sys.stderr,
+        )
+        return 1
+    grow_ratio = None
+    try:
+        grow_ratio = rows["pool_grow_p95_us_flat"] / max(
+            rows["pool_grow_p95_us_doubling"], rows["pool_grow_p95_us_tz"], 1e-12
+        )
+    except KeyError as e:
+        print(f"check_regression: {args.bench} is missing row {e}", file=sys.stderr)
+        return 1
+
     if args.update:
         os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
         with open(args.baseline, "w") as f:
@@ -65,17 +99,25 @@ def main(argv: list[str] | None = None) -> int:
                 {
                     "metric": "paged_vs_ggarray_seqs_per_s_ratio",
                     "value": round(ratio, 3),
+                    "grow_step": {
+                        "metric": "flat_over_extent_grow_p95_ratio",
+                        "value": round(grow_ratio, 3),
+                    },
                     "source": "benchmarks/bench_pool.py --smoke",
                 },
                 f,
                 indent=2,
             )
             f.write("\n")
-        print(f"check_regression: baseline updated to {ratio:.3f}")
+        print(
+            f"check_regression: baseline updated to {ratio:.3f} "
+            f"(grow-step ratio {grow_ratio:.3f})"
+        )
         return 0
 
     with open(args.baseline) as f:
-        base = json.load(f)["value"]
+        baseline = json.load(f)
+    base = baseline["value"]
     floor = (1.0 - args.tolerance) * base
     verdict = (
         f"paged/ggarray seqs/s ratio {ratio:.3f} "
@@ -88,7 +130,25 @@ def main(argv: list[str] | None = None) -> int:
     if ratio < floor:
         print(f"check_regression: FAIL — >{args.tolerance:.0%} regression: {verdict}")
         return 1
-    print(f"check_regression: OK — {verdict}")
+
+    copied = {r: rows[r] for r in copy_rows if rows[r] != 0.0}
+    if copied:
+        print(
+            "check_regression: FAIL — extent growth copied pool bytes "
+            f"(must be 0): {copied}"
+        )
+        return 1
+    grow_verdict = f"grow-step p95 flat/extent ratio {grow_ratio:.3f}"
+    grow_base = baseline.get("grow_step")
+    if grow_base is not None:
+        grow_floor = (1.0 - args.tolerance) * grow_base["value"]
+        grow_verdict += f" (baseline {grow_base['value']:.3f}, floor {grow_floor:.3f})"
+        if grow_ratio < grow_floor:
+            print(
+                f"check_regression: FAIL — grow-step regression: {grow_verdict}"
+            )
+            return 1
+    print(f"check_regression: OK — {verdict}; {grow_verdict}")
     return 0
 
 

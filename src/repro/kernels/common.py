@@ -57,6 +57,7 @@ __all__ = [
     "DISPATCH_METHODS",
     "MXU_DISPATCH_WAVE",
     "resolve_dispatch",
+    "extent_row",
     "GridPlan",
 ]
 
@@ -121,6 +122,19 @@ def resolve_dispatch(dispatch: str, m: int, dtype: Any) -> str:
         jnp.issubdtype(dt, jnp.integer) and dt.itemsize <= 2
     )
     return "mxu" if m >= MXU_DISPATCH_WAVE and exact else "onehot"
+
+
+def extent_row(ext, off, e: int, size: int):
+    """Two-level page-table resolution for a ``BlockSpec.index_map``.
+
+    ``ext``/``off`` are this step's scalar-prefetched two-level table entries
+    (``pool/extents.resolve_pages``); the index map of extent ``e``'s operand
+    returns ``off`` when the step's slab lives in extent ``e`` and a parked
+    in-bounds row otherwise — every extent DMAs a tile each step, but the
+    body consumes only the one ``ext`` selects, so off-extent tiles are
+    provably inert (the multi-extent analog of the page −1 clip).
+    """
+    return jnp.where(ext == e, jnp.clip(off, 0, size - 1), 0)
 
 
 def pad_to(x: jax.Array, multiple: int, axis: int, value=0) -> jax.Array:

@@ -49,7 +49,9 @@ from repro.kernels.push_back.kernel import apply_insert_permutation
 
 __all__ = [
     "paged_gather_pallas",
+    "paged_gather_pallas_extents",
     "paged_attend_pallas",
+    "paged_attend_pallas_extents",
     "slab_append_pallas",
     "DEFAULT_ROW_TILE",
 ]
@@ -128,6 +130,105 @@ def paged_gather_pallas(
         jax.ShapeDtypeStruct((Np, P * T, D), pool.dtype),
         interpret=interpret,
     )(pages_p, pool)
+    return out[:N]
+
+
+# --------------------------------------------------------------------------
+# gather, segmented pool — the same walk through the two-level table.
+# --------------------------------------------------------------------------
+
+def _gather_vmem_extents(ext_ref, off_ref, *refs):
+    *pools, out_ref = refs
+    ext = ext_ref[...]  # (rows, P) int32 extent ids, −1 unclaimed
+    off = off_ref[...]  # (rows, P) int32 offsets-in-extent
+    rows, P = ext.shape
+    T, D = pools[0].shape[1:]
+    acc = jnp.zeros((rows, P, T, D), out_ref.dtype)
+    for e, pool_ref in enumerate(pools):
+        pool = pool_ref[...]  # (S_e, T, D)
+        idx = jnp.clip(off, 0, pool.shape[0] - 1).reshape(rows * P)
+        g = jnp.take(pool, idx, axis=0).reshape(rows, P, T, D)
+        acc = jnp.where((ext == e)[:, :, None, None], g, acc)
+    out_ref[...] = acc.reshape(rows, P * T, D)
+
+
+def _gather_hbm_extents(ext_ref, off_ref, *refs):
+    *pools, out_ref = refs
+    n, p = pl.program_id(0), pl.program_id(1)
+    e = ext_ref[n, p]  # the body consumes only the tile this id selects
+    out = jnp.zeros(out_ref.shape, out_ref.dtype)
+    for i, pool_ref in enumerate(pools):
+        out = jnp.where(e == i, pool_ref[...], out)
+    out_ref[...] = out
+
+
+def _extent_tile_spec(e: int, size: int, block: tuple[int, ...]):
+    """hbm BlockSpec for extent ``e``: the index_map resolves this grid
+    step's (ext, off) pair via ``common.extent_row`` — one slab tile per
+    extent per step, only the selected one consumed."""
+    return pl.BlockSpec(
+        block,
+        lambda n, p, ext, off: (
+            common.extent_row(ext[n, p], off[n, p], e, size),
+            0,
+            0,
+        ),
+    )
+
+
+def paged_gather_pallas_extents(
+    extents: tuple[jax.Array, ...],  # each (S_e, T, D)
+    ext_tbl: jax.Array,  # (N, P) int32 — extent id per page, −1 unclaimed
+    off_tbl: jax.Array,  # (N, P) int32 — offset-in-extent per page
+    *,
+    row_tile: int = DEFAULT_ROW_TILE,
+    memory_space: str = "vmem",
+    interpret: bool = False,
+) -> jax.Array:
+    """Multi-extent ``paged_gather_pallas``: same contiguous views, with the
+    page table pre-resolved through the two-level (extent, offset) table so
+    growth never had to copy the pool (``pool/extents``)."""
+    N, P = ext_tbl.shape
+    T, D = extents[0].shape[1:]
+    E = len(extents)
+    if memory_space == "hbm":
+        plan = common.GridPlan(
+            memory_space="hbm",
+            grid=(N, P),
+            num_tables=2,
+            table_specs=(),
+            in_specs=[
+                _extent_tile_spec(e, ext.shape[0], (1, T, D))
+                for e, ext in enumerate(extents)
+            ],
+            out_specs=pl.BlockSpec((1, T, D), lambda n, p, ext, off: (n, p, 0)),
+        )
+        return plan.pallas_call(
+            _gather_hbm_extents,
+            jax.ShapeDtypeStruct((N, P * T, D), extents[0].dtype),
+            interpret=interpret,
+        )(ext_tbl, off_tbl, *extents)
+    ext_p = common.pad_to(ext_tbl, row_tile, axis=0, value=-1)
+    off_p = common.pad_to(off_tbl, row_tile, axis=0, value=-1)
+    Np = ext_p.shape[0]
+    plan = common.GridPlan(
+        memory_space="vmem",
+        grid=(Np // row_tile,),
+        num_tables=2,
+        table_specs=[
+            pl.BlockSpec((row_tile, P), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, P), lambda i: (i, 0)),
+        ],
+        in_specs=[
+            pl.BlockSpec(ext.shape, lambda i: (0, 0, 0)) for ext in extents
+        ],
+        out_specs=pl.BlockSpec((row_tile, P * T, D), lambda i: (i, 0, 0)),
+    )
+    out = plan.pallas_call(
+        _gather_vmem_extents,
+        jax.ShapeDtypeStruct((Np, P * T, D), extents[0].dtype),
+        interpret=interpret,
+    )(ext_p, off_p, *extents)
     return out[:N]
 
 
@@ -273,6 +374,168 @@ def paged_attend_pallas(
     kernel = functools.partial(_attend_vmem, slab_tokens=T, n_pages=P)
     return plan.pallas_call(kernel, out_shape, interpret=interpret)(
         lengths.reshape(B, 1), pages, q, k_pool, v_pool
+    )
+
+
+def _attend_vmem_extents(
+    len_ref, ext_ref, off_ref, q_ref, *refs, slab_tokens, n_pages, n_ext,
+):
+    ks, vs = refs[:n_ext], refs[n_ext : 2 * n_ext]
+    o_ref = refs[2 * n_ext]
+    m_ref, l_ref, acc_ref = refs[2 * n_ext + 1 :]
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0, 0]
+    ext = ext_ref[0, p]
+    off = off_ref[0, p]
+
+    @pl.when((ext >= 0) & (p * slab_tokens < kv_len))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        T, D = ks[0].shape[2:]
+        k = jnp.zeros((T, D), ks[0].dtype)
+        v = jnp.zeros((T, D), vs[0].dtype)
+        for e in range(n_ext):
+            row = common.extent_row(ext, off, e, ks[e].shape[1])
+            k = jnp.where(ext == e, ks[e][0, pl.ds(row, 1)][0], k)
+            v = jnp.where(ext == e, vs[e][0, pl.ds(row, 1)][0], v)
+        _attend_step(q, k, v, kv_len, p, slab_tokens, m_ref, l_ref, acc_ref)
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _attend_hbm_extents(
+    len_ref, ext_ref, off_ref, q_ref, *refs, slab_tokens, n_pages, n_ext,
+):
+    ks, vs = refs[:n_ext], refs[n_ext : 2 * n_ext]
+    o_ref = refs[2 * n_ext]
+    m_ref, l_ref, acc_ref = refs[2 * n_ext + 1 :]
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    ext = ext_ref[b, p]
+
+    @pl.when((ext >= 0) & (p * slab_tokens < kv_len))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        # each extent DMA'd one (T, D) tile; consume the one ``ext`` selects
+        k = jnp.zeros(ks[0][0, 0].shape, ks[0].dtype)
+        v = jnp.zeros(vs[0][0, 0].shape, vs[0].dtype)
+        for e in range(n_ext):
+            k = jnp.where(ext == e, ks[e][0, 0], k)
+            v = jnp.where(ext == e, vs[e][0, 0], v)
+        _attend_step(q, k, v, kv_len, p, slab_tokens, m_ref, l_ref, acc_ref)
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attend_pallas_extents(
+    q: jax.Array,  # (B, KH, G, D) f32, pre-scaled
+    k_extents: tuple[jax.Array, ...],  # each (KH, S_e, T, D) head-major
+    v_extents: tuple[jax.Array, ...],
+    ext_tbl: jax.Array,  # (B, P) int32 — extent id per page, −1 unclaimed
+    off_tbl: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,) int32
+    *,
+    memory_space: str = "vmem",
+    interpret: bool = False,
+) -> jax.Array:
+    """Multi-extent ``paged_attend_pallas``: the K/V index_maps resolve the
+    page walk through the two-level (extent, offset) table."""
+    B, KH, G, D = q.shape
+    T = k_extents[0].shape[2]
+    P = ext_tbl.shape[1]
+    E = len(k_extents)
+    ext_tbl = ext_tbl.astype(jnp.int32)
+    off_tbl = off_tbl.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    scratch = [
+        pltpu.VMEM((G, 1), jnp.float32),
+        pltpu.VMEM((G, 1), jnp.float32),
+        pltpu.VMEM((G, D), jnp.float32),
+    ]
+    out_shape = jax.ShapeDtypeStruct((B, KH, G, D), jnp.float32)
+    if memory_space == "hbm":
+        def kv_spec(e: int, size: int):
+            return pl.BlockSpec(
+                (1, 1, T, D),
+                lambda b, h, p, lens, ext, off: (
+                    h,
+                    common.extent_row(ext[b, p], off[b, p], e, size),
+                    0,
+                    0,
+                ),
+            )
+
+        plan = common.GridPlan(
+            memory_space="hbm",
+            grid=(B, KH, P),
+            num_tables=3,
+            table_specs=(),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, G, D), lambda b, h, p, lens, ext, off: (b, h, 0, 0)
+                ),
+                *[kv_spec(e, k.shape[1]) for e, k in enumerate(k_extents)],
+                *[kv_spec(e, v.shape[1]) for e, v in enumerate(v_extents)],
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, G, D), lambda b, h, p, lens, ext, off: (b, h, 0, 0)
+            ),
+            scratch_shapes=scratch,
+        )
+        kernel = functools.partial(
+            _attend_hbm_extents, slab_tokens=T, n_pages=P, n_ext=E
+        )
+        return plan.pallas_call(kernel, out_shape, interpret=interpret)(
+            lengths, ext_tbl, off_tbl, q, *k_extents, *v_extents
+        )
+    plan = common.GridPlan(
+        memory_space="vmem",
+        grid=(B, KH, P),
+        num_tables=3,
+        table_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, p: (b, 0)),
+            pl.BlockSpec((1, P), lambda b, h, p: (b, 0)),
+            pl.BlockSpec((1, P), lambda b, h, p: (b, 0)),
+        ],
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p: (b, h, 0, 0)),
+            *[
+                pl.BlockSpec((1, k.shape[1], T, D), lambda b, h, p: (h, 0, 0, 0))
+                for k in k_extents
+            ],
+            *[
+                pl.BlockSpec((1, v.shape[1], T, D), lambda b, h, p: (h, 0, 0, 0))
+                for v in v_extents
+            ],
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p: (b, h, 0, 0)),
+        scratch_shapes=scratch,
+    )
+    kernel = functools.partial(
+        _attend_vmem_extents, slab_tokens=T, n_pages=P, n_ext=E
+    )
+    return plan.pallas_call(kernel, out_shape, interpret=interpret)(
+        lengths.reshape(B, 1), ext_tbl, off_tbl, q, *k_extents, *v_extents
     )
 
 

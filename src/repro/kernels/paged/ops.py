@@ -13,6 +13,7 @@ explicit > ``REPRO_MEMORY_SPACE`` > hbm on TPU / vmem in interpret mode);
 from __future__ import annotations
 
 from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 from repro.kernels import common
 from repro.kernels.paged import kernel as _kernel
 from repro.kernels.paged import ref as _ref
+from repro.pool import extents as _extents
 
 __all__ = ["paged_gather", "paged_attend", "slab_append", "slab_append_donated"]
 
@@ -33,36 +35,65 @@ def _flat_item(x: jax.Array, lead: int) -> tuple[jax.Array, tuple[int, ...]]:
     return x.reshape(*x.shape[:lead], d), item
 
 
+def _as_extents(pool) -> tuple[jax.Array, ...]:
+    """Normalize a pool argument: flat array → 1-extent tuple; drop empty
+    extents (they hold no slab ids, so the global numbering is unchanged)."""
+    exts = tuple(pool) if isinstance(pool, (tuple, list)) else (pool,)
+    live = tuple(e for e in exts if e.shape[0] > 0)
+    return live or exts[:1]
+
+
 @partial(jax.jit, static_argnames=("interpret", "use_ref", "memory_space"))
 def paged_gather(
-    pool: jax.Array,  # (S, T, *item)
-    pages: jax.Array,  # (N, P) int32
+    pool,  # (S, T, *item) or tuple of extents (S_e, T, *item)
+    pages: jax.Array,  # (N, P) int32 — global slab ids
     *,
     interpret: bool | None = None,
     use_ref: bool = False,
     memory_space: str | None = None,
 ) -> jax.Array:
-    """→ (N, P·T, *item) contiguous logical views (zeros under page −1)."""
+    """→ (N, P·T, *item) contiguous logical views (zeros under page −1).
+
+    A tuple/list pool is a segmented :class:`~repro.pool.extents.ExtentPool`
+    layout: the global page table is resolved through the two-level
+    (extent, offset) table host-side and the kernel walks per-extent operands
+    (the oracle is the same flat gather over the concatenated extents).
+    """
+    exts = _as_extents(pool)
+    T = exts[0].shape[1]
     N, P = pages.shape
-    pool3, item = _flat_item(pool, 2)
     if use_ref:
-        out = _ref.gather_pages(pool3, pages)
-    else:
+        pool3, item = _flat_item(_extents.flat_data(exts), 2)
+        return _ref.gather_pages(pool3, pages).reshape(N, P * T, *item)
+    space = common.resolve_memory_space(memory_space, interpret)
+    run = common.should_interpret(interpret)
+    if len(exts) == 1:
+        pool3, item = _flat_item(exts[0], 2)
         out = _kernel.paged_gather_pallas(
-            pool3,
-            pages,
-            memory_space=common.resolve_memory_space(memory_space, interpret),
-            interpret=common.should_interpret(interpret),
+            pool3, pages, memory_space=space, interpret=run
         )
-    return out.reshape(N, P * pool.shape[1], *item)
+        return out.reshape(N, P * T, *item)
+    flat = [_flat_item(e, 2) for e in exts]
+    item = flat[0][1]
+    ext_tbl, off_tbl = _extents.resolve_pages(
+        pages, tuple(e.shape[0] for e in exts)
+    )
+    out = _kernel.paged_gather_pallas_extents(
+        tuple(p for p, _ in flat),
+        ext_tbl,
+        off_tbl,
+        memory_space=space,
+        interpret=run,
+    )
+    return out.reshape(N, P * T, *item)
 
 
 @partial(jax.jit, static_argnames=("interpret", "use_ref", "memory_space"))
 def paged_attend(
     q: jax.Array,  # (B, KH, G, D) f32, pre-scaled
-    k_pool: jax.Array,  # (S, T, KH, D) — token-major pool (cache layout)
-    v_pool: jax.Array,  # (S, T, KH, D)
-    pages: jax.Array,  # (B, P) int32
+    k_pool,  # (S, T, KH, D) token-major pool, or tuple of extents
+    v_pool,  # (S, T, KH, D) or tuple of extents
+    pages: jax.Array,  # (B, P) int32 — global slab ids
     lengths: jax.Array,  # (B,) int32
     *,
     interpret: bool | None = None,
@@ -73,21 +104,36 @@ def paged_attend(
 
     Pools arrive in the cache's token-major ``(slab, slot, head, dim)``
     layout and are transposed head-major for the kernel's per-head blocking
-    (a production pool would be laid out head-major to begin with).
+    (a production pool would be laid out head-major to begin with).  Tuple
+    pools are segmented extents; the walk resolves global slab ids through
+    the two-level (extent, offset) table.
     """
-    kh = k_pool.transpose(2, 0, 1, 3)  # (KH, S, T, D)
-    vh = v_pool.transpose(2, 0, 1, 3)
+    k_exts = _as_extents(k_pool)
+    v_exts = _as_extents(v_pool)
+    kh = tuple(k.transpose(2, 0, 1, 3) for k in k_exts)  # each (KH, S_e, T, D)
+    vh = tuple(v.transpose(2, 0, 1, 3) for v in v_exts)
     if use_ref:
-        return _ref.attend_paged(q, kh, vh, pages, lengths)
-    return _kernel.paged_attend_pallas(
-        q, kh, vh, pages, lengths,
-        memory_space=common.resolve_memory_space(memory_space, interpret),
-        interpret=common.should_interpret(interpret),
+        k1 = kh[0] if len(kh) == 1 else jnp.concatenate(kh, axis=1)
+        v1 = vh[0] if len(vh) == 1 else jnp.concatenate(vh, axis=1)
+        return _ref.attend_paged(q, k1, v1, pages, lengths)
+    space = common.resolve_memory_space(memory_space, interpret)
+    run = common.should_interpret(interpret)
+    if len(kh) == 1:
+        return _kernel.paged_attend_pallas(
+            q, kh[0], vh[0], pages, lengths,
+            memory_space=space, interpret=run,
+        )
+    ext_tbl, off_tbl = _extents.resolve_pages(
+        pages, tuple(k.shape[1] for k in kh)
+    )
+    return _kernel.paged_attend_pallas_extents(
+        q, kh, vh, ext_tbl, off_tbl, lengths,
+        memory_space=space, interpret=run,
     )
 
 
 def _slab_append(
-    pool: jax.Array,  # (S, T, *item)
+    pool,  # (S, T, *item) or tuple of extents (S_e, T, *item)
     owners: jax.Array,  # (S,) int32 — owning array per slab, −1 free
     bases: jax.Array,  # (S,) int32 — logical position of each slab's slot 0
     sizes: jax.Array,  # (N,) int32
@@ -98,21 +144,39 @@ def _slab_append(
     use_ref: bool = False,
     memory_space: str | None = None,
     dispatch: str = "auto",
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """→ (new pool, new sizes (N,), positions (N, m) (−1 where masked))."""
+) -> tuple[Any, jax.Array, jax.Array]:
+    """→ (new pool, new sizes (N,), positions (N, m) (−1 where masked)).
+
+    A tuple pool comes back as a tuple with the *same structure*: the kernel
+    launches once per extent against that extent's slice of the owner/base
+    tables (slab ids are contiguous per extent), each launch aliasing its
+    extent in place — growth never copied the pool, and neither does the
+    append.
+    """
     if mask.dtype != jnp.bool_:
         mask = mask != 0
-    S, T = pool.shape[:2]
+    is_multi = isinstance(pool, (tuple, list))
+    exts = tuple(pool) if is_multi else (pool,)
+    T = exts[0].shape[1]
     N, m = mask.shape
     if m == 0:
         return pool, sizes, jnp.zeros((N, 0), jnp.int32)
-    pool3, item = _flat_item(pool, 2)
+    ext_item = [_flat_item(e, 2) for e in exts]
+    item = ext_item[0][1]
     elems3, _ = _flat_item(elems, 2)
     if use_ref:
+        pool3 = _extents.flat_data([p for p, _ in ext_item])
         new_pool, new_sizes, pos = _ref.slab_append(
             pool3, owners, bases, sizes.astype(jnp.int32), elems3, mask
         )
-        return new_pool.reshape(pool.shape), new_sizes, pos
+        if not is_multi:
+            return new_pool.reshape(pool.shape), new_sizes, pos
+        out, lo = [], 0
+        for e in exts:
+            hi = lo + e.shape[0]
+            out.append(new_pool[lo:hi].reshape(e.shape))
+            lo = hi
+        return tuple(out), new_sizes, pos
     # positions/counts are pure mask arithmetic — recomputed in-kernel for
     # the scatter, emitted here for the caller (same exclusive scan)
     mask_i = mask.astype(jnp.int32)
@@ -121,30 +185,47 @@ def _slab_append(
     pos = sizes[:, None].astype(jnp.int32) + inc - mask_i
     space = common.resolve_memory_space(memory_space, interpret)
     disp = common.resolve_dispatch(dispatch, m, elems.dtype)
+    run = common.should_interpret(interpret)
     tile = _kernel.DEFAULT_ROW_TILE
-    if space == "hbm":
-        pool_p, owners_p, bases_p = pool3, owners, bases
-    else:  # padded slabs: owner −1 — provably inert
-        pool_p = common.pad_to(pool3, tile, axis=0)
-        owners_p = common.pad_to(owners.reshape(S), tile, axis=0, value=-1)
-        bases_p = common.pad_to(bases.reshape(S), tile, axis=0)
     elems_p = common.pad_to(elems3, common.MXU_LANE, axis=1)
     mask_p = common.pad_to(mask_i, common.MXU_LANE, axis=1)
-    new_pool = _kernel.slab_append_pallas(
-        pool_p,
-        owners_p,
-        bases_p,
-        sizes.astype(jnp.int32),
-        elems_p,
-        mask_p,
-        memory_space=space,
-        dispatch=disp,
-        interpret=common.should_interpret(interpret),
-    )[:S]
+    sizes32 = sizes.astype(jnp.int32)
+
+    def one_extent(ext3: jax.Array, lo: int) -> jax.Array:
+        S_e = ext3.shape[0]
+        own_e = jax.lax.dynamic_slice_in_dim(owners.reshape(-1), lo, S_e)
+        base_e = jax.lax.dynamic_slice_in_dim(bases.reshape(-1), lo, S_e)
+        if space == "hbm":
+            pool_p, owners_p, bases_p = ext3, own_e, base_e
+        else:  # padded slabs: owner −1 — provably inert
+            pool_p = common.pad_to(ext3, tile, axis=0)
+            owners_p = common.pad_to(own_e, tile, axis=0, value=-1)
+            bases_p = common.pad_to(base_e, tile, axis=0)
+        return _kernel.slab_append_pallas(
+            pool_p,
+            owners_p,
+            bases_p,
+            sizes32,
+            elems_p,
+            mask_p,
+            memory_space=space,
+            dispatch=disp,
+            interpret=run,
+        )[:S_e]
+
+    new_exts, lo = [], 0
+    for e3, _ in ext_item:
+        S_e = e3.shape[0]
+        new_exts.append(e3 if S_e == 0 else one_extent(e3, lo))
+        lo += S_e
+    new_sizes = sizes + counts
+    pos = jnp.where(mask, pos, -1)
+    if not is_multi:
+        return new_exts[0].reshape(pool.shape), new_sizes, pos
     return (
-        new_pool.reshape(pool.shape),
-        sizes + counts,
-        jnp.where(mask, pos, -1),
+        tuple(ne.reshape(e.shape) for ne, e in zip(new_exts, exts)),
+        new_sizes,
+        pos,
     )
 
 

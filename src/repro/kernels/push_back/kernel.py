@@ -35,9 +35,11 @@ per-block capacity · tile rows).  The ``hbm`` tiling leaves the levels in
 HBM (``pltpu.ANY``, aliased in place): a scalar-prefetched *touch table* —
 level ``b`` is touched by a tile iff some row's write interval
 ``[size, size+count)`` meets ``[start_b, start_b+width_b)`` — gates explicit
-DMAs that stream exactly the touched level tiles through one
-largest-level-sized scratch buffer, so per-step VMEM is one level tile plus
-the wave, never the whole chain.
+DMAs that stream exactly the touched level tiles through **two**
+largest-level-sized scratch slots, double-buffered: level ``b+1``'s inbound
+copy is started before level ``b``'s is awaited, so the next level's DMA
+overlaps the current level's scatter + write-back.  Per-step VMEM is two
+level tiles plus the wave, never the whole chain.
 """
 from __future__ import annotations
 
@@ -136,8 +138,8 @@ def _push_back_hbm(
     level_out = refs[ngroups + ngroups * nlev : ngroups + 2 * ngroups * nlev]
     pos_ref = refs[ngroups + 2 * ngroups * nlev]
     nsz_ref = refs[ngroups + 2 * ngroups * nlev + 1]
-    scratch = refs[-ngroups - 2 : -2]
-    sem_in, sem_out = refs[-2], refs[-1]
+    scratch = refs[-ngroups - 2 : -2]  # per group: (2, rows, max_width, d)
+    sem_in, sem_out = refs[-2], refs[-1]  # (ngroups, 2) DMA semaphores
 
     i = pl.program_id(0)
     mask = mask_ref[...]
@@ -153,24 +155,62 @@ def _push_back_hbm(
         apply_insert_permutation(off, mask, elems_refs[g][...], dispatches[g])
         for g in range(ngroups)
     ]
-    for b in range(nlev):
+
+    # Levels are double-buffered through two scratch slots (slot = b % 2):
+    # level b+1's DMA-in is started *before* waiting on level b's, so the
+    # inbound stream of the next touched level overlaps the current level's
+    # scatter + write-back.  Semaphores are per (group, slot) so in-flight
+    # copies of adjacent levels never alias a wait.
+    def _copies(b, inbound):
+        width = bsizes[b]
+        slot = b % 2
+        out = []
+        for g in range(ngroups):
+            rows_hbm = level_out[g * nlev + b].at[pl.ds(i * rows, rows)]
+            tile = scratch[g].at[slot, :, pl.ds(0, width)]
+            sem = (sem_in if inbound else sem_out).at[g, slot]
+            src, dst = (rows_hbm, tile) if inbound else (tile, rows_hbm)
+            out.append(pltpu.make_async_copy(src, dst, sem))
+        return out
+
+    def start_in(b):
+        @pl.when(touch_ref[i, b] > 0)
+        def _(b=b):
+            for cp in _copies(b, inbound=True):
+                cp.start()
+
+    def finish_level(b):
+        """Wait level ``b``'s tiles in, scatter, start the write-back."""
 
         @pl.when(touch_ref[i, b] > 0)
-        def _scatter_level(b=b):
-            width = bsizes[b]
-            for g in range(ngroups):
-                rows_hbm = level_out[g * nlev + b].at[pl.ds(i * rows, rows)]
-                tile = scratch[g].at[:, pl.ds(0, width)]
-                cp = pltpu.make_async_copy(rows_hbm, tile, sem_in)
-                cp.start()
+        def _(b=b):
+            slot, width = b % 2, bsizes[b]
+            for cp in _copies(b, inbound=True):
                 cp.wait()
-                scratch[g][:, :width] = _level_window(
-                    gathered[g], sizes, count, scratch[g][:, :width],
+            for g in range(ngroups):
+                scratch[g][slot, :, :width] = _level_window(
+                    gathered[g], sizes, count, scratch[g][slot, :, :width],
                     starts[b], width, m,
                 )
-                cp = pltpu.make_async_copy(tile, rows_hbm, sem_out)
+            for cp in _copies(b, inbound=False):
                 cp.start()
+
+    def drain_out(b):
+        @pl.when(touch_ref[i, b] > 0)
+        def _(b=b):
+            for cp in _copies(b, inbound=False):
                 cp.wait()
+
+    for b in range(nlev):
+        if b >= 2:
+            drain_out(b - 2)  # slot b%2 must be clear before reuse
+        start_in(b)
+        if b >= 1:
+            finish_level(b - 1)
+    finish_level(nlev - 1)
+    if nlev >= 2:
+        drain_out(nlev - 2)
+    drain_out(nlev - 1)
 
     pos_ref[...] = jnp.where(mask > 0, pos, -1)
     nsz_ref[...] = sizes + count
@@ -240,10 +280,15 @@ def push_back_pallas(
                 pl.BlockSpec((block_tile, 1), lambda i, touch: (i, 0)),
             ],
             scratch_shapes=[
-                pltpu.VMEM((block_tile, bsizes[-1], d), grp[0].dtype)
+                # two slots per group — level b+1 streams into slot (b+1)%2
+                # while level b is scattered/written back from slot b%2
+                pltpu.VMEM((2, block_tile, bsizes[-1], d), grp[0].dtype)
                 for grp, d in zip(bucket_groups, dims)
             ]
-            + [pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
+            + [
+                pltpu.SemaphoreType.DMA((ngroups, 2)),
+                pltpu.SemaphoreType.DMA((ngroups, 2)),
+            ],
             aliases=aliases,
         )
         kernel = functools.partial(

@@ -13,6 +13,14 @@ from repro.pool.arena import (
     grow_pool,
     init_pool,
 )
+from repro.pool.extents import (
+    EXTENT_SCHEDULES,
+    ExtentPool,
+    grow_extents,
+    init_extent_pool,
+    is_extent_schedule,
+    plan_extents,
+)
 from repro.pool.planner import (
     PageBook,
     QuotaExceeded,
@@ -25,11 +33,17 @@ __all__ = [
     "ArenaGGArray",
     "SlabArena",
     "SlabPool",
+    "ExtentPool",
+    "EXTENT_SCHEDULES",
     "SlabAllocator",
     "TenantPlanner",
     "PageBook",
     "QuotaExceeded",
     "init_pool",
+    "init_extent_pool",
     "grow_pool",
+    "grow_extents",
+    "plan_extents",
+    "is_extent_schedule",
     "growth_amount",
 ]

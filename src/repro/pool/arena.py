@@ -31,10 +31,13 @@ from repro.core import indexing
 from repro.kernels import common
 from repro.kernels.flatten import kernel as flatten_kernel
 from repro.kernels.paged import ops as paged_ops
+from repro.pool import extents as extents_mod
+from repro.pool.extents import ExtentPool
 from repro.pool.planner import PageBook, TenantPlanner, growth_amount
 
 __all__ = [
     "SlabPool",
+    "ExtentPool",
     "ArenaGGArray",
     "SlabArena",
     "init_pool",
@@ -85,12 +88,13 @@ def init_pool(
 
 
 def grow_pool(pool: SlabPool, extra: int) -> SlabPool:
-    """Append ``extra`` fresh slabs.
+    """Append ``extra`` fresh slabs by realloc+copy (flat layout).
 
-    This is the one realloc left in the system — paid per *fleet* growth
-    (and amortizable by over-provisioning), instead of per array as in the
-    owned-buffer layout.  Existing slab contents never move logically: page
-    tables are indices, so no table changes.
+    This is the copy the segmented :class:`~repro.pool.extents.ExtentPool`
+    layout eliminates — kept as the flat fallback and oracle (the arena uses
+    it for int/``"geometric"`` ``grow_chunk`` via ``extents.grow_flat``).
+    Existing slab contents never move logically: page tables are indices, so
+    no table changes.
     """
     return SlabPool(
         data=jnp.concatenate(
@@ -158,14 +162,23 @@ class SlabArena:
         grow_chunk: int | str = 1,
     ):
         """``initial_slabs`` pre-carves the pool at start (the high-water
-        knob); ``grow_chunk`` is the over-provisioning policy on exhaustion
-        (``pool.planner.growth_amount``: int floor or ``"geometric"``
-        doubling → O(log slabs) realloc copies).  ``memory_space`` /
-        ``dispatch`` select the paged-kernel tiling and insert-permutation
-        backend (``kernels/common``; None/"auto" = backend defaults)."""
+        knob); ``grow_chunk`` is the growth policy on exhaustion:
+
+        * int floor or ``"geometric"`` — flat single-extent layout, growth
+          reallocs+copies the pool (``pool.planner.growth_amount``;
+          geometric caps it at O(log slabs) copies) — the fallback/oracle;
+        * ``"doubling"`` / ``"tz"`` — segmented extents (``pool.extents``):
+          growth appends a fresh extent and a two-level table row, **zero
+          pool bytes copied** (``pool_copied_bytes`` stays 0).
+
+        ``memory_space`` / ``dispatch`` select the paged-kernel tiling and
+        insert-permutation backend (``kernels/common``; None/"auto" =
+        backend defaults)."""
         if slab_size < 1:
             raise ValueError("slab_size must be >= 1")
-        self.pool = init_pool(initial_slabs, slab_size, item_shape, dtype)
+        self.pool = extents_mod.init_extent_pool(
+            initial_slabs, slab_size, item_shape, dtype
+        )
         self.arr = ArenaGGArray(
             pages=jnp.full((narrays, max(max_pages, 1)), -1, jnp.int32),
             sizes=jnp.zeros((narrays,), jnp.int32),
@@ -185,6 +198,10 @@ class SlabArena:
         self.pool_grow_events = 0
         self.table_grow_events = 0
         self.peak_live_ub = 0
+        # bytes of live pool data copied by growth: stays 0 under the extent
+        # schedules (the zero-copy contract CI gates on), O(log n)·pool under
+        # "geometric", O(grows)·pool under int chunking.
+        self.pool_copied_bytes = 0
 
     @property
     def alloc(self):
@@ -248,8 +265,24 @@ class SlabArena:
         short = self.book.shortfall(k)
         if short == 0:
             return
-        extra = growth_amount(self.pool.n_slabs, short, self.grow_chunk)
-        self.pool = grow_pool(self.pool, extra)
+        reserved = self.alloc.reserved_total
+        if extents_mod.is_extent_schedule(self.grow_chunk):
+            new_sizes = extents_mod.plan_extents(
+                self.pool.extent_sizes, short, self.grow_chunk,
+                reserved=reserved,
+            )
+            self.pool = extents_mod.grow_extents(self.pool, new_sizes)
+            extra = sum(new_sizes)
+        else:
+            extra = growth_amount(
+                self.pool.n_slabs, short, self.grow_chunk, reserved=reserved
+            )
+            self.pool_copied_bytes += (
+                self.pool.capacity_tokens
+                * int(np.prod(self.item_shape, dtype=np.int64))
+                * jnp.dtype(self.pool.dtype).itemsize
+            )
+            self.pool = extents_mod.grow_flat(self.pool, extra)
         self.book.grow(extra)
         self.pool_grow_events += 1
 
@@ -286,6 +319,14 @@ class SlabArena:
             )
         return self._tables_dev
 
+    def _pool_arg(self):
+        """The pool as the paged ops expect it: a flat array for the
+        single-extent layout (the original trace), a tuple of extents for
+        the segmented layouts (resolved through the two-level table)."""
+        if self.pool.n_extents == 1:
+            return self.pool.extents[0]
+        return self.pool.extents
+
     # ---- the hot path ----------------------------------------------------
     def append(self, elems: jax.Array, mask: Any = None) -> jax.Array:
         """Wave append: up to ``m`` elements per array → positions (−1 masked).
@@ -318,7 +359,7 @@ class SlabArena:
             if mask_dev.dtype != jnp.bool_:
                 mask_dev = mask_dev != 0
         data, sizes, pos = paged_ops.slab_append_donated(
-            self.pool.data,
+            self._pool_arg(),
             owners,
             bases,
             self.arr.sizes,
@@ -328,7 +369,8 @@ class SlabArena:
             memory_space=self.memory_space,
             dispatch=self.dispatch,
         )
-        self.pool = dataclasses.replace(self.pool, data=data)
+        new_exts = tuple(data) if isinstance(data, (tuple, list)) else (data,)
+        self.pool = dataclasses.replace(self.pool, extents=new_exts)
         self.arr = dataclasses.replace(self.arr, sizes=sizes)
         self.planner.advance(counts)
         self.appends += 1
@@ -360,7 +402,7 @@ class SlabArena:
     def logical_view(self) -> jax.Array:
         """(narrays, max_pages·T, *item) contiguous views (paged gather)."""
         return paged_ops.paged_gather(
-            self.pool.data, self.arr.pages, memory_space=self.memory_space
+            self._pool_arg(), self.arr.pages, memory_space=self.memory_space
         )
 
     def flatten(self) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -404,6 +446,16 @@ class SlabArena:
         pages_dev = np.asarray(jax.device_get(self.arr.pages))
         sizes_dev = np.asarray(jax.device_get(self.arr.sizes))
         assert (free_dev == self.alloc.free).all(), "device bitmap drifted"
+        # two-level table round-trip: base[ext_of[s]] + off_of[s] == s
+        ext_of, off_of = extents_mod.slab_tables(self.pool.extent_sizes)
+        assert len(ext_of) == self.pool.n_slabs == len(free_dev), (
+            "extent sizes disagree with the free bitmap"
+        )
+        if len(ext_of):
+            bases = np.asarray(self.pool.bases)
+            assert (
+                bases[ext_of] + off_of == np.arange(self.pool.n_slabs)
+            ).all(), "two-level table does not round-trip"
         self.alloc.check()
         claimed = pages_dev[pages_dev >= 0]
         assert len(claimed) == len(set(claimed.tolist())), (

@@ -1,0 +1,264 @@
+"""Segmented pool extents: zero-copy growth via a two-level page table.
+
+The realloc in ``grow_pool`` was the one copy left on the growth path: even
+geometric chunking pays O(log slabs) *full-pool* memcpys, each one a latency
+spike mid-serve.  This module replaces the monolithic pool array with a list
+of fixed-size **extents** plus a two-level mapping
+
+    slab id  s  →  (extent id ``ext_of[s]``, offset-in-extent ``off_of[s]``)
+
+so growth is "allocate one new extent and append a table row" — existing
+extents keep their device buffers, and **zero pool bytes are ever copied**
+(Tarjan & Zwick, "Optimal resizable arrays"; DynaSOAr's hierarchical blocks
+are the massively-parallel precedent — see PAPERS.md and DESIGN.md §8).
+
+Global slab ids stay the allocator's currency: ids are assigned in extent
+order, so the concatenation of all extents *is* the flat pool and every jnp
+oracle keeps working on ``flat_data(pool)`` unchanged.  Kernels resolve ids
+through the (``ext_of``, ``off_of``) tables — host-derived from the static
+extent sizes, so the resolution adds no device reads.
+
+Two growth schedules are selectable via ``grow_chunk`` (plus the flat
+single-extent fallback, which preserves the realloc behaviour as oracle):
+
+``"doubling"``
+    One new extent sized ``max(short, committed, 1)`` where ``committed``
+    counts live + reserved slabs — the pool doubles, so a fleet that keeps
+    growing holds **O(log n)** extents and wastes at most half the pool.
+
+``"tz"``
+    The Tarjan–Zwick optimal-block sequence: superblock ``k`` holds
+    ``2^⌊k/2⌋`` extents of ``2^⌈k/2⌉`` slabs each (sizes 1, 2, 2, 2,
+    4, 4, 4, 4, 4, 4, 8, …), giving **O(√n)** extents *and* O(√n)
+    waste — asymptotically optimal for a resizable array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ExtentPool",
+    "EXTENT_SCHEDULES",
+    "is_extent_schedule",
+    "init_extent_pool",
+    "grow_extents",
+    "grow_flat",
+    "plan_extents",
+    "slab_tables",
+    "resolve_pages",
+    "flat_data",
+]
+
+EXTENT_SCHEDULES = ("doubling", "tz")
+
+
+def is_extent_schedule(grow_chunk: Any) -> bool:
+    """True when ``grow_chunk`` selects a zero-copy extent layout."""
+    return isinstance(grow_chunk, str) and grow_chunk in EXTENT_SCHEDULES
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ExtentPool:
+    """The shared device pool as a tuple of extents + one free bitmap.
+
+    ``extents[e]`` is ``(size_e, slab_size, *item_shape)``; slab ids are
+    global (extent-order), so ``free`` stays a single ``(n_slabs,)`` bitmap
+    — metadata small enough that concatenating it on growth is noise next
+    to the pool bytes the extents never copy.
+    """
+
+    extents: tuple[jax.Array, ...]
+    free: jax.Array  # (n_slabs,) bool — True = claimable
+
+    @property
+    def extent_sizes(self) -> tuple[int, ...]:
+        return tuple(e.shape[0] for e in self.extents)
+
+    @property
+    def bases(self) -> tuple[int, ...]:
+        """Global slab id of each extent's slab 0."""
+        out, acc = [], 0
+        for s in self.extent_sizes:
+            out.append(acc)
+            acc += s
+        return tuple(out)
+
+    @property
+    def n_extents(self) -> int:
+        return len(self.extents)
+
+    @property
+    def n_slabs(self) -> int:
+        return sum(self.extent_sizes)
+
+    @property
+    def slab_size(self) -> int:
+        return self.extents[0].shape[1]
+
+    @property
+    def item_shape(self) -> tuple[int, ...]:
+        return self.extents[0].shape[2:]
+
+    @property
+    def dtype(self):
+        return self.extents[0].dtype
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.n_slabs * self.slab_size
+
+    @property
+    def data(self) -> jax.Array:
+        """Flat (n_slabs, slab_size, *item) view — **copies** when multi-
+        extent; oracle/debug only, never the hot path."""
+        return flat_data(self.extents)
+
+
+def init_extent_pool(
+    n_slabs: int,
+    slab_size: int,
+    item_shape: Sequence[int] = (),
+    dtype: Any = jnp.float32,
+) -> ExtentPool:
+    """Pre-carve the pool as one initial extent (possibly empty)."""
+    return ExtentPool(
+        extents=(jnp.zeros((n_slabs, slab_size, *item_shape), dtype=dtype),),
+        free=jnp.ones((n_slabs,), bool),
+    )
+
+
+def _tz_size(j: int) -> int:
+    """Size of the ``j``-th data block in the Tarjan–Zwick sequence.
+
+    Superblock ``k`` holds ``2^⌊k/2⌋`` blocks of ``2^⌈k/2⌉`` slabs each,
+    so block sizes run 1, 2, 2, 2, 4, 4, 4, 4, 4, 4, 8, … — after ``n``
+    appends both the last block and the block count are Θ(√n), which is
+    what makes the waste bound O(√n) rather than doubling's n/2.
+    """
+    k = 0
+    while j >= 1 << (k // 2):
+        j -= 1 << (k // 2)
+        k += 1
+    return 1 << ((k + 1) // 2)
+
+
+def plan_extents(
+    existing_sizes: Sequence[int],
+    short: int,
+    schedule: str,
+    *,
+    reserved: int = 0,
+) -> list[int]:
+    """Sizes of the new extent(s) covering ``short`` fresh slabs.
+
+    ``reserved`` counts reserved-but-unclaimed slabs from in-flight prefills:
+    the doubling schedule sizes off *committed* demand (``n_slabs +
+    reserved``), not the free list alone, so converting those reservations to
+    claims cannot trigger an immediate second grow (the accounting fix the
+    scheduler tests assert).  The tz sequence has fixed block sizes and
+    ``shortfall()`` already folds reservations into ``short``, so ``reserved``
+    is ignored there.
+    """
+    if short <= 0:
+        return []
+    total = sum(existing_sizes)
+    if schedule == "doubling":
+        return [max(short, total + reserved, 1)]
+    if schedule != "tz":
+        raise ValueError(f"unknown extent schedule {schedule!r}")
+    sizes: list[int] = []
+    k = len([s for s in existing_sizes if s > 0])
+    got = 0
+    while got < short:
+        step = _tz_size(k)
+        sizes.append(step)
+        got += step
+        k += 1
+    return sizes
+
+
+def grow_extents(pool: ExtentPool, new_sizes: Sequence[int]) -> ExtentPool:
+    """Append fresh zero extents — existing extents pass through **by
+    identity** (the zero-copy contract the buffer-identity test spies on).
+
+    Zero-size extents (an empty pre-carve) are dropped once a real extent
+    exists; they hold no slab ids, so the global numbering is unchanged.
+    """
+    if not new_sizes:
+        return pool
+    T, item, dt = pool.slab_size, pool.item_shape, pool.dtype
+    keep = tuple(e for e in pool.extents if e.shape[0] > 0)
+    fresh = tuple(jnp.zeros((s, T, *item), dt) for s in new_sizes if s > 0)
+    extra = sum(new_sizes)
+    return ExtentPool(
+        extents=(keep + fresh) or pool.extents,
+        free=jnp.concatenate([pool.free, jnp.ones((extra,), bool)]),
+    )
+
+
+def grow_flat(pool: ExtentPool, extra: int) -> ExtentPool:
+    """The realloc fallback: widen a single-extent pool by copy (oracle and
+    baseline for the extent schedules; O(log) copies under "geometric")."""
+    if pool.n_extents != 1:
+        raise ValueError("grow_flat requires a single-extent (flat) pool")
+    data = pool.extents[0]
+    return ExtentPool(
+        extents=(
+            jnp.concatenate(
+                [data, jnp.zeros((extra, *data.shape[1:]), data.dtype)]
+            ),
+        ),
+        free=jnp.concatenate([pool.free, jnp.ones((extra,), bool)]),
+    )
+
+
+@lru_cache(maxsize=None)
+def slab_tables(extent_sizes: tuple[int, ...]) -> tuple[np.ndarray, np.ndarray]:
+    """Host two-level table: global slab id → (extent id, offset-in-extent).
+
+    Pure shape arithmetic — derived from the static extent sizes, cached per
+    geometry, never a device read.
+    """
+    ext = np.concatenate(
+        [np.full((s,), e, np.int32) for e, s in enumerate(extent_sizes)]
+        or [np.zeros((0,), np.int32)]
+    )
+    off = np.concatenate(
+        [np.arange(s, dtype=np.int32) for s in extent_sizes]
+        or [np.zeros((0,), np.int32)]
+    )
+    return ext, off
+
+
+def resolve_pages(
+    pages: jax.Array, extent_sizes: tuple[int, ...]
+) -> tuple[jax.Array, jax.Array]:
+    """Resolve a page table of global slab ids through the two-level table.
+
+    → ``(ext_tbl, off_tbl)`` int32 with the page table's shape; invalid ids
+    (< 0, the unclaimed-page sentinel) map to (−1, −1).
+    """
+    ext_np, off_np = slab_tables(tuple(extent_sizes))
+    n = len(ext_np)
+    pages = pages.astype(jnp.int32)
+    valid = (pages >= 0) & (pages < n)
+    idx = jnp.clip(pages, 0, max(n - 1, 0))
+    ext = jnp.where(valid, jnp.asarray(ext_np)[idx], -1)
+    off = jnp.where(valid, jnp.asarray(off_np)[idx], -1)
+    return ext, off
+
+
+def flat_data(extents: Sequence[jax.Array]) -> jax.Array:
+    """Concatenate extents into the flat pool (global-id order) — the jnp
+    oracle for every multi-extent kernel; copies, so debug/oracle only."""
+    extents = tuple(extents)
+    if len(extents) == 1:
+        return extents[0]
+    return jnp.concatenate(extents, axis=0)

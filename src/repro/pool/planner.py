@@ -28,24 +28,34 @@ __all__ = [
 ]
 
 
-def growth_amount(n_slabs: int, short: int, grow_chunk: int | str) -> int:
+def growth_amount(
+    n_slabs: int, short: int, grow_chunk: int | str, *, reserved: int = 0
+) -> int:
     """Slabs to add when the free list is ``short`` of a claim.
 
     ``grow_chunk`` is the over-provisioning policy:
 
     * an int ``c`` — demand growth with a floor: add ``max(short, c)``
       (``1`` = exact demand, the tight-capacity default);
-    * ``"geometric"`` — double the pool: add ``max(short, n_slabs, 1)``,
-      so a fleet that keeps growing pays **O(log n_slabs)** realloc copies
-      total instead of one per growth wave (Tarjan & Zwick amortization;
-      asserted in ``tests/pool/test_arena.py``).
+    * ``"geometric"`` — double the pool: add
+      ``max(short, n_slabs + reserved, 1)``, so a fleet that keeps growing
+      pays **O(log n_slabs)** realloc copies total instead of one per growth
+      wave (Tarjan & Zwick amortization; asserted in
+      ``tests/pool/test_arena.py``).
+
+    ``reserved`` is the count of reserved-but-unclaimed slabs from in-flight
+    chunked prefills (``SlabAllocator.reserved_total``): the doubling base
+    counts them as committed demand, so a growth sized while reservations
+    are outstanding leaves headroom for the claims that convert them — a
+    grow sized off the free list alone could be exhausted again within the
+    same scheduler step (the double-grow the engine tests assert against).
 
     Pre-carving (``SlabArena(initial_slabs=...)`` / a pool sized to the
     expected high-water mark at engine start) composes with either policy —
     growth only begins once the pre-carve is exhausted.
     """
     if grow_chunk == "geometric":
-        return max(short, n_slabs, 1)
+        return max(short, n_slabs + reserved, 1)
     return max(short, int(grow_chunk))
 
 
@@ -240,6 +250,12 @@ class PageBook:
 
     def shortfall(self, k: int, *, tenant: int | None = None) -> int:
         return self.alloc.shortfall(k, tenant=tenant)
+
+    @property
+    def reserved_total(self) -> int:
+        """Reserved-but-unclaimed slabs — counted when sizing a new extent
+        (``growth_amount(..., reserved=...)`` / ``extents.plan_extents``)."""
+        return self.alloc.reserved_total
 
     def reserve(self, tenant: int, k: int) -> None:
         """Promise ``k`` slabs to ``tenant`` (see ``SlabAllocator.reserve``)."""

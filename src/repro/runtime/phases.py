@@ -186,7 +186,10 @@ class TwoPhasePipeline:
         (paged gather + the same segmented global ordering, DESIGN.md §4).
         The phase discipline, FrozenArray view, and stats surface are
         identical — consumers (``data/packing.py``'s Packer) switch backends
-        without code changes.
+        without code changes.  This includes segmented-extent arenas
+        (``grow_chunk="doubling"``/``"tz"``, DESIGN.md §8): the paged gather
+        resolves the two-level table transparently and ``stats.grow_events``
+        then counts zero-copy extent appends instead of realloc copies.
         """
         pipe = cls.__new__(cls)
         pipe._gg = None

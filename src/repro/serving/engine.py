@@ -262,6 +262,7 @@ class BatchStats:
     prefill_traces: int = 0  # distinct (width, pool, table) trace keys seen
     decode_steps: int = 0
     pool_grow_events: int = 0
+    pool_copied_bytes: int = 0  # bytes memcpy'd by realloc growth (0 = extents)
     grown_slabs: int = 0
     reused_slabs: int = 0
     released_slabs: int = 0
@@ -314,6 +315,21 @@ class BatchEngine:
     asserted in the acceptance test.  ``grow_chunk="geometric"`` doubles the
     pool instead (O(log slabs) realloc copies over a run), and a high-water
     pre-carve trades idle capacity for zero growth copies at steady state.
+
+    ``grow_chunk="doubling"`` / ``"tz"`` select the **segmented extent
+    layout** (``pool/extents``, DESIGN.md §8): the K/V pools become tuples
+    of extents and growth *appends an extent* instead of realloc-copying —
+    ``stats.pool_copied_bytes`` stays 0 for the whole run.  Global slab ids
+    are unchanged (extent-order), so page tables, the free bitmap, and the
+    allocator are identical across layouts; the attention/scatter paths
+    resolve ids through the host-derived two-level (extent, offset) table.
+    Growth sizing counts reserved-but-unclaimed slabs from in-flight chunked
+    prefills as committed demand, so converting a reservation to claims
+    cannot trigger an immediate second grow.  Each growth changes the cache
+    pytree structure → one decode retrace per extent (O(log n) under
+    doubling, O(√n) under tz — the same boundary-recompile pattern as
+    ggarray bucket growth).
+
     Kernel memory space follows ``cfg.kernel_memory_space``
     (``kernels/common``: hbm on TPU, vmem in interpret mode by default).
     """
@@ -334,7 +350,7 @@ class BatchEngine:
         max_pages_hint: int = 0,
         seed: int = 0,
     ):
-        from repro.pool import PageBook
+        from repro.pool import PageBook, is_extent_schedule
 
         if cfg.n_enc_layers or cfg.n_prefix_embeds:
             raise NotImplementedError("BatchEngine serves decoder-only stacks")
@@ -345,6 +361,10 @@ class BatchEngine:
         self.T = cfg.slab_tokens
         self.B = max_batch
         self.grow_chunk = grow_chunk
+        # "doubling"/"tz" → segmented extent pools (zero-copy growth);
+        # _extent_sizes mirrors the tuple structure of every pool entry.
+        self._extent_mode = is_extent_schedule(grow_chunk)
+        self._extent_sizes: list[int] = [0] if self._extent_mode else []
         self.stop_token = stop_token
         self.admission = admission
         self.key = jax.random.PRNGKey(seed)
@@ -427,6 +447,10 @@ class BatchEngine:
             if cfg.cache_quant:
                 c["ks_pool"] = jnp.zeros((P, 0, self.T, kh), jnp.bfloat16)
                 c["vs_pool"] = jnp.zeros((P, 0, self.T, kh), jnp.bfloat16)
+            if self._extent_mode:  # tuple-of-extents layout (one empty seed)
+                for key in ("k_pool", "v_pool", "ks_pool", "vs_pool"):
+                    if key in c:
+                        c[key] = (c[key],)
             caches.append(c)
         return caches
 
@@ -435,7 +459,23 @@ class BatchEngine:
 
     # ---- pool / page-table management -----------------------------------
     def _grow_pool(self, extra: int) -> None:
+        """Add ≥ ``extra`` slabs of pool capacity.
+
+        Flat layout: realloc — widen every pool array by ``extra`` slabs and
+        **copy** the live bytes (counted in ``stats.pool_copied_bytes``).
+        Extent layout: append fresh extent(s) per the schedule's plan —
+        existing extents keep their device buffers, zero bytes copied.
+        """
+        if self._extent_mode:
+            from repro.pool import plan_extents
+
+            self._append_extents(
+                plan_extents(tuple(self._extent_sizes), extra, self.grow_chunk)
+            )
+            return
+
         def widen(pool):
+            self.stats.pool_copied_bytes += pool.size * pool.dtype.itemsize
             pad = jnp.zeros((pool.shape[0], extra, *pool.shape[2:]), pool.dtype)
             return jnp.concatenate([pool, pad], axis=1)
 
@@ -444,12 +484,66 @@ class BatchEngine:
             for key in ("k_pool", "v_pool", "ks_pool", "vs_pool"):
                 if key in c:
                     c[key] = widen(c[key])
+        self._finish_grow(extra)
+
+    def _append_extents(self, sizes: list[int]) -> None:
+        """Zero-copy growth: append fresh extents to every pool tuple."""
+        sizes = [s for s in sizes if s > 0]
+        if not sizes:
+            return
+        # a zero-size seed extent holds no slab ids — drop it once real
+        # extents exist so kernels never carry dead operands
+        keep = [j for j, s in enumerate(self._extent_sizes) if s > 0]
+        for i in self._attn_slots():
+            c = self.caches[i]
+            for key in ("k_pool", "v_pool", "ks_pool", "vs_pool"):
+                if key not in c:
+                    continue
+                exts = list(c[key])
+                proto = exts[0]
+                exts = [exts[j] for j in keep] if keep else []
+                for s in sizes:
+                    exts.append(
+                        jnp.zeros(
+                            (proto.shape[0], s, *proto.shape[2:]), proto.dtype
+                        )
+                    )
+                c[key] = tuple(exts)
+        self._extent_sizes = [self._extent_sizes[j] for j in keep] + sizes
+        self._finish_grow(sum(sizes))
+
+    def _finish_grow(self, extra: int) -> None:
         self.book.grow(extra)
         self.free_dev = jnp.concatenate([self.free_dev, jnp.ones((extra,), bool)])
         self.stats.pool_grow_events += 1
         self.stats.grown_slabs += extra
         self.stats.peak_pool_tokens = max(
             self.stats.peak_pool_tokens, self.pool_tokens
+        )
+
+    def _grow_for(self, short: int) -> None:
+        """Cover a free-list shortfall, sized by the growth schedule.
+
+        Reserved-but-unclaimed slabs from in-flight chunked prefills count
+        as committed demand (``reserved=``): a grow sized off the free list
+        alone could be exhausted again by the claims that convert those
+        reservations within the same scheduler step.
+        """
+        from repro.pool import growth_amount, plan_extents
+
+        reserved = self.book.reserved_total
+        if self._extent_mode:
+            self._append_extents(
+                plan_extents(
+                    tuple(self._extent_sizes), short, self.grow_chunk,
+                    reserved=reserved,
+                )
+            )
+            return
+        self._grow_pool(
+            growth_amount(
+                self.alloc.n_slabs, short, self.grow_chunk, reserved=reserved
+            )
         )
 
     def _ensure_table_width(self, need: int) -> None:
@@ -469,11 +563,7 @@ class BatchEngine:
         self._ensure_table_width(int(self.book.npages[slot]) + k)
         short = self.book.shortfall(k)
         if short:
-            from repro.pool import growth_amount
-
-            self._grow_pool(
-                growth_amount(self.alloc.n_slabs, short, self.grow_chunk)
-            )
+            self._grow_for(short)
         before_reuse = self.alloc.reuse_claims
         ids, page0 = self.book.claim(slot, k)
         self.stats.reused_slabs += self.alloc.reuse_claims - before_reuse
@@ -565,11 +655,29 @@ class BatchEngine:
         if req.generated >= req.max_new_tokens:
             self._complete(req)
 
+    def _set_slabs(self, pool, ids: np.ndarray, vals: jax.Array):
+        """``pool.at[:, ids].set(vals)`` across the flat or extent layout.
+
+        ``ids`` are *host* slab ids, so extent routing is pure host
+        arithmetic — one sliced scatter per extent that owns any of them.
+        """
+        if not self._extent_mode:
+            return pool.at[:, jnp.asarray(ids, jnp.int32)].set(vals)
+        exts = list(pool)
+        base = 0
+        for e, size in enumerate(self._extent_sizes):
+            sel = np.flatnonzero((ids >= base) & (ids < base + size))
+            if len(sel):
+                local = jnp.asarray(ids[sel] - base, jnp.int32)
+                exts[e] = exts[e].at[:, local].set(vals[:, sel])
+            base += size
+        return tuple(exts)
+
     def _fill_slot_pages(self, i: int, slot: int, pcache: dict, Lp: int) -> None:
         """Scatter a (P, 1, Lp, …) static prefill cache into claimed slabs."""
         c = self.caches[i]
         npages = int(self.book.npages[slot])
-        ids = jnp.asarray(self.book.pages_in_order(slot), jnp.int32)
+        ids = self.book.pages_in_order(slot)
 
         def paged(x):  # (P, Lp, …) → (P, npages, T, …)
             pad = npages * self.T - x.shape[1]
@@ -578,11 +686,15 @@ class BatchEngine:
             x = jnp.pad(x, widths)
             return x.reshape(x.shape[0], npages, self.T, *x.shape[2:])
 
-        c["k_pool"] = c["k_pool"].at[:, ids].set(paged(pcache["k"][:, 0]))
-        c["v_pool"] = c["v_pool"].at[:, ids].set(paged(pcache["v"][:, 0]))
+        c["k_pool"] = self._set_slabs(c["k_pool"], ids, paged(pcache["k"][:, 0]))
+        c["v_pool"] = self._set_slabs(c["v_pool"], ids, paged(pcache["v"][:, 0]))
         if "ks_pool" in c:
-            c["ks_pool"] = c["ks_pool"].at[:, ids].set(paged(pcache["ks"][:, 0]))
-            c["vs_pool"] = c["vs_pool"].at[:, ids].set(paged(pcache["vs"][:, 0]))
+            c["ks_pool"] = self._set_slabs(
+                c["ks_pool"], ids, paged(pcache["ks"][:, 0])
+            )
+            c["vs_pool"] = self._set_slabs(
+                c["vs_pool"], ids, paged(pcache["vs"][:, 0])
+            )
 
     def _complete(self, req: Request) -> None:
         req.done = True
@@ -595,9 +707,7 @@ class BatchEngine:
     # ---- chunked admission ----------------------------------------------
     def _ensure_free_slabs(self, short: int) -> bool:
         """Scheduler grow hook: the engine always covers a reservation."""
-        from repro.pool import growth_amount
-
-        self._grow_pool(growth_amount(self.alloc.n_slabs, short, self.grow_chunk))
+        self._grow_for(short)
         return True
 
     def _run_chunk(self, task) -> None:
@@ -691,9 +801,22 @@ class BatchEngine:
             active = [r for r in self._slots if r is not None]
         if not active:
             return bool(tasks)
-        for req in active:  # capacity: claim the next slab before overflow
-            if self._len_host[req.slot] + 1 > self.book.npages[req.slot] * self.T:
-                self._claim(req.slot, 1)
+        # capacity: claim the next slab before overflow.  The shortfall is
+        # sized over the whole batch first so one growth event covers every
+        # needy slot this step (per-slot grows would fire once per sequence
+        # under synchronized overflow — the double-grow the tests assert
+        # against).
+        needy = [
+            r.slot
+            for r in active
+            if self._len_host[r.slot] + 1 > self.book.npages[r.slot] * self.T
+        ]
+        if needy:
+            short = self.book.shortfall(len(needy))
+            if short:
+                self._grow_for(short)
+            for slot in needy:
+                self._claim(slot, 1)
         if self.sched is not None and self.sched.prefilling:
             act = np.zeros((self.B,), bool)
             act[[r.slot for r in active]] = True

@@ -183,6 +183,65 @@ def _is_quant(cache: Cache) -> bool:
     return "ks0" in cache or "ks" in cache or "ks_pool" in cache
 
 
+# ---- segmented pools (pool/extents) ---------------------------------------
+# A paged pool value (``k_pool``/``v_pool``/``ks_pool``/``vs_pool``) is
+# either a flat array (single-extent layout — the original trace) or a
+# tuple of extents: growth appended an extent instead of copying the pool,
+# and global slab ids resolve through the two-level (extent, offset) table.
+
+def _pool_exts(pool) -> tuple[jax.Array, ...]:
+    return tuple(pool) if isinstance(pool, (tuple, list)) else (pool,)
+
+
+def _pool_first(pool) -> jax.Array:
+    return _pool_exts(pool)[0]
+
+
+def _pool_slabs(pool) -> int:
+    return sum(e.shape[0] for e in _pool_exts(pool))
+
+
+def _scatter_pool(pool, slab: jax.Array, slot: jax.Array, vals: jax.Array):
+    """``pool.at[slab, slot].set(vals, mode="drop")`` through the extent
+    table; ``slab`` entries < 0 or ≥ n_slabs drop.  Returns the pool in its
+    own structure (flat array or tuple of extents)."""
+    exts = _pool_exts(pool)
+    if not isinstance(pool, (tuple, list)):
+        S = exts[0].shape[0]
+        tgt = jnp.where((slab >= 0) & (slab < S), slab, S)
+        return exts[0].at[tgt, slot].set(vals, mode="drop")
+    from repro.pool import extents as _extents
+
+    ext_t, off_t = _extents.resolve_pages(
+        slab, tuple(e.shape[0] for e in exts)
+    )
+    out = list(exts)
+    for e, ext in enumerate(exts):
+        tgt = jnp.where(ext_t == e, off_t, ext.shape[0])
+        out[e] = ext.at[tgt, slot].set(vals, mode="drop")
+    return tuple(out)
+
+
+def _scatter_slab(pool, slab: jax.Array, vals: jax.Array):
+    """Whole-slab scatter (``pool.at[slab].set``) through the extent table;
+    ``slab`` entries < 0 or ≥ n_slabs drop."""
+    exts = _pool_exts(pool)
+    if not isinstance(pool, (tuple, list)):
+        S = exts[0].shape[0]
+        tgt = jnp.where((slab >= 0) & (slab < S), slab, S)
+        return exts[0].at[tgt].set(vals, mode="drop")
+    from repro.pool import extents as _extents
+
+    ext_t, off_t = _extents.resolve_pages(
+        slab, tuple(e.shape[0] for e in exts)
+    )
+    out = list(exts)
+    for e, ext in enumerate(exts):
+        tgt = jnp.where(ext_t == e, off_t, ext.shape[0])
+        out[e] = ext.at[tgt].set(vals, mode="drop")
+    return tuple(out)
+
+
 def capacity_of(cache: Cache) -> int:
     """Sequence-slot capacity of one cache slot — static host-side metadata.
 
@@ -192,7 +251,7 @@ def capacity_of(cache: Cache) -> int:
     allocator's, not the shape's.
     """
     if _is_paged(cache):
-        return cache["pages"].shape[-1] * cache["k_pool"].shape[-3]
+        return cache["pages"].shape[-1] * _pool_first(cache["k_pool"]).shape[-3]
     if "k" in cache:
         return cache["k"].shape[-3]
     return indexing.capacity(cache["k0"].shape[-3], _levels(cache))
@@ -319,19 +378,18 @@ def append(
         # scatter through the page table: slab = pages[b, pos // T].  An
         # unclaimed page (−1) or out-of-table position drops the write —
         # the idle-slot / truncation semantics of the batch engine.
-        n_slabs, T = cache["k_pool"].shape[-4:-2]
+        T = _pool_first(cache["k_pool"]).shape[-3]
         maxp = cache["pages"].shape[-1]
         pidx = jnp.clip(pos // T, 0, maxp - 1)
         slab = cache["pages"][rows, pidx]
-        ok = (slab >= 0) & (pos < maxp * T)
-        slab = jnp.where(ok, slab, n_slabs)  # OOB ⇒ mode="drop"
+        slab = jnp.where((slab >= 0) & (pos < maxp * T), slab, -1)  # ⇒ drop
         slot = pos % T
         out = dict(cache)
-        out["k_pool"] = cache["k_pool"].at[slab, slot].set(k[:, 0], mode="drop")
-        out["v_pool"] = cache["v_pool"].at[slab, slot].set(v[:, 0], mode="drop")
+        out["k_pool"] = _scatter_pool(cache["k_pool"], slab, slot, k[:, 0])
+        out["v_pool"] = _scatter_pool(cache["v_pool"], slab, slot, v[:, 0])
         if quant:
-            out["ks_pool"] = cache["ks_pool"].at[slab, slot].set(k_s[:, 0], mode="drop")
-            out["vs_pool"] = cache["vs_pool"].at[slab, slot].set(v_s[:, 0], mode="drop")
+            out["ks_pool"] = _scatter_pool(cache["ks_pool"], slab, slot, k_s[:, 0])
+            out["vs_pool"] = _scatter_pool(cache["vs_pool"], slab, slot, v_s[:, 0])
         return out
     if not _is_ggarray(cache):
         cap = cache["k"].shape[-3]
@@ -451,12 +509,27 @@ def attend(
     return out.reshape(B, 1, H, Dh).astype(q.dtype)
 
 
-def _gather_pool(pool: jax.Array, grp: jax.Array) -> jax.Array:
-    """pool (S, T, …), page group (B, w) → (B, w·T, …); −1 pages gather slab 0
-    (the values are dead: every lane they cover is softmax-masked)."""
-    S, T = pool.shape[:2]
-    out = pool[jnp.clip(grp, 0, max(S - 1, 0))]  # (B, w, T, …)
-    return out.reshape(grp.shape[0], grp.shape[1] * T, *pool.shape[2:])
+def _gather_pool(pool, grp: jax.Array) -> jax.Array:
+    """pool (S, T, …) or tuple of extents, page group (B, w) → (B, w·T, …);
+    −1 pages gather slab 0 (the values are dead: every lane they cover is
+    softmax-masked).  Multi-extent pools resolve global ids through the
+    two-level table and select per extent."""
+    exts = _pool_exts(pool)
+    T = exts[0].shape[1]
+    B, w = grp.shape
+    if len(exts) == 1:
+        S = exts[0].shape[0]
+        out = exts[0][jnp.clip(grp, 0, max(S - 1, 0))]  # (B, w, T, …)
+        return out.reshape(B, w * T, *exts[0].shape[2:])
+    from repro.pool import extents as _extents
+
+    ext_t, off_t = _extents.resolve_pages(grp, tuple(e.shape[0] for e in exts))
+    out = jnp.zeros((B, w, *exts[0].shape[1:]), exts[0].dtype)
+    for e, ext in enumerate(exts):
+        g = ext[jnp.clip(off_t, 0, ext.shape[0] - 1)]
+        sel = (ext_t == e).reshape(B, w, *([1] * (g.ndim - 2)))
+        out = jnp.where(sel, g, out)
+    return out.reshape(B, w * T, *exts[0].shape[2:])
 
 
 def _attend_paged(cache, qf, length, cfg, state, _kv):
@@ -464,7 +537,7 @@ def _attend_paged(cache, qf, length, cfg, state, _kv):
     from repro.pool.arena import geometric_page_groups
 
     pages = cache["pages"]
-    T = cache["k_pool"].shape[-3]
+    T = _pool_first(cache["k_pool"]).shape[-3]
     if cfg.paged_attend_impl == "pallas" and not _is_quant(cache):
         from repro.kernels.paged import ops as paged_ops
 
@@ -563,7 +636,7 @@ def chunk_attend(
         return _dequant(ck, sk), _dequant(cv, sv)
 
     # ---- prefix: pool gather, fixed maxp·T width (one trace ∀ t0 > 0) ----
-    T = cache["k_pool"].shape[-3]
+    T = _pool_first(cache["k_pool"]).shape[-3]
     Skv = pages_row.shape[0] * T
     if Skv and not first:
         grp = pages_row[None]  # (1, maxp)
@@ -625,7 +698,7 @@ def scatter_chunk(
     identical to a monolithic fill.  Dead lanes (pad, unclaimed page) route
     to the out-of-bounds slab and drop.
     """
-    n_slabs, T = cache["k_pool"].shape[-4:-2]
+    T = _pool_first(cache["k_pool"]).shape[-3]
     maxp = pages_row.shape[0]
     Cb = k_chunk.shape[1]
     quant = _is_quant(cache)
@@ -637,14 +710,14 @@ def scatter_chunk(
     pidx = jnp.clip(pos // T, 0, maxp - 1)
     slab = pages_row[pidx]
     ok = (jnp.arange(Cb) < live) & (slab >= 0) & (pos < maxp * T)
-    slab = jnp.where(ok, slab, n_slabs)  # OOB ⇒ mode="drop"
+    slab = jnp.where(ok, slab, -1)  # dead lanes ⇒ mode="drop"
     slot = pos % T
     out = dict(cache)
-    out["k_pool"] = cache["k_pool"].at[slab, slot].set(k, mode="drop")
-    out["v_pool"] = cache["v_pool"].at[slab, slot].set(v, mode="drop")
+    out["k_pool"] = _scatter_pool(cache["k_pool"], slab, slot, k)
+    out["v_pool"] = _scatter_pool(cache["v_pool"], slab, slot, v)
     if quant:
-        out["ks_pool"] = cache["ks_pool"].at[slab, slot].set(k_s, mode="drop")
-        out["vs_pool"] = cache["vs_pool"].at[slab, slot].set(v_s, mode="drop")
+        out["ks_pool"] = _scatter_pool(cache["ks_pool"], slab, slot, k_s)
+        out["vs_pool"] = _scatter_pool(cache["vs_pool"], slab, slot, v_s)
     return out
 
 
@@ -669,7 +742,7 @@ def fill_from_prefill(
     if _is_paged(cache):
         # page-sliced scatter: page p takes positions [p·T, (p+1)·T); rows
         # whose page is unclaimed drop (shorter sequences in the batch)
-        n_slabs, T = cache["k_pool"].shape[-4:-2]
+        T = _pool_first(cache["k_pool"]).shape[-3]
         maxp = cache["pages"].shape[-1]
         npages = min(-(-S // T), maxp)
         rows = jnp.arange(k_full.shape[0])
@@ -684,13 +757,12 @@ def fill_from_prefill(
 
         out = dict(cache)
         for p in range(npages):
-            slab = cache["pages"][rows, p]
-            tgt = jnp.where(slab >= 0, slab, n_slabs)  # drop unclaimed
-            out["k_pool"] = out["k_pool"].at[tgt].set(_seg(k_full, p), mode="drop")
-            out["v_pool"] = out["v_pool"].at[tgt].set(_seg(v_full, p), mode="drop")
+            slab = cache["pages"][rows, p]  # −1 unclaimed ⇒ drop
+            out["k_pool"] = _scatter_slab(out["k_pool"], slab, _seg(k_full, p))
+            out["v_pool"] = _scatter_slab(out["v_pool"], slab, _seg(v_full, p))
             if quant:
-                out["ks_pool"] = out["ks_pool"].at[tgt].set(_seg(k_s, p), mode="drop")
-                out["vs_pool"] = out["vs_pool"].at[tgt].set(_seg(v_s, p), mode="drop")
+                out["ks_pool"] = _scatter_slab(out["ks_pool"], slab, _seg(k_s, p))
+                out["vs_pool"] = _scatter_slab(out["vs_pool"], slab, _seg(v_s, p))
         return out
     if not _is_ggarray(cache):
         cap = cache["k"].shape[-3]

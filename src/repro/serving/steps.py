@@ -50,6 +50,30 @@ def _mlp_or_moe(sp, x, slot, cfg):
     return x + mlp_block(sp["mlp"], h, cfg.activation)
 
 
+# Cache slots ride the period scan with a leading (n_periods, …) stacking;
+# _cache_get/_cache_put index one period in/out.  Values are tree-mapped, not
+# indexed directly: a paged pool entry may be a *tuple of extents*
+# (pool/extents segmented layout) rather than one array.
+
+def _cache_get(full: dict, i):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False), full
+    )
+
+
+def _cache_put(full: dict, part: dict, i):
+    out = dict(full)
+    for k, p in part.items():  # only updated keys (cross K/V stay as-is)
+        out[k] = jax.tree.map(
+            lambda a, b: jax.lax.dynamic_update_index_in_dim(
+                a, b.astype(a.dtype), i, 0
+            ),
+            full[k],
+            p,
+        )
+    return out
+
+
 # --------------------------------------------------------------------------
 # Prefill: full context forward, emitting filled caches per layer.
 # --------------------------------------------------------------------------
@@ -148,27 +172,13 @@ def prefill_chunk(
     Cb = tokens.shape[1]
     positions = (t0 + jnp.arange(Cb))[None, :]  # (1, Cb) global positions
 
-    def _get(full: dict, i):
-        return {
-            k: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
-            for k, a in full.items()
-        }
-
-    def _put(full: dict, part: dict, i):
-        out = dict(full)
-        for k, p in part.items():
-            out[k] = jax.lax.dynamic_update_index_in_dim(
-                full[k], p.astype(full[k].dtype), i, 0
-            )
-        return out
-
     def period_body(carry, xs):
         x, caches = carry
         x = constrain(x, ("batch", None, None))
         period_params, idx = xs
         for lslot, kind in enumerate(cfg.layout):
             sp = period_params[lslot]
-            c = _get(caches[lslot], idx)
+            c = _cache_get(caches[lslot], idx)
             h = rms_norm(x, sp["norm1"], cfg.norm_eps)
             if kind == "mamba":
                 st = (
@@ -182,7 +192,7 @@ def prefill_chunk(
                     sp["mamba"], h, cfg, state=st, return_state=True
                 )
                 x = x + y
-                caches[lslot] = _put(
+                caches[lslot] = _cache_put(
                     caches[lslot],
                     {
                         "conv": c["conv"].at[slot].set(
@@ -200,7 +210,7 @@ def prefill_chunk(
             x = x + project_out(sp["attn"], att)
             c2 = kvcache.scatter_chunk(c, pages_row, k, v, t0, live, cfg)
             x = _mlp_or_moe(sp, x, lslot, cfg)
-            caches[lslot] = _put(caches[lslot], c2, idx)
+            caches[lslot] = _cache_put(caches[lslot], c2, idx)
         return (x, caches), None
 
     (x, new_caches), _ = jax.lax.scan(
@@ -271,20 +281,6 @@ def decode_step(
     pos = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
     positions = pos[:, None]  # (B, 1)
 
-    def _get(full: dict, i):
-        return {
-            k: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
-            for k, a in full.items()
-        }
-
-    def _put(full: dict, part: dict, i):
-        out = dict(full)
-        for k, p in part.items():  # only updated keys (cross K/V stay as-is)
-            out[k] = jax.lax.dynamic_update_index_in_dim(
-                full[k], p.astype(full[k].dtype), i, 0
-            )
-        return out
-
     def period_body(carry, xs):
         # caches ride the CARRY and are updated in place (dynamic-update-
         # slice) — the xs→ys formulation double-buffers the whole KV cache
@@ -294,7 +290,7 @@ def decode_step(
         period_params, idx = xs
         for slot, kind in enumerate(cfg.layout):
             sp = period_params[slot]
-            c = _get(caches[slot], idx)
+            c = _cache_get(caches[slot], idx)
             h = rms_norm(x, sp["norm1"], cfg.norm_eps)
             if kind == "mamba":
                 y, st = ssm_mod.mamba_decode_step(
@@ -306,7 +302,7 @@ def decode_step(
                     keep = active[:, None, None]
                     new_conv = jnp.where(keep, new_conv, c["conv"])
                     new_ssd = jnp.where(keep[..., None], new_ssd, c["ssd"])
-                caches[slot] = _put(
+                caches[slot] = _cache_put(
                     caches[slot], {"conv": new_conv, "ssd": new_ssd}, idx
                 )
                 continue
@@ -325,7 +321,7 @@ def decode_step(
                 )
                 x = x + project_out(sp["cross"], attc)
             x = _mlp_or_moe(sp, x, slot, cfg)
-            caches[slot] = _put(caches[slot], c2, idx)
+            caches[slot] = _cache_put(caches[slot], c2, idx)
         return (x, caches), None
 
     (x, new_caches), _ = jax.lax.scan(

@@ -1,0 +1,228 @@
+"""Segmented extent pool: zero-copy growth and two-level table invariants.
+
+Deterministic seeded sweeps run everywhere; the ``@given`` variants fuzz the
+same properties when hypothesis is installed (CI).  The buffer-identity tests
+are the teeth behind the "zero-copy growth" claim: growing an extent pool must
+keep every existing extent's device buffer (checked via object identity and
+``unsafe_buffer_pointer``), while the flat realloc pool demonstrably does not.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.pool import SlabArena
+from repro.pool.extents import (
+    EXTENT_SCHEDULES,
+    _tz_size,
+    flat_data,
+    grow_extents,
+    grow_flat,
+    init_extent_pool,
+    plan_extents,
+    resolve_pages,
+    slab_tables,
+)
+from repro.pool.planner import SlabAllocator
+
+
+def _buf_ptrs(pool):
+    return [e.unsafe_buffer_pointer() for e in pool.extents]
+
+
+# ---------------------------------------------------------------------------
+# growth schedules
+# ---------------------------------------------------------------------------
+
+
+def test_plan_doubling_covers_total_plus_reserved():
+    assert plan_extents((4,), 1, "doubling") == [4]
+    assert plan_extents((4, 4), 3, "doubling") == [8]
+    # reserved-but-unclaimed slabs size the base, not just live ones
+    assert plan_extents((4,), 1, "doubling", reserved=9) == [13]
+    assert plan_extents((), 1, "doubling") == [1]
+
+
+def test_plan_tz_block_sequence():
+    """Tarjan–Zwick: superblock k holds 2^floor(k/2) blocks of 2^ceil(k/2)."""
+    assert [_tz_size(j) for j in range(11)] == [1, 2, 2, 2, 4, 4, 4, 4, 4, 4, 8]
+    assert plan_extents((), 5, "tz") == [1, 2, 2]
+    # sequence resumes at the first unused block index
+    assert plan_extents((1, 2, 2), 4, "tz") == [2, 4]
+    assert plan_extents((1, 2, 2), 5, "tz") == [2, 4]
+    # shortfall() already counts reservations, so tz ignores ``reserved``
+    assert plan_extents((1,), 2, "tz", reserved=3) == [2]
+
+
+def test_tz_waste_is_o_sqrt_n():
+    """Capacity overshoot after any tz growth is at most O(sqrt(total))."""
+    sizes: list[int] = []
+    for short in [1, 3, 7, 20, 50, 200]:
+        sizes += plan_extents(tuple(sizes), short, "tz")
+        total = sum(sizes)
+        assert sizes[-1] <= 2 * int(np.sqrt(total)) + 1
+
+
+# ---------------------------------------------------------------------------
+# buffer identity: the zero-copy claim
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule", EXTENT_SCHEDULES)
+def test_grow_extents_keeps_device_buffers(schedule):
+    """N growths never touch existing extents: same objects, same pointers."""
+    pool = init_extent_pool(2, 4, (3,), jnp.float32)
+    pool = dataclass_fill(pool)
+    for wave in range(5):
+        before, ptrs = pool.extents, _buf_ptrs(pool)
+        pool = grow_extents(pool, plan_extents(pool.extent_sizes, wave + 1, schedule))
+        for i, old in enumerate(before):
+            assert pool.extents[i] is old, "existing extent was rebuilt"
+            assert pool.extents[i].unsafe_buffer_pointer() == ptrs[i]
+    # contents of the original extent survive every growth bit-for-bit
+    np.testing.assert_array_equal(
+        np.asarray(pool.extents[0]), np.arange(2 * 4 * 3).reshape(2, 4, 3)
+    )
+
+
+def dataclass_fill(pool):
+    filled = jnp.arange(pool.extents[0].size, dtype=pool.dtype).reshape(
+        pool.extents[0].shape
+    )
+    return type(pool)(extents=(filled,) + pool.extents[1:], free=pool.free)
+
+
+def test_grow_flat_reallocates_buffers():
+    """Oracle for the spy: the flat fallback *does* move the live bytes."""
+    pool = init_extent_pool(2, 4, (), jnp.float32)
+    ptr = pool.extents[0].unsafe_buffer_pointer()
+    grown = grow_flat(pool, 4)
+    assert grown.n_extents == 1
+    assert grown.extents[0].unsafe_buffer_pointer() != ptr
+
+
+@pytest.mark.parametrize("schedule", EXTENT_SCHEDULES)
+def test_arena_extent_growth_is_zero_copy(schedule):
+    """SlabArena under an extent schedule: grows happen, bytes copied = 0."""
+    arena = SlabArena(3, 4, dtype=jnp.float32, grow_chunk=schedule)
+    rng = np.random.default_rng(0)
+    first_ptr = None
+    for _ in range(8):
+        m = int(rng.integers(1, 10))
+        arena.append(jnp.asarray(rng.standard_normal((3, m)), jnp.float32))
+        if first_ptr is None and arena.pool.n_slabs:
+            first_ptr = arena.pool.extents[0].unsafe_buffer_pointer()
+    assert arena.pool_grow_events >= 2
+    assert arena.pool_copied_bytes == 0
+    assert arena.pool.n_extents > 1
+    assert arena.pool.extents[0].unsafe_buffer_pointer() == first_ptr
+    arena.check_invariants()
+
+
+def test_arena_flat_growth_copies_bytes():
+    arena = SlabArena(3, 4, dtype=jnp.float32, grow_chunk=1)
+    for _ in range(4):
+        arena.append(jnp.ones((3, 6), jnp.float32))
+    assert arena.pool_copied_bytes > 0
+
+
+@pytest.mark.parametrize("schedule", EXTENT_SCHEDULES)
+def test_arena_extent_parity_vs_flat(schedule):
+    """Extent layouts are invisible: positions and flatten match the flat pool."""
+    rng = np.random.default_rng(2)
+    flat = SlabArena(4, 8, dtype=jnp.float32, grow_chunk=1)
+    seg = SlabArena(4, 8, dtype=jnp.float32, grow_chunk=schedule)
+    for _ in range(6):
+        m = int(rng.integers(1, 12))
+        elems = jnp.asarray(rng.standard_normal((4, m)), jnp.float32)
+        mask = jnp.asarray(rng.random((4, m)) > 0.3)
+        pos_f = flat.append(elems, mask)
+        pos_s = seg.append(elems, mask)
+        np.testing.assert_array_equal(np.asarray(pos_f), np.asarray(pos_s))
+    ff, tf, _ = flat.flatten()
+    fs, ts, _ = seg.flatten()
+    n = int(jax.device_get(tf))
+    assert n == int(jax.device_get(ts))
+    np.testing.assert_array_equal(np.asarray(ff)[:n], np.asarray(fs)[:n])
+    seg.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# two-level table round-trip
+# ---------------------------------------------------------------------------
+
+
+def _check_round_trip(sizes):
+    ext_of, off_of = slab_tables(tuple(sizes))
+    bases = np.concatenate([[0], np.cumsum(sizes)])[:-1]
+    n = int(sum(sizes))
+    assert ext_of.shape == off_of.shape == (n,)
+    np.testing.assert_array_equal(bases[ext_of] + off_of, np.arange(n))
+    assert (off_of < np.asarray(sizes)[ext_of]).all()
+
+
+def test_slab_tables_round_trip_examples():
+    for sizes in [(1,), (1, 2, 2), (4, 4, 8), (3, 1, 5, 2)]:
+        _check_round_trip(sizes)
+
+
+def test_resolve_pages_marks_invalid():
+    ext, off = resolve_pages(jnp.asarray([[0, 2, -1], [3, -1, -1]]), (1, 2, 2))
+    np.testing.assert_array_equal(np.asarray(ext), [[0, 1, -1], [2, -1, -1]])
+    np.testing.assert_array_equal(np.asarray(off), [[0, 1, -1], [0, -1, -1]])
+
+
+@pytest.mark.parametrize("schedule", EXTENT_SCHEDULES)
+@pytest.mark.parametrize("seed", range(3))
+def test_table_round_trips_under_claim_release_grow(schedule, seed):
+    """Interleaved claim/release/grow waves: every live slab id resolves to a
+    unique (extent, offset) cell and back, after every wave."""
+    rng = np.random.default_rng(seed)
+    alloc = SlabAllocator(0)
+    sizes: list[int] = []
+    live: dict[int, np.ndarray] = {}
+    for tenant in range(20):
+        k = int(rng.integers(1, 6))
+        short = alloc.shortfall(k)
+        if short:
+            new = plan_extents(tuple(sizes), short, schedule)
+            sizes += new
+            alloc.grow(sum(new))
+        live[tenant] = alloc.claim(tenant, k)
+        if live and rng.random() < 0.4:
+            victim = int(rng.choice(list(live)))
+            alloc.release(live.pop(victim))
+        _check_round_trip(sizes)
+        assert sum(sizes) == alloc.n_slabs
+        held = np.concatenate(list(live.values())) if live else np.empty(0, int)
+        assert len(set(held.tolist())) == len(held)
+        ext, off = resolve_pages(jnp.asarray(held, jnp.int32)[None], tuple(sizes))
+        assert (np.asarray(ext) >= 0).all() and (np.asarray(off) >= 0).all()
+
+
+@given(st.lists(st.integers(min_value=1, max_value=16), min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_slab_tables_round_trip_property(sizes):
+    _check_round_trip(tuple(sizes))
+
+
+@given(
+    st.sampled_from(EXTENT_SCHEDULES),
+    st.lists(st.integers(min_value=1, max_value=7), min_size=1, max_size=12),
+)
+@settings(max_examples=25, deadline=None)
+def test_schedule_always_covers_shortfall(schedule, shorts):
+    sizes: list[int] = []
+    need = 0
+    for short in shorts:
+        sizes += plan_extents(tuple(sizes), short, schedule)
+        need += short
+        assert sum(sizes) >= need
+        assert all(s > 0 for s in sizes)
+        _check_round_trip(tuple(sizes))

@@ -182,3 +182,42 @@ def test_batch_engine_mamba_hybrid_arch():
     outs = be2.run_all([[1], [2, 3], [4, 5, 6, 7, 8]], 4)
     assert [len(o) for o in outs] == [5, 6, 9]
     be2.check_free_list()
+
+
+@pytest.mark.parametrize("schedule", ("doubling", "tz"))
+def test_batch_engine_extent_pool_matches_oracle_zero_copy(schedule):
+    """Segmented extent pool (ISSUE 7): token-for-token parity with the
+    ggarray oracle, and growth never memcpys a live pool byte."""
+    cfg, params = _setup()
+    T_new = 6
+    want = Engine(params, cfg, policy="ggarray", max_len=64).generate(
+        RAGGED_PROMPTS, max_new_tokens=T_new, temperature=0.0
+    )
+    be = BatchEngine(params, cfg, max_batch=8, grow_chunk=schedule)
+    rids = [be.submit(p, T_new) for p in RAGGED_PROMPTS]
+    out = be.run()
+    for i, rid in enumerate(rids):
+        assert out[rid] == want[i], f"request {i} diverged under {schedule}"
+    assert be.stats.pool_grow_events > 0, "fleet must have outgrown the seed"
+    assert be.stats.pool_copied_bytes == 0, "extent growth must never memcpy"
+    assert sum(s > 0 for s in be._extent_sizes) > 1
+    be.check_free_list()
+
+
+def test_batch_engine_growth_counts_reserved_slabs():
+    """In-flight chunked-prefill reservations are committed demand: doubling
+    growth sizes off live + reserved, so converting those reservations to
+    claims cannot trigger an immediate second grow.  With the accounting in
+    place, grow events stay O(log final slabs)."""
+    import math
+
+    cfg, params = _setup()
+    be = BatchEngine(params, cfg, max_batch=4, grow_chunk="doubling")
+    prompts = [list(range(1, 17)), list(range(3, 15)), list(range(2, 12))]
+    rids = [be.submit(p, 4) for p in prompts]
+    out = be.run()
+    assert all(len(out[r]) == len(p) + 4 for r, p in zip(rids, prompts))
+    total = sum(be._extent_sizes)
+    assert be.stats.pool_grow_events <= math.ceil(math.log2(max(total, 2))) + 1
+    assert be.stats.pool_copied_bytes == 0
+    be.check_free_list()
