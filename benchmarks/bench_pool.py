@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, emit, smoke_mode, write_json
+from benchmarks.common import Row, emit, smoke_mode, write_json, write_metrics_json
 from repro.configs import reduced
 from repro.models import transformer
 from repro.pool.extents import grow_extents, grow_flat, init_extent_pool, plan_extents
@@ -233,6 +233,13 @@ def main() -> None:
         "pool_capacity_advantage",
         (sum(caps) / live) / max(be.stats.peak_pool_tokens / max(peak_live, 1), 1e-9),
         "arena slots per ggarray slot at equal live data",
+    )
+
+    # --- telemetry artifact: full registry snapshots of the timed engines -
+    # check_regression.py --metrics gates TTFT p95 (chunked/monolithic) and
+    # pool utilization from this file; the rest is for diagnosis.
+    write_metrics_json(
+        "pool", {"chunked": be.obs.snapshot(), "monolithic": bm.obs.snapshot()}
     )
 
 

@@ -23,12 +23,29 @@ gated too:
   same-process self-normalizing ratio gated against the committed
   ``grow_step`` baseline with the same ``--tolerance``.
 
-``--update`` rewrites the baseline from the current artifact (a deliberate,
-reviewed re-tune — commit the diff).
+The telemetry artifact (``METRICS_pool.json``, registry snapshots of the
+timed engines — ISSUE 8) supplies two more self-normalizing gates:
+
+* ``ttft_p95_ratio`` — chunked ``serve.ttft_ms`` p95 over monolithic p95,
+  both from the same process; chunked admission exists to cut tail TTFT,
+  so this ratio drifting *up* past
+  ``max((1 + tolerance) · baseline, 0.5)`` fails (the absolute ceiling
+  absorbs timer jitter on a tiny baseline — the chunked tail p95 is tens
+  of ms in smoke mode — while still catching the real failure mode of
+  chunking ceasing to help, which drives the ratio toward 1);
+* ``utilization`` — chunked peak live tokens over peak pool capacity
+  (gauge high-water marks); dropping below
+  ``(1 − tolerance) · baseline`` means the pool got sparser.
+
+A missing metrics file or metric key fails, same as a missing bench row.
+
+``--update`` rewrites the baseline from the current artifacts (a
+deliberate, reviewed re-tune — commit the diff).
 
 Usage::
 
     python benchmarks/check_regression.py [--bench BENCH_pool.json]
+        [--metrics METRICS_pool.json]
         [--baseline benchmarks/baselines/pool_smoke.json]
         [--tolerance 0.2] [--update]
 """
@@ -40,6 +57,7 @@ import os
 import sys
 
 ABSOLUTE_FLOOR = 0.8  # ISSUE 6 acceptance: paged ≥ 0.8× ggarray seqs/s
+TTFT_ABS_CEILING = 0.5  # chunked TTFT p95 must stay < 0.5× monolithic's
 
 
 def _rows(path: str) -> dict[str, float]:
@@ -48,10 +66,28 @@ def _rows(path: str) -> dict[str, float]:
     return {r["name"]: r["us_per_call"] for r in payload["rows"]}
 
 
+def _telemetry(path: str) -> tuple[float, float] | str:
+    """(ttft_p95_ratio, utilization) from METRICS_pool.json, or an error."""
+    try:
+        with open(path) as f:
+            engines = json.load(f)["engines"]
+        chunked, mono = engines["chunked"], engines["monolithic"]
+        ttft_ratio = chunked["histograms"]["serve.ttft_ms"]["p95"] / max(
+            mono["histograms"]["serve.ttft_ms"]["p95"], 1e-12
+        )
+        util = chunked["gauges"]["pool.live_tokens"]["hwm"] / max(
+            chunked["gauges"]["pool.capacity_tokens"]["hwm"], 1
+        )
+    except (OSError, KeyError, TypeError) as e:
+        return f"{path}: {type(e).__name__}: {e}"
+    return ttft_ratio, util
+
+
 def main(argv: list[str] | None = None) -> int:
     here = os.path.dirname(os.path.abspath(__file__))
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bench", default="BENCH_pool.json")
+    ap.add_argument("--metrics", default="METRICS_pool.json")
     ap.add_argument(
         "--baseline", default=os.path.join(here, "baselines", "pool_smoke.json")
     )
@@ -92,6 +128,13 @@ def main(argv: list[str] | None = None) -> int:
         print(f"check_regression: {args.bench} is missing row {e}", file=sys.stderr)
         return 1
 
+    telemetry = _telemetry(args.metrics)
+    if isinstance(telemetry, str):
+        print(f"check_regression: telemetry gate unreadable — {telemetry}",
+              file=sys.stderr)
+        return 1
+    ttft_ratio, util = telemetry
+
     if args.update:
         os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
         with open(args.baseline, "w") as f:
@@ -103,6 +146,11 @@ def main(argv: list[str] | None = None) -> int:
                         "metric": "flat_over_extent_grow_p95_ratio",
                         "value": round(grow_ratio, 3),
                     },
+                    "telemetry": {
+                        "ttft_p95_ratio": round(ttft_ratio, 3),
+                        "utilization": round(util, 3),
+                        "source": "METRICS_pool.json",
+                    },
                     "source": "benchmarks/bench_pool.py --smoke",
                 },
                 f,
@@ -111,7 +159,8 @@ def main(argv: list[str] | None = None) -> int:
             f.write("\n")
         print(
             f"check_regression: baseline updated to {ratio:.3f} "
-            f"(grow-step ratio {grow_ratio:.3f})"
+            f"(grow-step ratio {grow_ratio:.3f}, ttft p95 ratio "
+            f"{ttft_ratio:.3f}, utilization {util:.3f})"
         )
         return 0
 
@@ -148,7 +197,28 @@ def main(argv: list[str] | None = None) -> int:
                 f"check_regression: FAIL — grow-step regression: {grow_verdict}"
             )
             return 1
-    print(f"check_regression: OK — {verdict}; {grow_verdict}")
+    tel_verdict = f"ttft p95 ratio {ttft_ratio:.3f}, utilization {util:.3f}"
+    tel_base = baseline.get("telemetry")
+    if tel_base is not None:
+        ttft_ceil = max(
+            (1.0 + args.tolerance) * tel_base["ttft_p95_ratio"], TTFT_ABS_CEILING
+        )
+        util_floor = (1.0 - args.tolerance) * tel_base["utilization"]
+        tel_verdict += (
+            f" (ttft ceiling {ttft_ceil:.3f}, utilization floor {util_floor:.3f})"
+        )
+        if ttft_ratio > ttft_ceil:
+            print(
+                "check_regression: FAIL — chunked TTFT tail regressed vs "
+                f"monolithic: {tel_verdict}"
+            )
+            return 1
+        if util < util_floor:
+            print(
+                f"check_regression: FAIL — pool utilization dropped: {tel_verdict}"
+            )
+            return 1
+    print(f"check_regression: OK — {verdict}; {grow_verdict}; {tel_verdict}")
     return 0
 
 

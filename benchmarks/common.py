@@ -14,7 +14,7 @@ from typing import Any, Callable
 
 import jax
 
-__all__ = ["timeit", "emit", "Row", "write_json", "smoke_mode"]
+__all__ = ["timeit", "emit", "Row", "write_json", "write_metrics_json", "smoke_mode"]
 
 
 def timeit(fn: Callable[[], Any], *, repeats: int = 5, warmup: int = 2) -> float:
@@ -60,6 +60,30 @@ def write_json(short_name: str, rows: list[tuple[str, float, str]]) -> str:
         "rows": [
             {"name": n, "us_per_call": us, "derived": d} for n, us, d in rows
         ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def write_metrics_json(short_name: str, snapshots: dict) -> str:
+    """Dump ``obs`` registry snapshots as ``METRICS_<short_name>.json``.
+
+    The telemetry companion to :func:`write_json`: while the rows carry the
+    headline numbers, the metrics artifact preserves the full counter/gauge/
+    histogram state of each engine the benchmark ran (keyed by a caller
+    label), so regressions can be diagnosed — and gated
+    (``check_regression.py --metrics``) — without rerunning the bench.
+    Written next to ``BENCH_<short_name>.json`` (``REPRO_BENCH_DIR``).
+    """
+    path = os.path.join(
+        os.environ.get("REPRO_BENCH_DIR", "."), f"METRICS_{short_name}.json"
+    )
+    payload = {
+        "benchmark": short_name,
+        "smoke": smoke_mode(),
+        "engines": snapshots,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -215,6 +215,15 @@ class CapacityPlanner:
         self.host_syncs += 1
         return cap_then - int(jax.device_get(flag))
 
+    def metrics(self) -> dict:
+        """Host-contact accounting as plain data (for ``obs`` gauge_fn hooks
+        — the planner stays importable without the telemetry layer)."""
+        return {
+            "planner.host_syncs": self.host_syncs,
+            "planner.grow_events": self.grow_events,
+            "planner.size_ub": self.size_ub,
+        }
+
     @staticmethod
     def _host_lane_counts(mask: Any, nblocks: int) -> "np.ndarray | None":
         """Per-block enabled-lane counts iff ``mask`` is host-known.

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import indexing
 from repro.kernels import common
+from repro.obs import MetricsRegistry
 from repro.kernels.flatten import kernel as flatten_kernel
 from repro.kernels.paged import ops as paged_ops
 from repro.pool import extents as extents_mod
@@ -160,6 +161,7 @@ class SlabArena:
         memory_space: str | None = None,
         dispatch: str = "auto",
         grow_chunk: int | str = 1,
+        registry: MetricsRegistry | None = None,
     ):
         """``initial_slabs`` pre-carves the pool at start (the high-water
         knob); ``grow_chunk`` is the growth policy on exhaustion:
@@ -194,18 +196,51 @@ class SlabArena:
         self.grow_chunk = grow_chunk
         # device mirrors of owners/bases, refreshed only when claims change
         self._tables_dev: tuple[jax.Array, jax.Array] | None = None
-        self.appends = 0
-        self.pool_grow_events = 0
-        self.table_grow_events = 0
-        self.peak_live_ub = 0
+        # metrics (DESIGN.md §9): counters/gauges in a registry, the legacy
+        # int attributes survive as read properties below.  Pool occupancy is
+        # registered as callback gauges so snapshots always see live values.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        reg = self.registry
+        reg.counter("arena.appends", "wave appends executed")
+        reg.counter("pool.grow_events", "pool capacity growth events")
+        reg.counter("pool.table_grow_events", "page-table widenings")
         # bytes of live pool data copied by growth: stays 0 under the extent
         # schedules (the zero-copy contract CI gates on), O(log n)·pool under
         # "geometric", O(grows)·pool under int chunking.
-        self.pool_copied_bytes = 0
+        reg.counter("pool.copied_bytes", "pool bytes memcpy'd by realloc growth")
+        reg.gauge("pool.live_tokens_ub", "host upper bound on live elements")
+        reg.gauge_fn("pool.host_syncs", lambda: self.planner.host_syncs,
+                     "planner device contacts")
+        reg.gauge_fn("pool.capacity_tokens", lambda: self.capacity_tokens)
+        reg.gauge_fn("pool.live_slabs", lambda: self.alloc.live_count)
+        reg.gauge_fn("pool.free_slabs", lambda: self.alloc.free_count)
+        reg.gauge_fn("pool.reserved_slabs", lambda: self.alloc.reserved_total)
+        reg.gauge_fn("pool.utilization", self.utilization)
 
     @property
     def alloc(self):
         return self.book.alloc
+
+    # ---- legacy stat attributes (reads of the registry) ------------------
+    @property
+    def appends(self) -> int:
+        return int(self.registry.counter("arena.appends").total())
+
+    @property
+    def pool_grow_events(self) -> int:
+        return int(self.registry.counter("pool.grow_events").total())
+
+    @property
+    def table_grow_events(self) -> int:
+        return int(self.registry.counter("pool.table_grow_events").total())
+
+    @property
+    def peak_live_ub(self) -> int:
+        return int(self.registry.gauge("pool.live_tokens_ub").hwm())
+
+    @property
+    def pool_copied_bytes(self) -> int:
+        return int(self.registry.counter("pool.copied_bytes").total())
 
     # ---- geometry --------------------------------------------------------
     @property
@@ -259,7 +294,7 @@ class SlabArena:
         self.arr = dataclasses.replace(
             self.arr, pages=jnp.concatenate([self.arr.pages, pad], axis=1)
         )
-        self.table_grow_events += 1
+        self.registry.counter("pool.table_grow_events").inc()
 
     def _ensure_slabs(self, k: int) -> None:
         short = self.book.shortfall(k)
@@ -277,14 +312,14 @@ class SlabArena:
             extra = growth_amount(
                 self.pool.n_slabs, short, self.grow_chunk, reserved=reserved
             )
-            self.pool_copied_bytes += (
+            self.registry.counter("pool.copied_bytes").inc(
                 self.pool.capacity_tokens
                 * int(np.prod(self.item_shape, dtype=np.int64))
                 * jnp.dtype(self.pool.dtype).itemsize
             )
             self.pool = extents_mod.grow_flat(self.pool, extra)
         self.book.grow(extra)
-        self.pool_grow_events += 1
+        self.registry.counter("pool.grow_events").inc()
 
     def _claim(self, per_tenant: np.ndarray) -> None:
         """Claim ``per_tenant[i]`` fresh slabs for each array (one scatter)."""
@@ -373,8 +408,8 @@ class SlabArena:
         self.pool = dataclasses.replace(self.pool, extents=new_exts)
         self.arr = dataclasses.replace(self.arr, sizes=sizes)
         self.planner.advance(counts)
-        self.appends += 1
-        self.peak_live_ub = max(self.peak_live_ub, self.live_tokens_ub)
+        self.registry.counter("arena.appends").inc()
+        self.registry.gauge("pool.live_tokens_ub").set(self.live_tokens_ub)
         return pos
 
     # ---- reclamation -----------------------------------------------------

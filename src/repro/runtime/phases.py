@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import ggarray as gg
 from repro.kernels.flatten import ops as flatten_ops
+from repro.obs import MetricsRegistry
 
 __all__ = ["Phase", "PhaseError", "FrozenArray", "FreezeStats", "TwoPhasePipeline"]
 
@@ -85,17 +86,18 @@ class FrozenArray:
         return jnp.arange(self.capacity) < self.size
 
 
-@dataclasses.dataclass
 class FreezeStats:
     """Lifecycle counters for benchmarks / engine accounting.
 
+    A thin read view over an ``obs`` metrics registry (DESIGN.md §9): the
+    legacy attribute names survive, each now reads a ``runtime.*`` metric.
     Counters the host knows for free (waves, phase switches, growths) are
-    plain ints.  ``elements_frozen`` is **lazy device-side**: each freeze
-    accumulates the live-count scalar with a device add and the total is
-    transferred only when the property is read — so freezing never forces a
-    host round-trip (the host-sync-free contract, DESIGN.md §2).
-    ``host_syncs`` counts the scalar device→host reads the growth protocol
-    actually issued (O(log n) per growth phase).
+    host-side counter increments.  ``elements_frozen`` is **lazy
+    device-side** (``Counter.add_lazy``): each freeze accumulates the
+    live-count scalar on device and the total is transferred only when the
+    property is read — so freezing never forces a host round-trip (the
+    host-sync-free contract, DESIGN.md §2).  ``host_syncs`` reads the live
+    planner/arena accounting (O(log n) scalar reads per growth phase).
 
     ``last_freeze_s`` is wall time of the most recent ``freeze()`` — the
     *first* freeze of a given bucket structure includes jit trace/compile
@@ -104,21 +106,57 @@ class FreezeStats:
     compare a repeat freeze of the same structure.
     """
 
-    appends: int = 0
-    grow_events: int = 0
-    freezes: int = 0
-    thaws: int = 0
-    host_syncs: int = 0
-    last_freeze_s: float = 0.0
-    total_freeze_s: float = 0.0
-    elements_frozen_dev: Any = 0  # int or device scalar; summed lazily
+    def __init__(
+        self,
+        registry: MetricsRegistry | None = None,
+        host_syncs_fn: Any = None,
+    ):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._host_syncs_fn = host_syncs_fn
+
+    def _ct(self, name: str) -> int:
+        return int(self.registry.counter(name).total())
+
+    @property
+    def appends(self) -> int:
+        return self._ct("runtime.appends")
+
+    @property
+    def grow_events(self) -> int:
+        return self._ct("runtime.grow_events")
+
+    @property
+    def freezes(self) -> int:
+        return self._ct("runtime.freezes")
+
+    @property
+    def thaws(self) -> int:
+        return self._ct("runtime.thaws")
+
+    @property
+    def host_syncs(self) -> int:
+        return int(self._host_syncs_fn()) if self._host_syncs_fn else 0
+
+    @property
+    def last_freeze_s(self) -> float:
+        return float(self.registry.gauge("runtime.last_freeze_s").value())
+
+    @property
+    def total_freeze_s(self) -> float:
+        return float(self.registry.counter("runtime.freeze_s").total())
 
     @property
     def elements_frozen(self) -> int:
         """Materialize the device-side accumulator (one explicit transfer)."""
-        if isinstance(self.elements_frozen_dev, jax.Array):
-            self.elements_frozen_dev = int(jax.device_get(self.elements_frozen_dev))
-        return self.elements_frozen_dev
+        return int(self.registry.counter("runtime.elements_frozen").total())
+
+    def __repr__(self) -> str:
+        host = ", ".join(
+            f"{n}={getattr(self, n)}"
+            for n in ("appends", "grow_events", "freezes", "thaws",
+                      "host_syncs", "last_freeze_s", "total_freeze_s")
+        )
+        return f"FreezeStats({host})"  # elements_frozen omitted: reading syncs
 
 
 class TwoPhasePipeline:
@@ -141,6 +179,7 @@ class TwoPhasePipeline:
         *,
         flatten_impl: str = "segmented",
         memory_space: str | None = None,
+        registry: MetricsRegistry | None = None,
     ):
         if flatten_impl not in FLATTEN_IMPLS:
             raise ValueError(f"flatten_impl {flatten_impl!r} not in {FLATTEN_IMPLS}")
@@ -150,7 +189,9 @@ class TwoPhasePipeline:
         self._phase = Phase.GROW
         self.flatten_impl = flatten_impl
         self.memory_space = memory_space
-        self.stats = FreezeStats()
+        self.stats = FreezeStats(
+            registry, host_syncs_fn=lambda: self._planner.host_syncs
+        )
         self._planner = gg.CapacityPlanner()  # fresh array: bound 0, no sync
 
     @classmethod
@@ -171,9 +212,8 @@ class TwoPhasePipeline:
         pipe._phase = Phase.GROW
         pipe.flatten_impl = flatten_impl
         pipe.memory_space = memory_space
-        pipe.stats = FreezeStats()
+        pipe.stats = FreezeStats(host_syncs_fn=lambda: pipe._planner.host_syncs)
         pipe._planner = gg.CapacityPlanner.for_array(arr)  # one seed read
-        pipe.stats.host_syncs = pipe._planner.host_syncs
         return pipe
 
     @classmethod
@@ -198,7 +238,11 @@ class TwoPhasePipeline:
         pipe._phase = Phase.GROW
         pipe.flatten_impl = "segmented"
         pipe.memory_space = arena.memory_space  # the arena owns the choice
-        pipe.stats = FreezeStats()
+        # share the arena's registry: pool.* and runtime.* metrics land in
+        # one snapshot (the arena's host-sync accounting backs host_syncs)
+        pipe.stats = FreezeStats(
+            arena.registry, host_syncs_fn=lambda: arena.host_syncs
+        )
         pipe._planner = None  # the arena's TenantPlanner owns the bounds
         return pipe
 
@@ -266,20 +310,21 @@ class TwoPhasePipeline:
         ``pipeline.array`` reference is dead after this call.
         """
         self._require(Phase.GROW, "append")
+        reg = self.stats.registry
         if self._arena is not None:
             before = self._arena.pool_grow_events
             pos = self._arena.append(elems, mask)
-            self.stats.grow_events += self._arena.pool_grow_events - before
-            self.stats.appends += 1
-            self.stats.host_syncs = self._arena.host_syncs
+            reg.counter("runtime.grow_events").inc(
+                self._arena.pool_grow_events - before
+            )
+            reg.counter("runtime.appends").inc()
             return pos
         before = self._gg.nbuckets
         self._gg = self._planner.reserve(self._gg, elems.shape[1], mask=mask)
-        self.stats.grow_events += self._gg.nbuckets - before
+        reg.counter("runtime.grow_events").inc(self._gg.nbuckets - before)
         self._gg, pos, headroom = gg.append(self._gg, elems, mask, method=method)
         self._planner.note_append(self._gg, headroom)
-        self.stats.appends += 1
-        self.stats.host_syncs = self._planner.host_syncs
+        reg.counter("runtime.appends").inc()
         return pos
 
     # ---- the handoff -----------------------------------------------------
@@ -306,20 +351,22 @@ class TwoPhasePipeline:
             data=flat, size=total.astype(jnp.int32), block_starts=starts
         )
         self._phase = Phase.FROZEN
-        self.stats.freezes += 1
-        # lazy device-side accumulation — no device_get per freeze (and no
-        # host scalar upload: the int 0 start is replaced, not added)
-        prev = self.stats.elements_frozen_dev
-        is_zero_int = not isinstance(prev, jax.Array) and prev == 0
-        self.stats.elements_frozen_dev = total if is_zero_int else prev + total
-        self.stats.last_freeze_s = dt
-        self.stats.total_freeze_s += dt
+        reg = self.stats.registry
+        reg.counter("runtime.freezes").inc()
+        # lazy device-side accumulation — no device_get per freeze; the
+        # scalar stays on device until the counter is read (one batched
+        # transfer for every pending freeze)
+        reg.counter("runtime.elements_frozen").add_lazy(total)
+        reg.gauge("runtime.last_freeze_s").set(dt)
+        reg.counter("runtime.freeze_s").inc(dt)
+        reg.histogram("runtime.freeze_ms", "freeze() wall-clock").observe(dt * 1e3)
         return self._frozen
 
     def thaw(self, *, rebalance: bool = False) -> gg.GGArray:
         """Re-enter GROW. Zero-copy by default (the bucket chain is intact);
         ``rebalance=True`` redistributes the frozen contents evenly instead."""
         self._require(Phase.FROZEN, "thaw")
+        t0 = time.perf_counter()
         if rebalance and self._arena is not None:
             raise PhaseError(
                 "arena-backed pipelines cannot rebalance on thaw: slabs are "
@@ -337,7 +384,11 @@ class TwoPhasePipeline:
             self._planner = planner
         self._frozen = None
         self._phase = Phase.GROW
-        self.stats.thaws += 1
+        reg = self.stats.registry
+        reg.counter("runtime.thaws").inc()
+        reg.histogram("runtime.thaw_ms", "thaw() wall-clock").observe(
+            (time.perf_counter() - t0) * 1e3
+        )
         return self._store
 
     # ---- FROZEN phase ----------------------------------------------------

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs import ServingTimeline
 from repro.serving import kvcache, scheduler as sched_mod, steps
 from repro.serving.sampler import sample
 
@@ -77,14 +78,39 @@ def _prefill_chunk_fn(cfg: ModelConfig):
     )
 
 
-@dataclasses.dataclass
-class EngineStats:
-    grow_events: int = 0
-    freeze_events: int = 0
-    copied_bytes: int = 0
-    allocated_bytes: int = 0
-    decode_steps: int = 0
-    compiles: int = 0
+class _StatsView:
+    """Base for the legacy ``*Stats`` surfaces: read-only properties over an
+    ``obs`` metrics registry.  The dataclass field names survive; the engine
+    writes the registry, the view computes on read — one source of truth.
+    """
+
+    def __init__(self, registry):
+        self._reg = registry
+
+    def _ct(self, name: str) -> int:
+        return int(self._reg.counter(name).total())
+
+    def _hwm(self, name: str) -> int:
+        return int(self._reg.gauge(name).hwm())
+
+    def __repr__(self) -> str:
+        fields = ", ".join(
+            f"{n}={getattr(self, n)}"
+            for n in dir(type(self))
+            if isinstance(getattr(type(self), n), property)
+        )
+        return f"{type(self).__name__}({fields})"
+
+
+class EngineStats(_StatsView):
+    """Legacy Engine counters — a thin view over ``engine.obs.registry``."""
+
+    grow_events = property(lambda s: s._ct("engine.grow_events"))
+    freeze_events = property(lambda s: s._ct("engine.freeze_events"))
+    copied_bytes = property(lambda s: s._ct("engine.copied_bytes"))
+    allocated_bytes = property(lambda s: s._ct("engine.allocated_bytes"))
+    decode_steps = property(lambda s: s._ct("engine.decode_steps"))
+    compiles = property(lambda s: s._ct("engine.compiles"))
 
 
 class Engine:
@@ -96,6 +122,7 @@ class Engine:
         policy: str | None = None,
         max_len: int = 4096,
         seed: int = 0,
+        obs: ServingTimeline | None = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -107,8 +134,16 @@ class Engine:
             )
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
-        self.stats = EngineStats()
+        self.obs = obs if obs is not None else ServingTimeline()
+        self.stats = EngineStats(self.obs.registry)
         self._decode_compiled: dict[Any, Any] = {}
+
+    def _host_read(self, x, site: str):
+        """The audited device→host read: every transfer lands in one metric."""
+        self.obs.registry.counter(
+            "serve.host_syncs", "device→host reads, by site"
+        ).inc(site=site)
+        return jax.device_get(x)
 
     # -- capacity of the current cache (seq slots) -------------------------
     def _capacity(self, caches) -> int:
@@ -118,8 +153,10 @@ class Engine:
         return 1 << 30  # attention-free: no cache capacity limit
 
     def _grow(self, caches) -> list:
-        """Policy growth event; updates stats with alloc/copy volumes."""
-        self.stats.grow_events += 1
+        """Policy growth event; updates metrics with alloc/copy volumes."""
+        reg = self.obs.registry
+        reg.counter("engine.grow_events").inc()
+        self.obs.event("grow", policy=self.policy)
         cfg = self.cfg
         out = []
         for slot, kind in enumerate(cfg.layout):
@@ -129,15 +166,19 @@ class Engine:
                 continue
             if self.policy == "ggarray":
                 grown = kvcache.grow_ggarray(c, cfg)
-                self.stats.allocated_bytes += kvcache.cache_bytes(grown) - kvcache.cache_bytes(c)
+                reg.counter("engine.allocated_bytes").inc(
+                    kvcache.cache_bytes(grown) - kvcache.cache_bytes(c)
+                )
                 out.append(grown)
             elif self.policy == "two_phase":
                 # thaw → add a bucket (copy-free) → refreeze for flat decode.
                 grown = kvcache.grow_ggarray(kvcache.thaw_cache(c, cfg.cache_b0), cfg)
                 frozen = kvcache.freeze_cache(grown)
-                self.stats.copied_bytes += kvcache.cache_bytes(c)
-                self.stats.allocated_bytes += kvcache.cache_bytes(frozen) - kvcache.cache_bytes(c)
-                self.stats.freeze_events += 1
+                reg.counter("engine.copied_bytes").inc(kvcache.cache_bytes(c))
+                reg.counter("engine.allocated_bytes").inc(
+                    kvcache.cache_bytes(frozen) - kvcache.cache_bytes(c)
+                )
+                reg.counter("engine.freeze_events").inc()
                 out.append(frozen)
             elif self.policy == "semistatic":
                 old_k, old_v = c["k"], c["v"]
@@ -147,8 +188,10 @@ class Engine:
                 # THE copy (realloc semantics — what GGArray avoids)
                 new_k = jax.lax.dynamic_update_slice_in_dim(new_k, old_k, 0, axis=old_k.ndim - 3)
                 new_v = jax.lax.dynamic_update_slice_in_dim(new_v, old_v, 0, axis=old_v.ndim - 3)
-                self.stats.allocated_bytes += kvcache.cache_bytes({"k": new_k, "v": new_v})
-                self.stats.copied_bytes += kvcache.cache_bytes(c)
+                reg.counter("engine.allocated_bytes").inc(
+                    kvcache.cache_bytes({"k": new_k, "v": new_v})
+                )
+                reg.counter("engine.copied_bytes").inc(kvcache.cache_bytes(c))
                 out.append(dict(c, k=new_k, v=new_v))
             else:
                 raise RuntimeError("static cache cannot grow: pre-allocate max_len")
@@ -164,7 +207,7 @@ class Engine:
         """
         key = jax.tree.structure((caches,))
         if key not in self._decode_compiled:
-            self.stats.compiles += 1
+            self.obs.registry.counter("engine.compiles").inc()
             cfg = self.cfg
 
             @functools.partial(jax.jit, donate_argnums=(2,))
@@ -202,10 +245,10 @@ class Engine:
                 kvcache.freeze_cache(c) if kind == "attn" else c
                 for c, kind in zip(caches, cfg.layout)
             ]
-            self.stats.freeze_events += 1
-        self.stats.allocated_bytes += sum(
+            self.obs.registry.counter("engine.freeze_events").inc()
+        self.obs.registry.counter("engine.allocated_bytes").inc(sum(
             kvcache.cache_bytes(c) for c, k in zip(caches, cfg.layout) if k == "attn"
-        )
+        ))
         lengths = jnp.asarray(lens)
         # Host mirror of the longest live context: decode appends exactly one
         # slot per step, so the growth check is pure host arithmetic — the
@@ -223,11 +266,11 @@ class Engine:
             logits, caches = fn(self.params, sampled[-1], caches, lengths)
             lengths = lengths + 1
             max_len_host += 1
-            self.stats.decode_steps += 1
+            self.obs.registry.counter("engine.decode_steps").inc()
             self.key, k = jax.random.split(self.key)
             sampled.append(sample(k, logits, temperature))
         # one transfer for the whole generation, after the loop dispatched
-        tokens = np.asarray(jax.device_get(jnp.stack(sampled)))  # (T, B)
+        tokens = np.asarray(self._host_read(jnp.stack(sampled), "token_drain"))  # (T, B)
         for i in range(B):
             out[i].extend(int(t) for t in tokens[:, i])
         return out
@@ -250,25 +293,39 @@ class Request:
     first_tok: Any = None  # device scalar — materialized once, at the end
     done: bool = False
     submit_t: float = 0.0  # host wall-clock at submit()
+    queue_wait: float = 0.0  # submit → admission (seconds)
     ttft: float = 0.0  # submit → first sampled token (dispatch wall-clock)
+    decode_s: float = 0.0  # wall-clock spent in decode steps this req was in
+    tpot_ms: float = 0.0  # decode_s / (generated − 1), set at completion
 
 
-@dataclasses.dataclass
-class BatchStats:
-    admitted: int = 0
-    completed: int = 0
-    prefills: int = 0
-    prefill_chunks: int = 0  # chunked-admission kernels launched
-    prefill_traces: int = 0  # distinct (width, pool, table) trace keys seen
-    decode_steps: int = 0
-    pool_grow_events: int = 0
-    pool_copied_bytes: int = 0  # bytes memcpy'd by realloc growth (0 = extents)
-    grown_slabs: int = 0
-    reused_slabs: int = 0
-    released_slabs: int = 0
-    peak_live_tokens: int = 0
-    peak_pool_tokens: int = 0
-    host_syncs: int = 0  # device→host reads (stop-token checks only)
+class BatchStats(_StatsView):
+    """Legacy BatchEngine counters — a thin view over ``be.obs.registry``.
+
+    The field names of the old dataclass survive unchanged; each is now a
+    read of the metrics registry (DESIGN.md §9 catalog), so the legacy view
+    and the telemetry snapshot agree by construction.  ``peak_*`` are gauge
+    high-water marks; ``host_syncs`` is the total across *every* audited
+    device→host read site (``serve.host_syncs{site=…}``), not just the
+    stop-token drain.
+    """
+
+    admitted = property(lambda s: s._ct("serve.admitted"))
+    completed = property(lambda s: s._ct("serve.completed"))
+    prefills = property(lambda s: s._ct("serve.prefills"))
+    prefill_chunks = property(lambda s: s._ct("serve.prefill_chunks"))
+    prefill_traces = property(
+        lambda s: int(s._reg.gauge("serve.prefill_traces").value())
+    )
+    decode_steps = property(lambda s: s._ct("serve.decode_steps"))
+    pool_grow_events = property(lambda s: s._ct("pool.grow_events"))
+    pool_copied_bytes = property(lambda s: s._ct("pool.copied_bytes"))
+    grown_slabs = property(lambda s: s._ct("pool.grown_slabs"))
+    reused_slabs = property(lambda s: s._ct("pool.reused_slabs"))
+    released_slabs = property(lambda s: s._ct("pool.released_slabs"))
+    peak_live_tokens = property(lambda s: s._hwm("pool.live_tokens"))
+    peak_pool_tokens = property(lambda s: s._hwm("pool.capacity_tokens"))
+    host_syncs = property(lambda s: s._ct("serve.host_syncs"))
 
 
 class BatchEngine:
@@ -349,6 +406,7 @@ class BatchEngine:
         initial_slabs: int = 0,
         max_pages_hint: int = 0,
         seed: int = 0,
+        obs: ServingTimeline | None = None,
     ):
         from repro.pool import PageBook, is_extent_schedule
 
@@ -368,7 +426,8 @@ class BatchEngine:
         self.stop_token = stop_token
         self.admission = admission
         self.key = jax.random.PRNGKey(seed)
-        self.stats = BatchStats()
+        self.obs = obs if obs is not None else ServingTimeline()
+        self.stats = BatchStats(self.obs.registry)
         # shared host bookkeeping (same object the arena uses): allocator +
         # per-slot page counts + slab→page mapping + table-width policy
         self.book = PageBook(max_batch, quota_slabs=quota_slabs)
@@ -405,19 +464,64 @@ class BatchEngine:
             self.sched = sched_mod.Scheduler(
                 self.book, slab_tokens=self.T, chunk=C,
                 exact_tail=hybrid, max_chunks_per_step=max_chunks_per_step,
+                obs=self.obs,
             )
         # pre-carve: pool capacity / table width paid at init (not counted as
         # growth events — growth stats measure *demand*-driven reallocs)
         if max_pages_hint:
             self._ensure_table_width(max_pages_hint)
         if initial_slabs:
-            self._grow_pool(initial_slabs)
-            self.stats.pool_grow_events = 0
-            self.stats.grown_slabs = 0
+            self._grow_pool(initial_slabs, count=False)
 
     @property
     def alloc(self):
         return self.book.alloc
+
+    # ---- telemetry helpers ----------------------------------------------
+    def _host_read(self, x, site: str):
+        """The audited device→host read: every transfer lands in one metric
+        (``serve.host_syncs{site=…}``), so ``stats.host_syncs`` counts *all*
+        sites — stop drains, final stream drains, debug checks — not just
+        the stop-token path.
+        """
+        self.obs.registry.counter(
+            "serve.host_syncs", "device→host reads, by site"
+        ).inc(site=site)
+        return jax.device_get(x)
+
+    def _sample_live(self) -> None:
+        """Refresh the pool occupancy gauges (host arithmetic only).
+
+        Live tokens include the already-prefilled prefix of in-flight
+        chunked admissions (``sched.t0``): those K/V rows occupy pool slabs
+        even though the slot's published length is still 0, so the true
+        high-water mark (``peak_live_tokens``) must see them.
+        """
+        live = self.live_tokens
+        if self.sched is not None:
+            live += sum(int(self.sched.t0[s]) for s in self.sched.prefilling)
+        cap = self.pool_tokens
+        self.obs.gauge_sample("pool.live_tokens", live)
+        self.obs.gauge_sample("pool.capacity_tokens", cap)
+        self.obs.gauge_sample("pool.utilization", live / cap if cap else 0.0)
+
+    def _note_admitted(self, req: Request, slot: int) -> None:
+        req.queue_wait = time.time() - req.submit_t
+        self.obs.registry.counter("serve.admitted").inc()
+        self.obs.registry.histogram(
+            "serve.queue_wait_ms", "submit → admission wall-clock"
+        ).observe(req.queue_wait * 1e3, rid=req.rid)
+        self.obs.event("admit", rid=req.rid, slot=slot)
+
+    def _note_first_token(self, req: Request) -> None:
+        """Record TTFT exactly once; the histogram sample and the timeline
+        event carry the same float, so the acceptance test reconciles them
+        by equality, not tolerance."""
+        req.ttft = time.time() - req.submit_t
+        self.obs.registry.histogram(
+            "serve.ttft_ms", "submit → first sampled token (dispatch)"
+        ).observe(req.ttft * 1e3, rid=req.rid)
+        self.obs.event("first_token", rid=req.rid, ttft_ms=req.ttft * 1e3)
 
     # ---- cache construction ---------------------------------------------
     def _init_caches(self) -> list:
@@ -458,24 +562,30 @@ class BatchEngine:
         return [i for i, kind in enumerate(self.cfg.layout) if kind == "attn"]
 
     # ---- pool / page-table management -----------------------------------
-    def _grow_pool(self, extra: int) -> None:
+    def _grow_pool(self, extra: int, *, count: bool = True) -> None:
         """Add ≥ ``extra`` slabs of pool capacity.
 
         Flat layout: realloc — widen every pool array by ``extra`` slabs and
         **copy** the live bytes (counted in ``stats.pool_copied_bytes``).
         Extent layout: append fresh extent(s) per the schedule's plan —
         existing extents keep their device buffers, zero bytes copied.
+        ``count=False`` (init pre-carve) skips the growth-event counters:
+        growth stats measure demand-driven reallocs, not paid-up-front
+        capacity.
         """
         if self._extent_mode:
             from repro.pool import plan_extents
 
             self._append_extents(
-                plan_extents(tuple(self._extent_sizes), extra, self.grow_chunk)
+                plan_extents(tuple(self._extent_sizes), extra, self.grow_chunk),
+                count=count,
             )
             return
 
         def widen(pool):
-            self.stats.pool_copied_bytes += pool.size * pool.dtype.itemsize
+            self.obs.registry.counter("pool.copied_bytes").inc(
+                pool.size * pool.dtype.itemsize
+            )
             pad = jnp.zeros((pool.shape[0], extra, *pool.shape[2:]), pool.dtype)
             return jnp.concatenate([pool, pad], axis=1)
 
@@ -484,9 +594,9 @@ class BatchEngine:
             for key in ("k_pool", "v_pool", "ks_pool", "vs_pool"):
                 if key in c:
                     c[key] = widen(c[key])
-        self._finish_grow(extra)
+        self._finish_grow(extra, count=count)
 
-    def _append_extents(self, sizes: list[int]) -> None:
+    def _append_extents(self, sizes: list[int], *, count: bool = True) -> None:
         """Zero-copy growth: append fresh extents to every pool tuple."""
         sizes = [s for s in sizes if s > 0]
         if not sizes:
@@ -510,16 +620,16 @@ class BatchEngine:
                     )
                 c[key] = tuple(exts)
         self._extent_sizes = [self._extent_sizes[j] for j in keep] + sizes
-        self._finish_grow(sum(sizes))
+        self._finish_grow(sum(sizes), count=count)
 
-    def _finish_grow(self, extra: int) -> None:
+    def _finish_grow(self, extra: int, *, count: bool = True) -> None:
         self.book.grow(extra)
         self.free_dev = jnp.concatenate([self.free_dev, jnp.ones((extra,), bool)])
-        self.stats.pool_grow_events += 1
-        self.stats.grown_slabs += extra
-        self.stats.peak_pool_tokens = max(
-            self.stats.peak_pool_tokens, self.pool_tokens
-        )
+        if count:
+            self.obs.registry.counter("pool.grow_events").inc()
+            self.obs.registry.counter("pool.grown_slabs").inc(extra)
+            self.obs.event("pool_grow", slabs=extra, n_slabs=self.alloc.n_slabs)
+        self._sample_live()
 
     def _grow_for(self, short: int) -> None:
         """Cover a free-list shortfall, sized by the growth schedule.
@@ -566,7 +676,9 @@ class BatchEngine:
             self._grow_for(short)
         before_reuse = self.alloc.reuse_claims
         ids, page0 = self.book.claim(slot, k)
-        self.stats.reused_slabs += self.alloc.reuse_claims - before_reuse
+        self.obs.registry.counter("pool.reused_slabs").inc(
+            self.alloc.reuse_claims - before_reuse
+        )
         cols = jnp.arange(page0, page0 + k)
         dev_ids = jnp.asarray(ids)
         for i in self._attn_slots():
@@ -584,7 +696,8 @@ class BatchEngine:
             c["pages"] = c["pages"].at[:, slot, :].set(-1)
         self._len_host[slot] = 0
         self.lengths = self.lengths.at[slot].set(0)
-        self.stats.released_slabs += len(ids)
+        self.obs.registry.counter("pool.released_slabs").inc(len(ids))
+        self._sample_live()
 
     @property
     def pool_tokens(self) -> int:
@@ -606,6 +719,8 @@ class BatchEngine:
             submit_t=time.time(),
         )
         self._requests[rid] = req
+        self.obs.registry.counter("serve.submitted").inc()
+        self.obs.event("submit", rid=rid, prompt_len=len(req.prompt))
         if self.sched is not None:
             self.sched.submit(rid, len(req.prompt))
         else:
@@ -615,12 +730,14 @@ class BatchEngine:
     def _admit(self, req: Request, slot: int) -> None:
         cfg = self.cfg
         Lp = len(req.prompt)
+        self._note_admitted(req, slot)
         self._claim(slot, max(-(-Lp // self.T), 1))
-        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
-        logits, pcaches = steps.prefill(
-            self.params, toks, cfg, capacity_hint=Lp, policy="static"
-        )
-        self.stats.prefills += 1
+        with self.obs.span("prefill", rid=req.rid, tokens=Lp):
+            toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+            logits, pcaches = steps.prefill(
+                self.params, toks, cfg, capacity_hint=Lp, policy="static"
+            )
+        self.obs.registry.counter("serve.prefills").inc()
         for i, kind in enumerate(cfg.layout):
             if kind == "mamba":
                 for key in ("conv", "ssd"):
@@ -639,19 +756,16 @@ class BatchEngine:
             self._fill_slot_pages(i, slot, pcaches[i], Lp)
         self.lengths = self.lengths.at[slot].set(Lp)
         self._len_host[slot] = Lp
-        self.stats.peak_live_tokens = max(
-            self.stats.peak_live_tokens, self.live_tokens
-        )
+        self._sample_live()
         self.key, k = jax.random.split(self.key)
         first = sample(k, logits, 0.0)[0]
         req.first_tok = first
-        req.ttft = time.time() - req.submit_t
+        self._note_first_token(req)
         self.cur_tok = self.cur_tok.at[slot].set(first)
         req.slot = slot
         req.admit_step = len(self._stream)
         req.generated = 1
         self._slots[slot] = req
-        self.stats.admitted += 1
         if req.generated >= req.max_new_tokens:
             self._complete(req)
 
@@ -702,7 +816,13 @@ class BatchEngine:
         if self.sched is not None:
             self.sched.complete(req.slot)
         self._slots[req.slot] = None
-        self.stats.completed += 1
+        self.obs.registry.counter("serve.completed").inc()
+        if req.generated > 1:
+            req.tpot_ms = req.decode_s / (req.generated - 1) * 1e3
+            self.obs.registry.histogram(
+                "serve.tpot_ms", "mean decode wall-clock per output token"
+            ).observe(req.tpot_ms, rid=req.rid)
+        self.obs.event("complete", rid=req.rid, generated=req.generated)
 
     # ---- chunked admission ----------------------------------------------
     def _ensure_free_slabs(self, short: int) -> bool:
@@ -717,7 +837,9 @@ class BatchEngine:
         if task.new_slabs:
             before = self.alloc.reuse_claims
             ids, _ = self.book.claim(slot, task.new_slabs, from_reservation=True)
-            self.stats.reused_slabs += self.alloc.reuse_claims - before
+            self.obs.registry.counter("pool.reused_slabs").inc(
+                self.alloc.reuse_claims - before
+            )
             self.free_dev = self.free_dev.at[jnp.asarray(ids)].set(False)
         row = np.full((self.book.max_pages,), -1, np.int32)
         order = self.book.pages_in_order(slot)
@@ -728,14 +850,20 @@ class BatchEngine:
         key = (task.width, first, self.alloc.n_slabs, self.book.max_pages)
         if key not in self._trace_keys:
             self._trace_keys.add(key)
-            self.stats.prefill_traces = len(self._trace_keys)
-        logits, self.caches = _prefill_chunk_fn(self.cfg)(
-            self.params, jnp.asarray(toks), self.caches,
-            jnp.asarray(slot, jnp.int32), jnp.asarray(task.t0, jnp.int32),
-            jnp.asarray(task.live, jnp.int32), jnp.asarray(row), first=first,
-        )
-        self.stats.prefill_chunks += 1
+            self.obs.registry.gauge(
+                "serve.prefill_traces", "distinct prefill-chunk trace keys"
+            ).set(len(self._trace_keys))
+        with self.obs.span(
+            "prefill_chunk", rid=task.rid, t0=task.t0, width=task.width
+        ):
+            logits, self.caches = _prefill_chunk_fn(self.cfg)(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(task.t0, jnp.int32),
+                jnp.asarray(task.live, jnp.int32), jnp.asarray(row), first=first,
+            )
+        self.obs.registry.counter("serve.prefill_chunks").inc()
         self.sched.chunk_done(task)
+        self._sample_live()
         if task.final:
             self._finish_prefill(req, slot, logits)
 
@@ -750,14 +878,12 @@ class BatchEngine:
         Lp = len(req.prompt)
         self.lengths = self.lengths.at[slot].set(Lp)
         self._len_host[slot] = Lp
-        self.stats.prefills += 1
-        self.stats.peak_live_tokens = max(
-            self.stats.peak_live_tokens, self.live_tokens
-        )
+        self.obs.registry.counter("serve.prefills").inc()
+        self._sample_live()
         self.key, k = jax.random.split(self.key)
         first = sample(k, logits, 0.0)[0]
         req.first_tok = first
-        req.ttft = time.time() - req.submit_t
+        self._note_first_token(req)
         self.cur_tok = self.cur_tok.at[slot].set(first)
         req.admit_step = len(self._stream)
         req.generated = 1
@@ -772,7 +898,7 @@ class BatchEngine:
                 req.slot = slot
                 self._slots[slot] = req
                 self._ensure_table_width(need)
-                self.stats.admitted += 1
+                self._note_admitted(req, slot)
             return
         for slot in range(self.B):
             if not self._pending:
@@ -823,12 +949,17 @@ class BatchEngine:
             active_mask = jnp.asarray(act)
         else:
             active_mask = None
-        logits, self.caches = self._decode(
-            self.params, self.cur_tok, self.caches, self.lengths,
-            active=active_mask,
-        )
-        self.key, k = jax.random.split(self.key)
-        sampled = sample(k, logits, 0.0)
+        step_t0 = time.perf_counter()
+        with self.obs.span(
+            "decode_step", step=len(self._stream), active=len(active)
+        ):
+            logits, self.caches = self._decode(
+                self.params, self.cur_tok, self.caches, self.lengths,
+                active=active_mask,
+            )
+            self.key, k = jax.random.split(self.key)
+            sampled = sample(k, logits, 0.0)
+        step_dt = time.perf_counter() - step_t0
         self._stream.append(sampled)
         self.cur_tok = sampled
         mask = np.zeros((self.B,), np.int32)
@@ -836,16 +967,15 @@ class BatchEngine:
             mask[req.slot] = 1
         self.lengths = self.lengths + jnp.asarray(mask)
         self._len_host += mask
-        self.stats.decode_steps += 1
-        self.stats.peak_live_tokens = max(
-            self.stats.peak_live_tokens, self.live_tokens
-        )
+        self.obs.registry.counter("serve.decode_steps").inc()
+        self._sample_live()
         stops = None
         if self.stop_token is not None:
-            stops = np.asarray(jax.device_get(sampled))  # one (B,) read/step
-            self.stats.host_syncs += 1
+            # one (B,) read per step — the price of stop-token scheduling
+            stops = np.asarray(self._host_read(sampled, "stop_drain"))
         for req in active:
             req.generated += 1
+            req.decode_s += step_dt
             hit_stop = stops is not None and stops[req.slot] == self.stop_token
             if req.generated >= req.max_new_tokens or hit_stop:
                 self._complete(req)
@@ -870,10 +1000,10 @@ class BatchEngine:
         firsts = {}
         if rids:
             stack = jnp.stack([self._requests[r].first_tok for r in rids])
-            vals = np.asarray(jax.device_get(stack))
+            vals = np.asarray(self._host_read(stack, "first_token_drain"))
             firsts = {r: int(v) for r, v in zip(rids, vals)}
         stream = (
-            np.asarray(jax.device_get(jnp.stack(self._stream)))
+            np.asarray(self._host_read(jnp.stack(self._stream), "stream_drain"))
             if self._stream
             else np.zeros((0, self.B), np.int32)
         )
@@ -897,7 +1027,7 @@ class BatchEngine:
     # ---- verification (test/debug only: reads the device) ----------------
     def check_free_list(self) -> None:
         """Device bitmap ⇔ host allocator ⇔ page-table consistency."""
-        free = np.asarray(jax.device_get(self.free_dev))
+        free = np.asarray(self._host_read(self.free_dev, "free_list_debug"))
         assert (free == self.alloc.free).all(), "device free bitmap drifted"
         self.alloc.check()
         # chunked prefills hold claimed slabs the device table doesn't list
@@ -908,7 +1038,7 @@ class BatchEngine:
             else 0
         )
         for i in self._attn_slots():
-            pages = np.asarray(jax.device_get(self.caches[i]["pages"]))[0]
+            pages = np.asarray(self._host_read(self.caches[i]["pages"], "free_list_debug"))[0]
             claimed = pages[pages >= 0]
             assert len(claimed) == len(set(claimed.tolist())), "double assign"
             assert not free[claimed].any() if len(claimed) else True

@@ -40,6 +40,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.obs import ServingTimeline
 from repro.pool import PageBook, QuotaExceeded
 
 __all__ = ["Scheduler", "ChunkTask", "bucket_widths", "bucket_for"]
@@ -84,6 +85,7 @@ class _Waiting:
     rid: int
     length: int
     skips: int = 0
+    submit_tick: int = 0  # scheduler tick (admit() round) at submission
 
 
 class Scheduler:
@@ -99,8 +101,10 @@ class Scheduler:
         exact_tail: bool = False,
         max_chunks_per_step: int | None = None,
         starvation_limit: int = 4,
+        obs: ServingTimeline | None = None,
     ):
         self.book = book
+        self.obs = obs if obs is not None else ServingTimeline()
         self.T = slab_tokens
         self.C = chunk
         self.buckets = (
@@ -121,6 +125,7 @@ class Scheduler:
         self.length = np.zeros((B,), np.int64)
         self.pending: collections.deque[_Waiting] = collections.deque()
         self._prefillq: collections.deque[int] = collections.deque()
+        self.tick = 0  # completed admit() rounds — the queue-wait clock
 
     # ---- queries ---------------------------------------------------------
     @property
@@ -141,7 +146,7 @@ class Scheduler:
 
     # ---- lifecycle -------------------------------------------------------
     def submit(self, rid: int, length: int) -> None:
-        self.pending.append(_Waiting(rid, length))
+        self.pending.append(_Waiting(rid, length, submit_tick=self.tick))
 
     def admit(
         self, ensure: Callable[[int], bool] | None = None
@@ -171,9 +176,17 @@ class Scheduler:
             short = self.book.shortfall(need)
             if short and not (ensure is not None and ensure(short)):
                 w.skips += 1
+                self.obs.registry.counter(
+                    "sched.starvation_skips", "waiters passed over for slabs"
+                ).inc()
+                self.obs.event("starve_skip", rid=w.rid, skips=w.skips)
                 survivors.append(w)
                 if len(survivors) == 1 and w.skips >= self.starvation_limit:
                     blocked = True  # aged head: no more skip-ahead past it
+                    self.obs.registry.counter(
+                        "sched.head_blocks", "aged head halted skip-ahead"
+                    ).inc()
+                    self.obs.event("head_block", rid=w.rid)
                 continue
             try:
                 self.book.reserve(slot, need)
@@ -188,8 +201,12 @@ class Scheduler:
             self.t0[slot] = 0
             self.length[slot] = w.length
             self._prefillq.append(slot)
+            self.obs.registry.histogram(
+                "sched.queue_wait_ticks", "admit() rounds waited in queue"
+            ).observe(self.tick - w.submit_tick, rid=w.rid)
             out.append((w.rid, slot, need))
         self.pending = survivors
+        self.tick += 1
         return out
 
     def next_chunks(self) -> list[ChunkTask]:

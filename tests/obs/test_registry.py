@@ -1,0 +1,99 @@
+"""Metrics registry: counters/gauges/histograms, labels, lazy device drains."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import MetricsRegistry
+
+
+def test_counter_labels_are_series():
+    reg = MetricsRegistry()
+    c = reg.counter("serve.host_syncs")
+    c.inc(site="stop_drain")
+    c.inc(site="stop_drain")
+    c.inc(3, site="stream_drain")
+    assert c.value(site="stop_drain") == 2
+    assert c.value(site="stream_drain") == 3
+    assert c.value(site="never") == 0
+    assert c.total() == 5
+    snap = reg.snapshot()["counters"]
+    assert snap["serve.host_syncs{site=stop_drain}"] == 2
+    assert snap["serve.host_syncs{site=stream_drain}"] == 3
+
+
+def test_counter_lazy_device_scalars_drain_once(monkeypatch):
+    """add_lazy keeps scalars on device; reading drains ALL of them with one
+    device_get — the registry-level host-sync-free contract."""
+    reg = MetricsRegistry()
+    c = reg.counter("runtime.elements_frozen")
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    c.add_lazy(jnp.int32(10))
+    c.add_lazy(jnp.int32(20))
+    c.add_lazy(jnp.int32(12))
+    assert calls == [], "recording must not touch the host"
+    assert c.total() == 42
+    assert len(calls) == 1, "three pending scalars must drain in one transfer"
+    assert c.total() == 42  # already drained: no second transfer
+    assert len(calls) == 1
+
+
+def test_gauge_tracks_high_water_mark():
+    reg = MetricsRegistry()
+    g = reg.gauge("pool.live_tokens")
+    for v in (3, 11, 7, 0):
+        g.set(v)
+    assert g.value() == 0
+    assert g.hwm() == 11
+    snap = reg.snapshot()["gauges"]["pool.live_tokens"]
+    assert snap == {"value": 0, "hwm": 11}
+
+
+def test_gauge_fn_reads_live_callback():
+    reg = MetricsRegistry()
+    state = {"syncs": 0}
+    reg.gauge_fn("pool.host_syncs", lambda: state["syncs"])
+    state["syncs"] = 7
+    assert reg.snapshot()["gauges"]["pool.host_syncs"]["value"] == 7
+
+
+def test_histogram_quantiles_and_series():
+    reg = MetricsRegistry()
+    h = reg.histogram("serve.ttft_ms")
+    for i, v in enumerate([10.0, 20.0, 30.0, 40.0]):
+        h.observe(v, rid=i % 2)
+    assert h.count() == 4
+    assert h.values(rid=0) == [10.0, 30.0]
+    assert h.quantile(0.5) == pytest.approx(25.0)
+    snap = reg.snapshot()["histograms"]["serve.ttft_ms"]
+    assert snap["count"] == 4 and snap["max"] == 40.0
+    assert snap["series"]["serve.ttft_ms{rid=1}"]["count"] == 2
+    with pytest.raises(ValueError):
+        h.quantile(0.5, rid=99)
+
+
+def test_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+    with pytest.raises(TypeError):
+        reg.gauge_fn("x", lambda: 0)
+
+
+def test_get_or_create_returns_same_object():
+    reg = MetricsRegistry()
+    assert reg.counter("a") is reg.counter("a")
+    assert reg.names() == ["a"]
+
+
+def test_snapshot_is_json_safe():
+    import json
+
+    reg = MetricsRegistry()
+    reg.counter("c").inc(2)
+    reg.gauge("g").set(1.5)
+    reg.histogram("h").observe(3.0)
+    json.dumps(reg.snapshot())  # must not raise (no numpy scalars leak)

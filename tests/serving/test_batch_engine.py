@@ -83,7 +83,14 @@ def test_batch_engine_serves_ragged_fleet_within_pool_bound():
         f"pool {be.stats.peak_pool_tokens} ≥ bound {bound}"
     )
     assert be.stats.reused_slabs > 0, "completed sequences' slabs must recycle"
-    assert be.stats.host_syncs == 0, "scheduling must be host-sync-free"
+    # scheduling itself is host-sync-free: no stop-token drain ever fired;
+    # the only device→host reads are the two final run() drains (the token
+    # stream + the per-request first tokens), all audited by site.
+    syncs = be.obs.registry.counter("serve.host_syncs")
+    assert syncs.value(site="stop_drain") == 0, "must be host-sync-free"
+    assert syncs.value(site="stream_drain") == 1
+    assert syncs.value(site="first_token_drain") == 1
+    assert be.stats.host_syncs == 2 == syncs.total()
     be.check_free_list()
 
 

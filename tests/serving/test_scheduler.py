@@ -161,6 +161,56 @@ def test_reservation_shields_prefill_from_decode_growth():
     book.alloc.check()
 
 
+# ------------------------------------------------------------- telemetry
+def test_queue_metrics_against_hand_scheduled_trace():
+    """Starvation-limit skip-ahead and per-request queue wait, asserted
+    event-for-event against a hand-scheduled trace (ISSUE 8 satellite):
+
+    tick 0: rid0 (needs 3 > 2-slab pool) skipped (#1); rid1 admitted, wait 0.
+    tick 1: rid1 done; rid2 submitted; rid0 skipped (#2) → aged head blocks
+            the queue, so rid2 (which would fit) is NOT admitted.
+    tick 2: growth lets rid0 in (wait 2 ticks); rid2 follows (wait 1).
+    """
+    book, sched = _mk(nslots=2, starvation_limit=2)
+    book.grow(2)
+    reg = sched.obs.registry
+    skips = reg.counter("sched.starvation_skips")
+    blocks = reg.counter("sched.head_blocks")
+    waits = reg.histogram("sched.queue_wait_ticks")
+
+    sched.submit(0, length=12)  # needs 3 — never fits the 2-slab pool
+    sched.submit(1, length=4)
+    assert [r for r, _, _ in sched.admit(lambda s: False)] == [1]
+    assert skips.total() == 1 and blocks.total() == 0
+    assert waits.values(rid=1) == [0.0]
+
+    slot1 = sched.rid_of_slot.index(1)
+    book.release(slot1), sched.complete(slot1)
+    sched.submit(2, length=4)
+    assert sched.admit(lambda s: False) == []  # skip #2 → head-of-line block
+    assert skips.total() == 2 and blocks.total() == 1
+    assert waits.count() == 1, "nothing admitted while the head blocks"
+
+    assert [r for r, _, _ in sched.admit(_grow(book))] == [0, 2]
+    assert waits.values(rid=0) == [2.0]  # waited ticks 0 and 1
+    assert waits.values(rid=2) == [1.0]  # submitted at tick 1, admitted at 2
+    assert skips.total() == 2 and blocks.total() == 1  # growth ended the block
+    # the timeline saw the same story, in order
+    names = [e["name"] for e in sched.obs.tracer.events]
+    assert names == ["starve_skip", "starve_skip", "head_block"]
+    assert sched.obs.tracer.events[-1]["attrs"] == {"rid": 0}
+
+
+def test_queue_wait_zero_for_immediate_admission():
+    book, sched = _mk(nslots=3)
+    for rid in range(3):
+        sched.submit(rid, length=4)
+    assert len(sched.admit(_grow(book))) == 3
+    waits = sched.obs.registry.histogram("sched.queue_wait_ticks")
+    assert waits.values() == [0.0, 0.0, 0.0]
+    assert sched.tick == 1  # exactly one completed admit round
+
+
 # ---------------------------------------------------------------- property
 @given(
     st.lists(st.integers(min_value=1, max_value=40), min_size=1, max_size=12),

@@ -1,0 +1,189 @@
+"""Unified telemetry (ISSUE 8): timeline ⇔ legacy stats reconciliation and
+the zero-sync contract on the decode hot path.
+
+Acceptance: a ``BatchEngine.run()`` over ≥ 8 ragged requests produces a
+timeline export (JSON + Chrome trace) whose per-request TTFT/TPOT and
+per-step pool gauges reconcile **exactly** with the legacy ``BatchStats``
+view, and a transfer-guard test proves the instrumentation adds zero
+device→host transfers to the append/decode hot path.
+"""
+import json
+
+import jax
+import pytest
+
+from repro.configs import reduced
+from repro.models import transformer
+from repro.serving.engine import BatchEngine, Engine
+
+from test_batch_engine import RAGGED_PROMPTS, _setup
+
+
+def test_timeline_export_reconciles_with_legacy_stats(tmp_path):
+    cfg, params = _setup()
+    be = BatchEngine(params, cfg, max_batch=8)
+    rids = [be.submit(p, 7) for p in RAGGED_PROMPTS]
+    assert len(rids) >= 8
+    out = be.run()
+    assert all(len(out[r]) == len(p) + 7 for r, p in zip(rids, RAGGED_PROMPTS))
+
+    jpath = be.obs.export_json(str(tmp_path / "serve_timeline.json"))
+    cpath = be.obs.export_chrome(str(tmp_path / "serve_trace.json"))
+    doc = json.loads(open(jpath).read())
+    spans = doc["timeline"]["spans"]
+    events = doc["timeline"]["events"]
+    counters = doc["metrics"]["counters"]
+    gauges = doc["metrics"]["gauges"]
+
+    # span/event counts ⇔ legacy counters
+    by = lambda n: [s for s in spans if s["name"] == n]
+    ev = lambda n: [e for e in events if e["name"] == n]
+    assert len(by("decode_step")) == be.stats.decode_steps > 0
+    assert len(by("prefill_chunk")) == be.stats.prefill_chunks > 0
+    assert len(ev("submit")) == len(RAGGED_PROMPTS)
+    assert len(ev("admit")) == be.stats.admitted == len(RAGGED_PROMPTS)
+    assert len(ev("complete")) == be.stats.completed == len(RAGGED_PROMPTS)
+    assert len(ev("first_token")) == len(RAGGED_PROMPTS)
+    assert len(ev("pool_grow")) == be.stats.pool_grow_events
+    assert counters["serve.decode_steps"] == be.stats.decode_steps
+
+    # per-request TTFT/TPOT: histogram series, timeline event, and the
+    # Request record all carry the same float (recorded once)
+    ttft = be.obs.registry.histogram("serve.ttft_ms")
+    tpot = be.obs.registry.histogram("serve.tpot_ms")
+    first_by_rid = {e["attrs"]["rid"]: e["attrs"]["ttft_ms"] for e in ev("first_token")}
+    for rid in rids:
+        req = be._requests[rid]
+        assert ttft.values(rid=rid) == [req.ttft * 1e3]
+        assert first_by_rid[rid] == req.ttft * 1e3
+        assert req.ttft >= req.queue_wait >= 0
+        if req.generated > 1:
+            assert tpot.values(rid=rid) == [req.tpot_ms]
+
+    # per-step pool gauges ⇔ legacy peaks, and every utilization sample is
+    # internally consistent (= live / capacity of the same instant)
+    assert gauges["pool.live_tokens"]["hwm"] == be.stats.peak_live_tokens
+    assert gauges["pool.capacity_tokens"]["hwm"] == be.stats.peak_pool_tokens
+    samples = doc["timeline"]["samples"]
+    series = {}
+    for s in samples:
+        series.setdefault(s["name"], []).append(s["value"])
+    live, cap, util = (
+        series["pool.live_tokens"],
+        series["pool.capacity_tokens"],
+        series["pool.utilization"],
+    )
+    assert len(live) == len(cap) == len(util)
+    assert max(live) == be.stats.peak_live_tokens
+    assert max(cap) == be.stats.peak_pool_tokens
+    for lv, cp, u in zip(live, cap, util):
+        assert u == (lv / cp if cp else 0.0)
+
+    # Chrome trace: structurally valid, same span population
+    chrome = json.loads(open(cpath).read())
+    te = chrome["traceEvents"]
+    assert {e["ph"] for e in te} <= {"X", "i", "C"}
+    durs = [e for e in te if e["ph"] == "X"]
+    assert len(durs) == len(spans)
+    for e in durs:
+        assert e["ts"] >= 0 and e["dur"] >= 0 and "name" in e
+
+
+def test_decode_hot_path_adds_zero_device_to_host_transfers(monkeypatch):
+    """Steady-state decode (no stop token, no prefill in flight): N fully
+    instrumented step() calls issue zero device→host transfers.  The spy on
+    ``jax.device_get`` is the teeth (the transfer guard cannot fire on CPU);
+    recorded spans prove the telemetry was live during the guarded window.
+    """
+    cfg, params = _setup()
+    be = BatchEngine(params, cfg, max_batch=4)
+    for p in RAGGED_PROMPTS[:4]:
+        be.submit(p, 30)
+    # drain admission + chunked prefill so only decode remains
+    while be.sched.prefilling or be.sched.pending:
+        be.step()
+    assert all(be.sched.phase[r.slot] == "decode"
+               for r in be._slots if r is not None)
+
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    spans_before = len(be.obs.tracer.spans)
+    steps_before = be.stats.decode_steps
+    with jax.transfer_guard_device_to_host("disallow"):
+        for _ in range(5):
+            be.step()
+    assert calls == [], "decode hot path must not read the device"
+    assert be.stats.decode_steps == steps_before + 5
+    new_spans = be.obs.tracer.spans[spans_before:]
+    assert [s.name for s in new_spans] == ["decode_step"] * 5
+
+
+def test_host_sync_audit_counts_every_device_get(monkeypatch):
+    """Satellite fix: ``stats.host_syncs`` counts ALL device→host reads —
+    stop drains, the final stream/first-token drains — not just stop checks.
+    A spy on ``jax.device_get`` over a whole run() must agree exactly."""
+    cfg, params = _setup()
+    be = BatchEngine(params, cfg, max_batch=2, stop_token=0)
+    for p in RAGGED_PROMPTS[:3]:
+        be.submit(p, 5)
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    be.run()
+    assert be.stats.host_syncs == len(calls) > 0
+    syncs = be.obs.registry.counter("serve.host_syncs")
+    assert syncs.value(site="stop_drain") == be.stats.decode_steps
+    assert syncs.value(site="first_token_drain") == 1
+    assert syncs.value(site="stream_drain") == 1
+    # the debug checker's reads are audited too
+    before = syncs.total()
+    be.check_free_list()
+    assert syncs.value(site="free_list_debug") == syncs.total() - before > 0
+
+
+def test_engine_generate_audits_token_drain(monkeypatch):
+    cfg, params = _setup()
+    eng = Engine(params, cfg, policy="ggarray", max_len=32)
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    eng.generate([[1, 2, 3]], max_new_tokens=4)
+    syncs = eng.obs.registry.counter("serve.host_syncs")
+    assert syncs.value(site="token_drain") == 1
+    assert len(calls) == 1, "one transfer per generation, after the loop"
+
+
+def test_peak_live_tokens_sees_inflight_chunked_prefill():
+    """Satellite fix: tokens already prefilled into pool slabs by in-flight
+    chunks count toward the live high-water mark even while the slot's
+    published length is still 0."""
+    cfg, params = _setup()
+    C = cfg.attention_chunk  # 32 in the reduced config
+    prompt = list(range(1, 2 * C - 7))  # 2 chunks: C then C−8
+    be = BatchEngine(params, cfg, max_batch=2, max_chunks_per_step=1)
+    rid = be.submit(prompt, 2)
+    be.step()  # admit + first chunk only — decode hasn't started
+    assert be.live_tokens == 0, "published length must still be 0"
+    assert be.stats.peak_live_tokens >= C, (
+        f"peak {be.stats.peak_live_tokens} missed the in-flight chunk of {C}"
+    )
+    out = be.run()
+    # ...and decode growth keeps pushing the high-water mark afterwards
+    assert be.stats.peak_live_tokens >= len(prompt) + 1
+    assert len(out[rid]) == len(prompt) + 2
+
+
+def test_views_share_one_registry():
+    """The legacy stats views are reads of the same registry the timeline
+    snapshots — not copies that can drift."""
+    cfg, params = _setup()
+    be = BatchEngine(params, cfg, max_batch=2)
+    be.run_all(RAGGED_PROMPTS[:2], 3)
+    snap = be.obs.snapshot()
+    assert snap["counters"]["serve.admitted"] == be.stats.admitted
+    assert snap["counters"]["serve.completed"] == be.stats.completed
+    assert (
+        snap["gauges"]["pool.live_tokens"]["hwm"] == be.stats.peak_live_tokens
+    )
+    assert be.stats._reg is be.obs.registry is be.sched.obs.registry
