@@ -20,6 +20,10 @@ bucket chain) on the same ragged request fleet:
 * ``pool_utilization`` / ``capacity_ratio`` — peak live tokens vs peak pool
   capacity (the §V memory metric at fleet scale); the arena's bound is
   live + one slab per sequence, the per-array policy pays bucket rounding.
+* ``prefix_hit_rate`` / ``prefix_ttft_{hit,cold}_ms`` — the shared-prefix
+  fleet (one system prompt, many tenants, ``prefix_cache=True``): hit rate
+  must be 1.0 and the full-hit TTFT skips the entire chunked prefill
+  (``check_regression.py`` gates both via ``METRICS_pool.json``).
 
 Usage: ``python benchmarks/bench_pool.py [--smoke] [--profile]`` → rows on
 stdout + ``BENCH_pool.json`` (benchmarks/run.py schema).  ``--profile``
@@ -208,6 +212,47 @@ def main() -> None:
         f"chunked_ttft_ratio={np.mean(ttfts) / max(np.mean(ttfts_m), 1e-12):.2f}",
     )
 
+    # --- shared-prefix fleet: copy-on-write prefix caching (§10) ----------
+    # One system prompt, many tenants: the first request pays the chunked
+    # prefill and publishes its slabs; every later identical prompt admits
+    # with zero prefill chunks (full hit) and aliases the cached slabs.
+    fleet_n = 8 if smoke else 32
+    sys_prompt = rng.integers(1, 200, 36).tolist()  # 36 % slab_tokens == 0
+    bp = BatchEngine(params, cfg, max_batch=max_batch, prefix_cache=True)
+    r_cold = bp.submit(list(sys_prompt), new_tokens)
+    bp.run()
+    ttft_cold = bp._requests[r_cold].ttft
+    chunks_cold = bp.stats.prefill_chunks
+    hits0 = bp.stats.prefix_hits
+    for _ in range(fleet_n):
+        bp.submit(list(sys_prompt), new_tokens)
+    bp.run()
+    hit_rate = (bp.stats.prefix_hits - hits0) / fleet_n
+    fleet_chunks = bp.stats.prefill_chunks - chunks_cold
+    # apples-to-apples TTFT: one more hit request alone (no queue wait),
+    # against the cold request that ran alone through the same jit cache
+    r_hit = bp.submit(list(sys_prompt), new_tokens)
+    bp.run()
+    ttft_hit = bp._requests[r_hit].ttft
+    ttft_hit_ratio = ttft_hit / max(ttft_cold, 1e-12)
+    emit(
+        "pool_prefix_hit_rate",
+        hit_rate * 100.0,
+        f"{fleet_n} shared-prefix requests, {fleet_chunks} prefill chunks, "
+        f"cow={bp.stats.cow_copies} live_slabs={bp.alloc.n_slabs}",
+    )
+    emit(
+        "pool_prefix_ttft_cold_ms",
+        ttft_cold * 1e6,
+        "first request: full chunked prefill, publishes the prompt slabs",
+    )
+    emit(
+        "pool_prefix_ttft_hit_ms",
+        ttft_hit * 1e6,
+        f"fully cached: first token from the first decode step, "
+        f"hit/cold={ttft_hit_ratio:.2f}",
+    )
+
     # --- ggarray oracle: one bucket chain per sequence --------------------
     eng = Engine(params, cfg, policy="ggarray", max_len=256)
     eng.generate(prompts, new_tokens)  # warm-up
@@ -239,7 +284,22 @@ def main() -> None:
     # check_regression.py --metrics gates TTFT p95 (chunked/monolithic) and
     # pool utilization from this file; the rest is for diagnosis.
     write_metrics_json(
-        "pool", {"chunked": be.obs.snapshot(), "monolithic": bm.obs.snapshot()}
+        "pool",
+        {
+            "chunked": be.obs.snapshot(),
+            "monolithic": bm.obs.snapshot(),
+            "prefix": {
+                "hit_rate": hit_rate,
+                "ttft_cold_ms": ttft_cold * 1e3,
+                "ttft_hit_ms": ttft_hit * 1e3,
+                "ttft_hit_ratio": ttft_hit_ratio,
+                "fleet": fleet_n,
+                "suffix_chunks": fleet_chunks,
+                "cow_copies": bp.stats.cow_copies,
+                "live_slabs": bp.alloc.n_slabs,
+                "metrics": bp.obs.snapshot(),
+            },
+        },
     )
 
 

@@ -37,6 +37,18 @@ timed engines — ISSUE 8) supplies two more self-normalizing gates:
   (gauge high-water marks); dropping below
   ``(1 − tolerance) · baseline`` means the pool got sparser.
 
+The shared-prefix fleet (copy-on-write prefix caching, DESIGN.md §10)
+contributes two more gates from the metrics artifact's ``prefix`` section:
+
+* hard: ``hit_rate`` must be **exactly 1.0** — every identical prompt after
+  the first must alias the cached slabs (a missing section fails too, so
+  the gate cannot be dodged by dropping the scenario);
+* relative: ``ttft_hit_ratio`` (full-hit TTFT over cold TTFT, same process,
+  same jit cache) is a ceiling gate like ``ttft_p95_ratio`` — a fully
+  cached prompt's first token comes from one decode step instead of the
+  whole chunked prefill, so this ratio drifting up toward 1 means the
+  cache stopped skipping prefill.
+
 A missing metrics file or metric key fails, same as a missing bench row.
 
 ``--update`` rewrites the baseline from the current artifacts (a
@@ -58,6 +70,7 @@ import sys
 
 ABSOLUTE_FLOOR = 0.8  # ISSUE 6 acceptance: paged ≥ 0.8× ggarray seqs/s
 TTFT_ABS_CEILING = 0.5  # chunked TTFT p95 must stay < 0.5× monolithic's
+HIT_TTFT_ABS_CEILING = 0.5  # full-hit TTFT must stay < 0.5× cold TTFT
 
 
 def _rows(path: str) -> dict[str, float]:
@@ -66,8 +79,9 @@ def _rows(path: str) -> dict[str, float]:
     return {r["name"]: r["us_per_call"] for r in payload["rows"]}
 
 
-def _telemetry(path: str) -> tuple[float, float] | str:
-    """(ttft_p95_ratio, utilization) from METRICS_pool.json, or an error."""
+def _telemetry(path: str) -> tuple[float, float, float, float] | str:
+    """(ttft_p95_ratio, utilization, prefix_hit_rate, ttft_hit_ratio) from
+    METRICS_pool.json, or an error string."""
     try:
         with open(path) as f:
             engines = json.load(f)["engines"]
@@ -78,9 +92,12 @@ def _telemetry(path: str) -> tuple[float, float] | str:
         util = chunked["gauges"]["pool.live_tokens"]["hwm"] / max(
             chunked["gauges"]["pool.capacity_tokens"]["hwm"], 1
         )
+        prefix = engines["prefix"]
+        hit_rate = float(prefix["hit_rate"])
+        hit_ttft_ratio = float(prefix["ttft_hit_ratio"])
     except (OSError, KeyError, TypeError) as e:
         return f"{path}: {type(e).__name__}: {e}"
-    return ttft_ratio, util
+    return ttft_ratio, util, hit_rate, hit_ttft_ratio
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -133,7 +150,7 @@ def main(argv: list[str] | None = None) -> int:
         print(f"check_regression: telemetry gate unreadable — {telemetry}",
               file=sys.stderr)
         return 1
-    ttft_ratio, util = telemetry
+    ttft_ratio, util, hit_rate, hit_ttft_ratio = telemetry
 
     if args.update:
         os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
@@ -151,6 +168,11 @@ def main(argv: list[str] | None = None) -> int:
                         "utilization": round(util, 3),
                         "source": "METRICS_pool.json",
                     },
+                    "prefix": {
+                        "hit_rate": round(hit_rate, 3),
+                        "ttft_hit_ratio": round(hit_ttft_ratio, 3),
+                        "source": "METRICS_pool.json",
+                    },
                     "source": "benchmarks/bench_pool.py --smoke",
                 },
                 f,
@@ -160,7 +182,8 @@ def main(argv: list[str] | None = None) -> int:
         print(
             f"check_regression: baseline updated to {ratio:.3f} "
             f"(grow-step ratio {grow_ratio:.3f}, ttft p95 ratio "
-            f"{ttft_ratio:.3f}, utilization {util:.3f})"
+            f"{ttft_ratio:.3f}, utilization {util:.3f}, prefix hit rate "
+            f"{hit_rate:.3f}, hit/cold ttft {hit_ttft_ratio:.3f})"
         )
         return 0
 
@@ -218,7 +241,34 @@ def main(argv: list[str] | None = None) -> int:
                 f"check_regression: FAIL — pool utilization dropped: {tel_verdict}"
             )
             return 1
-    print(f"check_regression: OK — {verdict}; {grow_verdict}; {tel_verdict}")
+    # prefix caching (DESIGN.md §10): full-hit rate is a hard 1.0 gate, the
+    # hit/cold TTFT ratio a ceiling gate like ttft_p95_ratio
+    px_verdict = (
+        f"prefix hit rate {hit_rate:.3f}, hit/cold ttft {hit_ttft_ratio:.3f}"
+    )
+    if hit_rate != 1.0:
+        print(
+            "check_regression: FAIL — shared-prefix fleet missed the cache "
+            f"(hit rate must be exactly 1.0): {px_verdict}"
+        )
+        return 1
+    px_base = baseline.get("prefix")
+    if px_base is not None:
+        px_ceil = max(
+            (1.0 + args.tolerance) * px_base["ttft_hit_ratio"],
+            HIT_TTFT_ABS_CEILING,
+        )
+        px_verdict += f" (ceiling {px_ceil:.3f})"
+        if hit_ttft_ratio > px_ceil:
+            print(
+                "check_regression: FAIL — full-hit TTFT no longer beats cold "
+                f"prefill: {px_verdict}"
+            )
+            return 1
+    print(
+        f"check_regression: OK — {verdict}; {grow_verdict}; {tel_verdict}; "
+        f"{px_verdict}"
+    )
     return 0
 
 

@@ -493,14 +493,21 @@ class SlabArena:
             ).all(), "two-level table does not round-trip"
         self.alloc.check()
         claimed = pages_dev[pages_dev >= 0]
-        assert len(claimed) == len(set(claimed.tolist())), (
-            "slab double-assigned across page tables"
-        )
         assert not free_dev[claimed].any() if len(claimed) else True, (
             "free slab present in a page table"
         )
-        assert len(claimed) == self.alloc.live_count, (
-            "claimed slab missing from every page table"
+        # refcount audit (DESIGN.md §10): every reference on a claimed slab
+        # is exactly one live page-table entry — the arena never aliases, so
+        # this also implies the old uniqueness + coverage invariants (a
+        # double-assigned slab would need refcount 2; an orphaned claim
+        # would have refcount 0 and fail alloc.check above).
+        refs = np.zeros((self.alloc.n_slabs,), np.int64)
+        if len(claimed):
+            vals, counts = np.unique(claimed, return_counts=True)
+            refs[vals] = counts
+        assert (refs == self.alloc.refcount).all(), (
+            "refcounts drift from page tables: "
+            f"{np.flatnonzero(refs != self.alloc.refcount)}"
         )
         for i in range(self.narrays):
             npg = int(self.book.npages[i])

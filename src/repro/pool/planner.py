@@ -69,15 +69,28 @@ class SlabAllocator:
     Lowest-first claiming makes reuse the default: released slabs always sit
     below freshly grown ones, so the pool only grows once every freed slab
     is back in use (the reclamation invariant the property tests assert).
+
+    Slabs are **refcounted** (DESIGN.md §10): ``claim`` starts a slab at one
+    reference, ``addref`` lets a second page table (or the prefix cache)
+    alias it, and ``release`` drops one reference per id — the slab only
+    returns to the free bitmap when the *last* reference goes.  ``owner``
+    names the tenant charged for the slab while its first claimant still
+    holds a reference; a slab that outlives its claimant (aliases remain)
+    is marked ``SHARED`` so quota accounting stops billing the departed
+    tenant.
     """
+
+    SHARED = -2  # owner sentinel: claimed, but the first claimant released
 
     def __init__(self, n_slabs: int = 0, *, quota_slabs: int | None = None):
         self.free = np.ones((n_slabs,), bool)
         self.owner = np.full((n_slabs,), -1, np.int32)  # tenant per slab
+        self.refcount = np.zeros((n_slabs,), np.int32)  # references per slab
         self.quota_slabs = quota_slabs
         self.claims = 0
         self.reuse_claims = 0  # claims satisfied by a previously released slab
         self.releases = 0
+        self.alias_claims = 0  # addref calls — shared-page references taken
         self.grown_slabs = 0
         self.peak_live = 0
         # Reservation ledger: slab *counts* (not ids) promised to tenants with
@@ -153,6 +166,9 @@ class SlabAllocator:
     def grow(self, extra: int) -> None:
         self.free = np.concatenate([self.free, np.ones((extra,), bool)])
         self.owner = np.concatenate([self.owner, np.full((extra,), -1, np.int32)])
+        self.refcount = np.concatenate(
+            [self.refcount, np.zeros((extra,), np.int32)]
+        )
         self._ever_released = np.concatenate(
             [self._ever_released, np.zeros((extra,), bool)]
         )
@@ -187,34 +203,81 @@ class SlabAllocator:
         self.unreserve(tenant, from_res)
         self.free[ids] = False
         self.owner[ids] = tenant
+        self.refcount[ids] = 1
         self.claims += k
         self.reuse_claims += int(self._ever_released[ids].sum())
         self.peak_live = max(self.peak_live, self.live_count)
         return ids
 
-    def release(self, ids: np.ndarray) -> None:
+    def addref(self, ids: np.ndarray) -> None:
+        """Take one extra reference per id on already-claimed slabs.
+
+        This is the aliasing primitive: a second page table (or the prefix
+        cache) pointing at a claimed slab holds a reference, and the slab
+        stays out of the free list until every holder releases.  Aliasing a
+        free slab is a bug — the data it indexes is gone.
+        """
         ids = np.asarray(ids, np.int32)
         if len(ids) == 0:
             return
         if self.free[ids].any():
+            raise RuntimeError(f"alias of free slab: {ids[self.free[ids]]}")
+        np.add.at(self.refcount, ids, 1)
+        self.alias_claims += len(ids)
+
+    def release(
+        self, ids: np.ndarray, *, tenant: int | None = None
+    ) -> np.ndarray:
+        """Drop one reference per id → the ids actually freed.
+
+        Shared slabs (refcount > 1) survive: the free bitmap, ``releases``
+        counter, and reuse tracking only move when a slab's **last**
+        reference goes.  ``tenant`` marks surviving slabs charged to that
+        tenant as :data:`SHARED`, so a departed claimant's quota is no
+        longer billed for pages its aliases keep alive.
+        """
+        ids = np.asarray(ids, np.int32)
+        if len(ids) == 0:
+            return ids
+        if self.free[ids].any():
             raise RuntimeError(f"double free: {ids[self.free[ids]]}")
-        self.free[ids] = True
-        self.owner[ids] = -1
-        self._ever_released[ids] = True
-        self.releases += len(ids)
+        np.subtract.at(self.refcount, ids, 1)
+        if (self.refcount[ids] < 0).any():
+            raise RuntimeError(
+                f"negative refcount: {ids[self.refcount[ids] < 0]}"
+            )
+        freed = np.unique(ids[self.refcount[ids] == 0]).astype(np.int32)
+        self.free[freed] = True
+        self.owner[freed] = -1
+        self._ever_released[freed] = True
+        self.releases += len(freed)
+        if tenant is not None:
+            kept = ids[self.refcount[ids] > 0]
+            kept = kept[self.owner[kept] == tenant]
+            self.owner[kept] = self.SHARED
+        return freed
 
     def release_tenant(self, tenant: int) -> np.ndarray:
-        """Release every slab of ``tenant`` → the freed ids."""
+        """Release every slab still *charged to* ``tenant`` → the freed ids.
+
+        Owner-based, so it only sees exclusively-held slabs; sharing callers
+        (``PageBook.release``) release their page list instead.
+        """
         ids = np.flatnonzero(self.owner == tenant).astype(np.int32)
-        self.release(ids)
-        return ids
+        return self.release(ids, tenant=tenant)
 
     def check(self) -> None:
-        """Internal free-xor-owned + reservation-coverage invariants."""
-        bad = self.free & (self.owner >= 0)
+        """Free-xor-claimed, refcount, and reservation-coverage invariants."""
+        bad = self.free & (self.owner != -1)
         assert not bad.any(), f"slabs both free and owned: {np.flatnonzero(bad)}"
-        bad = ~self.free & (self.owner < 0)
+        bad = ~self.free & (self.owner == -1)
         assert not bad.any(), f"slabs claimed but unowned: {np.flatnonzero(bad)}"
+        bad = self.free & (self.refcount != 0)
+        assert not bad.any(), f"free slabs with references: {np.flatnonzero(bad)}"
+        bad = ~self.free & (self.refcount < 1)
+        assert not bad.any(), (
+            f"claimed slabs without references: {np.flatnonzero(bad)}"
+        )
         assert all(v > 0 for v in self.reserved.values()), self.reserved
         assert self.reserved_total <= self.free_count, (
             f"reservations ({self.reserved_total}) exceed free slabs "
@@ -240,6 +303,12 @@ class PageBook:
         self.npages = np.zeros((ntenants,), np.int64)
         self.page_of_slab = np.full((0,), -1, np.int64)
         self.max_pages = 1
+        # Per-tenant page lists (slab id per page, page order).  With slab
+        # sharing a slab can sit in several tables at different page indices,
+        # so the flat ``page_of_slab`` inverse is only authoritative for
+        # exclusively-held slabs (the arena's kernel tables); these lists
+        # are the source of truth for ordering and release.
+        self.pages_of: list[list[int]] = [[] for _ in range(ntenants)]
 
     def grow(self, extra: int) -> None:
         """Record ``extra`` fresh slabs (caller grew the device pool)."""
@@ -279,21 +348,58 @@ class PageBook:
         ids = self.alloc.claim(tenant, k, from_reservation=from_reservation)
         page0 = int(self.npages[tenant])
         self.page_of_slab[ids] = page0 + np.arange(k)
+        self.pages_of[tenant].extend(int(i) for i in ids)
         self.npages[tenant] += k
         return ids, page0
 
+    def adopt(self, tenant: int, ids: np.ndarray) -> int:
+        """Append pre-referenced slabs to ``tenant``'s table → first page.
+
+        The references must already be held (a prefix-cache match pins its
+        slabs with ``alloc.addref`` before admission); ``adopt`` just
+        transfers them into the page table.  Use :meth:`alias` when the
+        reference still needs taking.
+        """
+        ids = np.asarray(ids, np.int32)
+        page0 = int(self.npages[tenant])
+        self.pages_of[tenant].extend(int(i) for i in ids)
+        self.npages[tenant] += len(ids)
+        return page0
+
+    def alias(self, tenant: int, ids: np.ndarray) -> int:
+        """Point ``tenant``'s next pages at already-claimed slabs
+        (refcount++ per slab) → first page index."""
+        ids = np.asarray(ids, np.int32)
+        self.alloc.addref(ids)
+        return self.adopt(tenant, ids)
+
+    def replace(self, tenant: int, page: int, new_id: int) -> int:
+        """Swap the slab at ``page`` of ``tenant``'s table → the old id.
+
+        The copy-on-write primitive: ``new_id`` must already be claimed for
+        ``tenant`` via ``alloc.claim`` (so its reference exists); the old
+        slab's reference is **not** dropped here — the caller releases it
+        after copying the data across.
+        """
+        old = self.pages_of[tenant][page]
+        self.pages_of[tenant][page] = int(new_id)
+        self.page_of_slab[new_id] = page
+        return int(old)
+
     def release(self, tenant: int) -> np.ndarray:
-        """Free every slab of ``tenant`` (and any leftover reservation)."""
+        """Drop every page reference of ``tenant`` (and any leftover
+        reservation) → the slabs actually freed (last reference gone)."""
         self.alloc.unreserve(tenant)
-        ids = self.alloc.release_tenant(tenant)
-        self.page_of_slab[ids] = -1
+        ids = np.asarray(self.pages_of[tenant], np.int32)
+        freed = self.alloc.release(ids, tenant=tenant)
+        self.page_of_slab[freed] = -1
+        self.pages_of[tenant] = []
         self.npages[tenant] = 0
-        return ids
+        return freed
 
     def pages_in_order(self, tenant: int) -> np.ndarray:
-        """``tenant``'s slab ids sorted by their page index."""
-        owned = np.flatnonzero(self.alloc.owner == tenant)
-        return owned[np.argsort(self.page_of_slab[owned])]
+        """``tenant``'s slab ids in page order."""
+        return np.asarray(self.pages_of[tenant], np.int64)
 
 
 class TenantPlanner:

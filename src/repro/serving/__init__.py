@@ -1,3 +1,3 @@
-from repro.serving import engine, kvcache, sampler, steps
+from repro.serving import engine, kvcache, prefix, sampler, steps
 
-__all__ = ["engine", "kvcache", "sampler", "steps"]
+__all__ = ["engine", "kvcache", "prefix", "sampler", "steps"]

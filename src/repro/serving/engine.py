@@ -50,7 +50,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.obs import ServingTimeline
-from repro.serving import kvcache, scheduler as sched_mod, steps
+from repro.serving import kvcache, prefix as prefix_mod, scheduler as sched_mod, steps
 from repro.serving.sampler import sample
 
 __all__ = ["Engine", "EngineStats", "BatchEngine", "BatchStats", "Request"]
@@ -323,6 +323,9 @@ class BatchStats(_StatsView):
     grown_slabs = property(lambda s: s._ct("pool.grown_slabs"))
     reused_slabs = property(lambda s: s._ct("pool.reused_slabs"))
     released_slabs = property(lambda s: s._ct("pool.released_slabs"))
+    prefix_hits = property(lambda s: s._ct("serve.prefix_hits"))
+    prefix_tokens_reused = property(lambda s: s._ct("serve.prefix_tokens_reused"))
+    cow_copies = property(lambda s: s._ct("serve.cow_copies"))
     peak_live_tokens = property(lambda s: s._hwm("pool.live_tokens"))
     peak_pool_tokens = property(lambda s: s._hwm("pool.capacity_tokens"))
     host_syncs = property(lambda s: s._ct("serve.host_syncs"))
@@ -387,6 +390,19 @@ class BatchEngine:
     doubling, O(√n) under tz — the same boundary-recompile pattern as
     ggarray bucket growth).
 
+    ``prefix_cache=True`` (chunked, attention-only layouts) turns on
+    **copy-on-write prefix caching** (DESIGN.md §10): completed prompts
+    publish their full slabs into a host-side trie; a new request aliases
+    the longest cached prefix into its page table (refcount++, zero bytes
+    moved) and prefills only the uncached suffix — a fully cached prompt
+    admits with zero prefill chunks and takes its first token from the
+    first decode step.  Appends into a shared slab copy that one slab first
+    (``serve.cow_copies``), so cached data is never mutated in place and
+    outputs stay bit-exact vs cold-start.  Off by default: retained cached
+    slabs intentionally outlive their sequences, which relaxes the tight
+    pool-capacity bound above (LRU eviction under pool pressure bounds the
+    retention instead).
+
     Kernel memory space follows ``cfg.kernel_memory_space``
     (``kernels/common``: hbm on TPU, vmem in interpret mode by default).
     """
@@ -405,6 +421,7 @@ class BatchEngine:
         max_chunks_per_step: int | None = None,
         initial_slabs: int = 0,
         max_pages_hint: int = 0,
+        prefix_cache: bool = False,
         seed: int = 0,
         obs: ServingTimeline | None = None,
     ):
@@ -414,6 +431,13 @@ class BatchEngine:
             raise NotImplementedError("BatchEngine serves decoder-only stacks")
         if admission not in ("chunked", "monolithic"):
             raise ValueError(f"unknown admission policy {admission!r}")
+        if prefix_cache and admission != "chunked":
+            raise ValueError("prefix_cache requires chunked admission")
+        if prefix_cache and "mamba" in cfg.layout:
+            # SSM state is a recurrence, not a page table: a cached prefix
+            # carries no conv/SSD state to resume from, so hybrid layouts
+            # must prefill every prompt token.
+            raise ValueError("prefix_cache requires an attention-only layout")
         self.params = params
         self.cfg = cfg
         self.T = cfg.slab_tokens
@@ -466,6 +490,15 @@ class BatchEngine:
                 exact_tail=hybrid, max_chunks_per_step=max_chunks_per_step,
                 obs=self.obs,
             )
+        # prefix cache (DESIGN.md §10): completed prompts publish their full
+        # slabs into a host-side trie; admission aliases matched prefixes
+        # into the new page table and prefills only the uncached suffix.
+        self.prefix = (
+            prefix_mod.PrefixCache(self.alloc, slab_tokens=self.T, obs=self.obs)
+            if prefix_cache
+            else None
+        )
+        self._matched: dict[int, np.ndarray] = {}  # rid → pinned slab ids
         # pre-carve: pool capacity / table width paid at init (not counted as
         # growth events — growth stats measure *demand*-driven reallocs)
         if max_pages_hint:
@@ -638,9 +671,22 @@ class BatchEngine:
         as committed demand (``reserved=``): a grow sized off the free list
         alone could be exhausted again by the claims that convert those
         reservations within the same scheduler step.
+
+        Pool pressure is the prefix cache's eviction signal: before paying
+        for new capacity, LRU cached slabs nobody aliases are released back
+        to the free list, and only the remaining shortfall is grown.
         """
         from repro.pool import growth_amount, plan_extents
 
+        if self.prefix is not None:
+            freed = self.prefix.evict(short)
+            if len(freed):
+                self.free_dev = self.free_dev.at[jnp.asarray(freed)].set(True)
+                self.obs.registry.counter("pool.released_slabs").inc(len(freed))
+                short -= len(freed)
+                if short <= 0:
+                    self._sample_live()
+                    return
         reserved = self.book.reserved_total
         if self._extent_mode:
             self._append_extents(
@@ -812,6 +858,11 @@ class BatchEngine:
 
     def _complete(self, req: Request) -> None:
         req.done = True
+        if self.prefix is not None:
+            # publish the full prompt slabs into the trie *before* release:
+            # the trie's addref keeps them alive when the tenant's page
+            # references drop, so a reclaim becomes a cache fill
+            self.prefix.publish(req.prompt, self.book.pages_of[req.slot])
         self._release(req.slot)
         if self.sched is not None:
             self.sched.complete(req.slot)
@@ -890,15 +941,125 @@ class BatchEngine:
         if req.generated >= req.max_new_tokens:
             self._complete(req)
 
+    # ---- prefix caching (DESIGN.md §10) ----------------------------------
+    def _match_prefix(self, rid: int, length: int) -> int:
+        """Scheduler ``match`` hook: longest cached prefix → tokens cached.
+
+        The matched slabs are **pinned** (one ``addref`` each) before the
+        scheduler's ``ensure`` hook can run — growth may evict LRU cached
+        slabs, and a pinned slab (refcount ≥ 2) is never evictable.  Pins
+        transfer into the page table at admission (``book.adopt``) or are
+        dropped when the request doesn't admit this round.
+        """
+        if self.prefix is None:
+            return 0
+        blocks, ids = self.prefix.match(self._requests[rid].prompt)
+        if not blocks:
+            return 0
+        self.alloc.addref(ids)
+        self._matched[rid] = ids
+        return blocks * self.T
+
+    def _drop_pins(self) -> None:
+        for ids in self._matched.values():
+            self.alloc.release(ids)
+        self._matched.clear()
+
+    def _adopt_prefix(self, req: Request, slot: int, need: int) -> None:
+        """Transfer the pinned match into the slot's page table."""
+        ids = self._matched.pop(req.rid)
+        cached = len(ids) * self.T
+        self._ensure_table_width(len(ids) + need)
+        self.book.adopt(slot, ids)
+        self.obs.registry.counter(
+            "serve.prefix_hits", "admissions that reused cached prefix slabs"
+        ).inc()
+        self.obs.registry.counter(
+            "serve.prefix_tokens_reused", "prompt tokens served from cache"
+        ).inc(cached)
+        self.obs.event(
+            "prefix_hit", rid=req.rid, tokens=cached, blocks=len(ids),
+            full=cached >= len(req.prompt),
+        )
+
+    def _arm_full_hit(self, req: Request, slot: int) -> None:
+        """Fully cached prompt: zero prefill chunks.  Publish the aliased
+        pages to the device table and arm decode on the *last* prompt token
+        (its K/V rewrite COWs the tail slab) — the request's first token
+        comes from the first decode step, where TTFT is recorded.
+        """
+        Lp = len(req.prompt)
+        npages = int(self.book.npages[slot])
+        ids = jnp.asarray(self.book.pages_in_order(slot), jnp.int32)
+        cols = jnp.arange(npages)
+        for i in self._attn_slots():
+            c = self.caches[i]
+            c["pages"] = c["pages"].at[:, slot, cols].set(ids)
+        self.lengths = self.lengths.at[slot].set(Lp - 1)
+        self._len_host[slot] = Lp - 1
+        self.cur_tok = self.cur_tok.at[slot].set(req.prompt[-1])
+        req.generated = 0  # first sample arrives from the first decode step
+        self._sample_live()
+
+    def _cow_if_shared(self, slot: int, page: int) -> None:
+        """Copy-on-write guard: make ``slot``'s slab at ``page`` private.
+
+        A shared slab (refcount > 1) about to be appended into is first
+        copied — one slab's bytes — into a fresh claim; the page table
+        repoints and one reference on the original drops.  The cached
+        original is never mutated in place, so every other alias (and the
+        trie) keeps bit-identical data.
+        """
+        old = int(self.book.pages_of[slot][page])
+        if int(self.alloc.refcount[old]) <= 1:
+            return
+        short = self.book.shortfall(1)
+        if short:
+            self._grow_for(short)
+        before = self.alloc.reuse_claims
+        new = int(self.alloc.claim(slot, 1)[0])
+        self.obs.registry.counter("pool.reused_slabs").inc(
+            self.alloc.reuse_claims - before
+        )
+        self.book.replace(slot, page, new)
+        self.alloc.release(np.asarray([old], np.int32), tenant=slot)
+        publish = self.sched is None or self.sched.phase[slot] == "decode"
+        for i in self._attn_slots():
+            c = self.caches[i]
+            for key in ("k_pool", "v_pool", "ks_pool", "vs_pool"):
+                if key in c:
+                    c[key] = kvcache.copy_slab(c[key], old, new, axis=1)
+            if publish:  # prefill rows stay −1 until the final chunk
+                c["pages"] = c["pages"].at[:, slot, page].set(new)
+        self.free_dev = self.free_dev.at[new].set(False)
+        self.obs.registry.counter(
+            "serve.cow_copies", "shared slabs privately copied before append"
+        ).inc()
+        self.obs.event("cow_copy", slot=slot, page=page, src=old, dst=new)
+
     # ---- the decode loop -------------------------------------------------
     def _admit_pending(self) -> None:
         if self.sched is not None:
-            for rid, slot, need in self.sched.admit(self._ensure_free_slabs):
+            try:
+                admits = self.sched.admit(
+                    self._ensure_free_slabs,
+                    match=self._match_prefix if self.prefix is not None else None,
+                )
+            except BaseException:
+                self._drop_pins()
+                raise
+            for rid, slot, need in admits:
                 req = self._requests[rid]
                 req.slot = slot
                 self._slots[slot] = req
-                self._ensure_table_width(need)
+                if rid in self._matched:
+                    self._adopt_prefix(req, slot, need)
+                else:
+                    self._ensure_table_width(need)
                 self._note_admitted(req, slot)
+                if self.sched.phase[slot] == "decode":  # fully cached prompt
+                    self._arm_full_hit(req, slot)
+            self._drop_pins()  # matched but not admitted this round
             return
         for slot in range(self.B):
             if not self._pending:
@@ -943,6 +1104,13 @@ class BatchEngine:
                 self._grow_for(short)
             for slot in needy:
                 self._claim(slot, 1)
+        # copy-on-write guard: the slab each slot is about to append into
+        # must be private (a full-hit admission decodes its last prompt
+        # token into the shared tail slab — copy it first, never mutate)
+        for req in active:
+            pos = int(self._len_host[req.slot])
+            if pos // self.T < int(self.book.npages[req.slot]):
+                self._cow_if_shared(req.slot, pos // self.T)
         if self.sched is not None and self.sched.prefilling:
             act = np.zeros((self.B,), bool)
             act[[r.slot for r in active]] = True
@@ -974,8 +1142,13 @@ class BatchEngine:
             # one (B,) read per step — the price of stop-token scheduling
             stops = np.asarray(self._host_read(sampled, "stop_drain"))
         for req in active:
+            first_decode = req.generated == 0  # full-hit: first token is here
             req.generated += 1
             req.decode_s += step_dt
+            if first_decode:
+                req.first_tok = sampled[req.slot]
+                req.admit_step = len(self._stream)
+                self._note_first_token(req)
             hit_stop = stops is not None and stops[req.slot] == self.stop_token
             if req.generated >= req.max_new_tokens or hit_stop:
                 self._complete(req)
@@ -1026,20 +1199,47 @@ class BatchEngine:
 
     # ---- verification (test/debug only: reads the device) ----------------
     def check_free_list(self) -> None:
-        """Device bitmap ⇔ host allocator ⇔ page-table consistency."""
+        """Device bitmap ⇔ host allocator ⇔ page-table ⇔ refcount audit.
+
+        Refcount conservation (DESIGN.md §10): every reference on a claimed
+        slab is exactly one page-table entry, one prefix-cache node, or one
+        in-flight admission pin — Σ references == ``alloc.refcount`` per
+        slab, and a slab is live iff someone references it.
+        """
         free = np.asarray(self._host_read(self.free_dev, "free_list_debug"))
         assert (free == self.alloc.free).all(), "device free bitmap drifted"
         self.alloc.check()
-        # chunked prefills hold claimed slabs the device table doesn't list
-        # yet (rows stay −1 until the final chunk publishes them)
-        hidden = (
-            sum(int(self.book.npages[s]) for s in self.sched.prefilling)
-            if self.sched is not None
-            else 0
+        refs = np.zeros((self.alloc.n_slabs,), np.int64)
+        for slot in range(self.B):
+            for s in self.book.pages_of[slot]:
+                refs[s] += 1
+        if self.prefix is not None:
+            for s in self.prefix.cached_slabs():
+                refs[s] += 1
+        for ids in self._matched.values():
+            for s in ids:
+                refs[s] += 1
+        assert (refs == self.alloc.refcount).all(), (
+            "refcounts drift from page tables + prefix cache: "
+            f"{np.flatnonzero(refs != self.alloc.refcount)}"
+        )
+        assert ((refs > 0) == ~self.alloc.free).all(), (
+            "slab freed while referenced (or live without references)"
         )
         for i in self._attn_slots():
-            pages = np.asarray(self._host_read(self.caches[i]["pages"], "free_list_debug"))[0]
+            pages = np.asarray(
+                self._host_read(self.caches[i]["pages"], "free_list_debug")
+            )[0]
             claimed = pages[pages >= 0]
-            assert len(claimed) == len(set(claimed.tolist())), "double assign"
             assert not free[claimed].any() if len(claimed) else True
-            assert len(claimed) + hidden == self.alloc.live_count
+            for slot in range(self.B):
+                npg = int(self.book.npages[slot])
+                row = pages[slot]
+                if self.sched is not None and self.sched.phase[slot] == "prefill":
+                    # chunked prefills hold claimed slabs the device table
+                    # doesn't list yet (published on the final chunk)
+                    assert (row == -1).all(), f"slot {slot}: published early"
+                else:
+                    want = np.asarray(self.book.pages_of[slot], np.int64)
+                    assert (row[:npg] == want).all(), f"slot {slot}: row drift"
+                    assert (row[npg:] == -1).all(), f"slot {slot}: stray pages"

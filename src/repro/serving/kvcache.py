@@ -50,6 +50,7 @@ __all__ = [
     "capacity_of",
     "append",
     "attend",
+    "copy_slab",
     "chunk_attend",
     "scatter_chunk",
     "grow_ggarray",
@@ -220,6 +221,36 @@ def _scatter_pool(pool, slab: jax.Array, slot: jax.Array, vals: jax.Array):
         tgt = jnp.where(ext_t == e, off_t, ext.shape[0])
         out[e] = ext.at[tgt, slot].set(vals, mode="drop")
     return tuple(out)
+
+
+def copy_slab(pool, src: int, dst: int, *, axis: int = 0):
+    """Device copy of one slab ``src → dst`` across the flat or extent
+    layout — the **copy-on-write** private copy (DESIGN.md §10): a decode or
+    chunk append that would write into a *shared* slab (refcount > 1) first
+    duplicates that one slab into a fresh claim, then appends there, so the
+    cached original is never mutated in place.
+
+    ``src``/``dst`` are host ints, so extent routing is pure host
+    arithmetic; the copy itself is one sliced gather + scatter on device
+    (one slab's bytes — never the pool).  ``axis`` is the slab axis
+    (0 for arena pools, 1 for the engine's period-stacked pools).
+    """
+    exts = list(_pool_exts(pool))
+    flat = not isinstance(pool, (tuple, list))
+
+    def locate(s: int) -> tuple[int, int]:
+        base = 0
+        for e, ext in enumerate(exts):
+            if s < base + ext.shape[axis]:
+                return e, s - base
+            base += ext.shape[axis]
+        raise IndexError(f"slab {s} outside pool of {base}")
+
+    se, so = locate(src)
+    de, do = locate(dst)
+    lead = (slice(None),) * axis
+    exts[de] = exts[de].at[lead + (do,)].set(exts[se][lead + (so,)])
+    return exts[0] if flat else tuple(exts)
 
 
 def _scatter_slab(pool, slab: jax.Array, vals: jax.Array):

@@ -149,7 +149,9 @@ class Scheduler:
         self.pending.append(_Waiting(rid, length, submit_tick=self.tick))
 
     def admit(
-        self, ensure: Callable[[int], bool] | None = None
+        self,
+        ensure: Callable[[int], bool] | None = None,
+        match: Callable[[int, int], int] | None = None,
     ) -> list[tuple[int, int, int]]:
         """Admit what fits → [(rid, slot, reserved_slabs)].
 
@@ -159,6 +161,16 @@ class Scheduler:
         ``starvation_limit`` skips.  Raises :class:`QuotaExceeded` when a
         request's whole-prompt need breaches its slot quota (it can never
         admit, so waiting would deadlock the queue).
+
+        ``match(rid, length)`` is the prefix-cache hook (DESIGN.md §10): it
+        returns the request's cached-prefix length in tokens (slab-aligned,
+        0 = cold).  The whole-prompt reservation shrinks to the **uncached
+        suffix** and prefill starts at the first uncached token
+        (``t0[slot]`` = cached length); the caller aliases the cached slabs
+        into the slot's page table right after ``admit`` returns, before
+        planning chunks.  A fully cached prompt admits with zero prefill
+        chunks — the slot goes straight to the decode phase and the caller
+        arms decode on the last prompt token.
         """
         out: list[tuple[int, int, int]] = []
         survivors: collections.deque[_Waiting] = collections.deque()
@@ -171,7 +183,8 @@ class Scheduler:
             if blocked or not free:
                 survivors.append(w)
                 continue
-            need = self.slabs_for(w.length)
+            cached = 0 if match is None else min(match(w.rid, w.length), w.length)
+            need = self.slabs_for(w.length) - cached // self.T
             slot = free[0]
             short = self.book.shortfall(need)
             if short and not (ensure is not None and ensure(short)):
@@ -197,10 +210,13 @@ class Scheduler:
                 raise
             free.popleft()
             self.rid_of_slot[slot] = w.rid
-            self.phase[slot] = "prefill"
-            self.t0[slot] = 0
+            self.t0[slot] = cached
             self.length[slot] = w.length
-            self._prefillq.append(slot)
+            if cached >= w.length:  # fully cached: no prefill chunks at all
+                self.phase[slot] = "decode"
+            else:
+                self.phase[slot] = "prefill"
+                self._prefillq.append(slot)
             self.obs.registry.histogram(
                 "sched.queue_wait_ticks", "admit() rounds waited in queue"
             ).observe(self.tick - w.submit_tick, rid=w.rid)

@@ -1,0 +1,373 @@
+"""Copy-on-write prefix caching (DESIGN.md §10).
+
+Three layers under test:
+
+* the host trie (``serving/prefix.py``): publish/match roundtrip, exact
+  token verification on truncated-hash collisions, LRU leaf eviction;
+* refcount plumbing (``pool/planner.py``): claim/addref/release
+  conservation, SHARED-owner handoff, double-free and free-alias guards —
+  property-tested over interleaved submit/append(COW)/complete/evict;
+* the engine (``serving/engine.py``): a shared-prefix fleet is
+  token-for-token identical to cold-start, fully cached prompts admit with
+  zero prefill chunks, COW never mutates a shared slab, and the pool grows
+  sublinearly in fleet size.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # property tests skip, example tests still run
+    from _hypothesis_fallback import given, settings, st
+
+from repro.pool import PageBook, SlabAllocator
+from repro.serving.prefix import PrefixCache, block_hash
+
+
+# ---------------------------------------------------------------- allocator
+def test_allocator_addref_release_semantics():
+    al = SlabAllocator(4)
+    ids = al.claim(0, 2)
+    al.addref(ids[:1])
+    assert al.refcount[ids[0]] == 2 and al.alias_claims == 1
+    freed = al.release(ids, tenant=0)
+    assert list(freed) == [int(ids[1])], "shared slab must survive release"
+    assert al.owner[ids[0]] == SlabAllocator.SHARED  # claimant departed
+    assert not al.free[ids[0]] and al.free[ids[1]]
+    freed = al.release(ids[:1])  # last reference → actually freed
+    assert list(freed) == [int(ids[0])] and al.free[ids[0]]
+    with pytest.raises(RuntimeError):
+        al.release(ids[:1])  # double free
+    with pytest.raises(RuntimeError):
+        al.addref(ids[:1])  # aliasing a free slab indexes dead data
+    al.check()
+
+
+# ---------------------------------------------------------------- the trie
+def _book(n=16, ntenants=4):
+    book = PageBook(ntenants)
+    book.grow(n)
+    return book
+
+
+def test_publish_match_roundtrip():
+    book = _book()
+    px = PrefixCache(book.alloc, slab_tokens=4)
+    prompt = list(range(1, 11))  # two full blocks + a 2-token partial tail
+    ids, _ = book.claim(0, 3)
+    assert px.publish(prompt, book.pages_of[0]) == 2  # partial never cached
+    blocks, got = px.match(prompt)
+    assert blocks == 2 and list(got) == [int(ids[0]), int(ids[1])]
+    blocks, got = px.match(list(range(1, 5)))  # one-block prefix
+    assert blocks == 1 and got[0] == ids[0]
+    blocks, _ = px.match([1, 2, 3, 4, 9, 9, 9, 9])  # diverges at block 2
+    assert blocks == 1
+    assert px.match([9, 9, 9, 9])[0] == 0  # cold miss
+    book.release(0)
+    assert book.alloc.refcount[ids[0]] == 1, "trie keeps cached slabs alive"
+    assert book.alloc.free[ids[2]], "uncached tail freed with its owner"
+    book.alloc.check()
+
+
+def _collide(bits=8, prefix=(7, 7, 7)):
+    """Two distinct blocks with equal truncated hash (birthday search)."""
+    seen = {}
+    for x in range(1 << 16):
+        blk = prefix + (x,)
+        h = block_hash(blk, bits)
+        if h in seen:
+            return seen[h], blk
+        seen[h] = blk
+    raise AssertionError("no collision found")
+
+
+def test_hash_collision_never_aliases_wrong_slab():
+    a, b = _collide()
+    assert a != b and block_hash(a, 8) == block_hash(b, 8)
+    book = _book()
+    px = PrefixCache(book.alloc, slab_tokens=4, hash_bits=8)
+    ids_a, _ = book.claim(0, 1)
+    px.publish(list(a), book.pages_of[0])
+    blocks, got = px.match(list(b))
+    assert blocks == 0 and len(got) == 0, "colliding block served wrong slab"
+    # both blocks coexist under the same edge key, each resolving exactly
+    ids_b, _ = book.claim(1, 1)
+    px.publish(list(b), book.pages_of[1])
+    assert px.match(list(a))[1][0] == ids_a[0]
+    assert px.match(list(b))[1][0] == ids_b[0]
+
+
+def test_lru_eviction_prefers_cold_leaves_and_cascades():
+    book = _book()
+    px = PrefixCache(book.alloc, slab_tokens=2)
+    book.claim(0, 2)
+    px.publish([1, 2, 3, 4], book.pages_of[0])
+    chain = list(book.pages_of[0])
+    book.release(0)
+    book.claim(1, 1)
+    px.publish([9, 9], book.pages_of[1])
+    cold = list(book.pages_of[1])
+    book.release(1)
+    px.match([1, 2, 3, 4])  # touch the chain → the lone block is coldest
+    assert list(px.evict(1)) == cold
+    # the interior node only goes after its leaf: cascading eviction
+    assert set(int(s) for s in px.evict(2)) == set(chain)
+    assert len(px) == 0 and book.alloc.live_count == 0
+    book.alloc.check()
+
+
+def test_evict_skips_referenced_slabs():
+    book = _book()
+    px = PrefixCache(book.alloc, slab_tokens=2)
+    book.claim(0, 1)
+    px.publish([5, 6], book.pages_of[0])
+    assert len(px.evict(5)) == 0, "tenant still aliases the slab"
+    book.release(0)
+    assert len(px.evict(5)) == 1
+
+
+# ------------------------------------------------- refcount conservation
+T = 4
+PREFIXES = [
+    tuple(range(10, 10 + 2 * T)),  # two blocks
+    tuple(range(10, 10 + 3 * T)),  # extends the first (shared trie path)
+    tuple(range(90, 90 + T)),  # disjoint
+]
+
+
+class _Sim:
+    """Host-only engine stand-in: PageBook + PrefixCache + a shadow copy of
+    every slab's written tokens.  ``check`` asserts the §10 invariants after
+    every event: Σ(page-table refs + trie refs) == refcount, a slab is free
+    iff nothing references it, and every cached node's slab still holds
+    exactly the tokens it was published with (COW never mutated it)."""
+
+    def __init__(self, ntenants=3):
+        self.book = PageBook(ntenants)
+        self.alloc = self.book.alloc
+        self.px = PrefixCache(self.alloc, slab_tokens=T, hash_bits=6)
+        self.data = {}  # slab id → tokens written into it
+        self.seq = {}  # busy tenant → sequence so far
+        self.N = ntenants
+        self.cows = 0
+
+    def _grow(self, k):
+        short = self.book.shortfall(k)
+        if short:
+            self.book.grow(short)
+
+    def submit(self, tenant, pidx, suffix):
+        if tenant in self.seq:
+            return
+        prompt = list(PREFIXES[pidx % len(PREFIXES)])
+        prompt += [200 + s for s in range(suffix)]
+        blocks, ids = self.px.match(prompt)
+        self.alloc.addref(ids)  # pin, as the engine does pre-admission
+        for j, s in enumerate(ids):  # collision safety, end to end
+            assert self.data[int(s)] == prompt[j * T : (j + 1) * T]
+        self.book.adopt(tenant, ids)
+        need = max(-(-len(prompt) // T), 1) - blocks
+        self._grow(need)
+        fresh, _ = self.book.claim(tenant, need)
+        for j, s in zip(range(blocks, blocks + need), fresh):
+            self.data[int(s)] = prompt[j * T : (j + 1) * T]
+        if blocks * T >= len(prompt):  # full hit: decode rewrites the last
+            prompt = prompt[:-1]  # prompt token (engine arms Lp−1)
+        self.seq[tenant] = prompt
+
+    def append(self, tenant, tok):
+        if tenant not in self.seq:
+            return
+        pos = len(self.seq[tenant])
+        page = pos // T
+        if page >= int(self.book.npages[tenant]):
+            self._grow(1)
+            (s,), _ = self.book.claim(tenant, 1)
+            self.data[int(s)] = []
+        slab = self.book.pages_of[tenant][page]
+        if int(self.alloc.refcount[slab]) > 1:  # copy-on-write
+            self._grow(1)
+            new = int(self.alloc.claim(tenant, 1)[0])
+            self.book.replace(tenant, page, new)
+            self.data[new] = list(self.data[slab])
+            self.alloc.release(np.asarray([slab], np.int32), tenant=tenant)
+            self.cows += 1
+            slab = new
+        self.data[slab] = self.data[slab][: pos % T] + [tok]
+        self.seq[tenant].append(tok)
+
+    def complete(self, tenant):
+        if tenant not in self.seq:
+            return
+        self.px.publish(self.seq[tenant], self.book.pages_of[tenant])
+        for f in self.book.release(tenant):
+            self.data.pop(int(f))
+        del self.seq[tenant]
+
+    def evict(self, k):
+        for f in self.px.evict(k):
+            self.data.pop(int(f))
+
+    def check(self):
+        self.alloc.check()
+        refs = np.zeros((self.alloc.n_slabs,), np.int64)
+        for t in range(self.N):
+            for s in self.book.pages_of[t]:
+                refs[s] += 1
+        for s in self.px.cached_slabs():
+            refs[s] += 1
+        assert (refs == self.alloc.refcount).all(), "refcount conservation"
+        assert ((refs > 0) == ~self.alloc.free).all(), (
+            "slab freed while referenced (or live without references)"
+        )
+        for node in self.px._lru:  # COW contract: cached data never mutates
+            assert tuple(self.data[node.slab][: len(node.tokens)]) == node.tokens
+
+
+def _run_ops(ops):
+    sim = _Sim()
+    for kind, t, v in ops:
+        t %= sim.N
+        if kind == 0:
+            sim.submit(t, v, v % 3)
+        elif kind == 1:
+            sim.append(t, 300 + v)
+        elif kind == 2:
+            sim.complete(t)
+        else:
+            sim.evict(v % 4 + 1)
+        sim.check()
+    for t in list(sim.seq):
+        sim.complete(t)
+        sim.check()
+    return sim
+
+
+def test_refcount_conservation_scripted():
+    """Deterministic walk through every interesting transition: cold fill,
+    publish, partial hit, full hit with a COW rewrite, pressure eviction."""
+    sim = _run_ops(
+        [
+            (0, 0, 1),  # cold: prefix 1 (3 blocks) + 1-token tail
+            (1, 0, 1),
+            (2, 0, 0),  # complete → publishes 3 blocks
+            (0, 1, 0),  # full hit on prefix 1 → decode rewrite pending
+            (1, 1, 5),  # the rewrite lands in a shared slab → must COW
+            (0, 2, 3),  # partial hit: 2-block overlap via the shared path
+            (1, 2, 6),
+            (3, 0, 2),  # evict under pressure (referenced slabs survive)
+            (2, 1, 0),
+            (2, 2, 0),
+            (3, 0, 9),
+        ]
+    )
+    assert sim.cows >= 1, "the full-hit rewrite never copied"
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 3), st.integers(0, 2), st.integers(0, 40)
+        ),
+        max_size=60,
+    )
+)
+def test_refcount_conservation_property(ops):
+    """Interleaved submit/append/complete/evict never breaks conservation,
+    never frees a referenced slab, and never mutates a shared slab."""
+    _run_ops(ops)
+
+
+# ---------------------------------------------------------------- engine
+@pytest.fixture(scope="module")
+def _engine_setup():
+    import jax
+
+    from repro.configs import reduced
+    from repro.models import transformer
+
+    cfg = reduced("qwen2.5-3b", cache_b0=4)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_prefix_cache_bit_exact_and_skips_prefill(_engine_setup):
+    """A shared-prefix fleet reuses the cached prompt: bit-exact outputs vs
+    cold-start, zero prefill chunks on the fully cached duplicate, one chunk
+    per uncached suffix, ≥1 COW copy, sublinear pool growth."""
+    from repro.serving.engine import BatchEngine
+
+    cfg, params = _engine_setup
+    base = [int(t) for t in np.random.default_rng(2).integers(1, 50, 36)]
+    prompts = [base, base + [3, 1], base + [7, 7, 7, 2, 9], base]
+    t_new = 4
+    cold = BatchEngine(params, cfg, max_batch=4, admission="chunked")
+    want = cold.run_all(prompts, t_new)
+
+    warm = BatchEngine(params, cfg, max_batch=4, prefix_cache=True)
+    r0 = warm.submit(prompts[0], t_new)
+    assert warm.run()[r0] == want[0]
+    chunks_cold = warm.stats.prefill_chunks  # 36 tokens = 2 chunks of C=32
+    rids = [warm.submit(p, t_new) for p in prompts[1:]]
+    out = warm.run()
+    for rid, w in zip(rids, want[1:]):
+        assert out[rid] == w, "prefix reuse changed a sampled token"
+    assert warm.stats.prefix_hits == 3
+    assert warm.stats.prefix_tokens_reused == 3 * len(base)
+    # suffix-only prefill: one chunk each for the two extensions, zero for
+    # the duplicate (≥90% chunk reduction on the fully cached prompt)
+    assert warm.stats.prefill_chunks - chunks_cold == 2
+    assert warm.stats.cow_copies >= 1, "full hit decoded into a shared slab"
+    assert warm.alloc.n_slabs < cold.alloc.n_slabs, "prefix stored once"
+    events = warm.obs.tracer.events
+    full_hits = [
+        e for e in events if e["name"] == "prefix_hit" and e["attrs"]["full"]
+    ]
+    assert len(full_hits) == 1
+    firsts = [e for e in events if e["name"] == "first_token"]
+    assert {e["attrs"]["rid"] for e in firsts} == {r0, *rids}, (
+        "every request records TTFT exactly once (full hits on first decode)"
+    )
+    warm.check_free_list()
+
+
+def test_prefix_cache_with_extent_pool_zero_copy(_engine_setup):
+    """Prefix aliasing composes with segmented extents: COW copies route
+    through extent-local slab copies and growth still never memcpys."""
+    from repro.serving.engine import BatchEngine
+
+    cfg, params = _engine_setup
+    base = [int(t) for t in np.random.default_rng(5).integers(1, 50, 8)]
+    prompts = [base, base + [2, 4], base]
+    cold = BatchEngine(params, cfg, max_batch=2, admission="chunked")
+    want = cold.run_all(prompts, 3)
+    be = BatchEngine(
+        params, cfg, max_batch=2, grow_chunk="doubling", prefix_cache=True
+    )
+    r0 = be.submit(prompts[0], 3)
+    assert be.run()[r0] == want[0]
+    rids = [be.submit(p, 3) for p in prompts[1:]]
+    out = be.run()
+    assert [out[r] for r in rids] == want[1:]
+    assert be.stats.prefix_hits == 2
+    assert be.stats.cow_copies >= 1
+    assert be.stats.pool_copied_bytes == 0, "extent growth must never memcpy"
+    be.check_free_list()
+
+
+def test_prefix_cache_requires_chunked_attention(_engine_setup):
+    import jax
+
+    from repro.configs import reduced
+    from repro.models import transformer
+    from repro.serving.engine import BatchEngine
+
+    cfg, params = _engine_setup
+    with pytest.raises(ValueError, match="chunked"):
+        BatchEngine(params, cfg, admission="monolithic", prefix_cache=True)
+    cfg_h = reduced("jamba-v0.1-52b", cache_b0=4)
+    params_h = transformer.init_params(jax.random.PRNGKey(0), cfg_h)
+    with pytest.raises(ValueError, match="attention-only"):
+        BatchEngine(params_h, cfg_h, prefix_cache=True)

@@ -101,6 +101,33 @@ def test_exact_tail_skips_padding():
     assert tasks[-1].final
 
 
+def test_match_hook_shrinks_reservation_to_uncached_suffix():
+    """Prefix-cache hook (DESIGN.md §10): a cached prefix shrinks the
+    reservation to the uncached suffix and prefill starts at its t0; a
+    fully cached prompt admits with zero prefill chunks."""
+    book, sched = _mk(chunk=8, slab_tokens=4)
+    cached = {7: 8, 8: 12, 9: 0}  # rid → cached prefix tokens
+    sched.submit(7, length=14)  # 2 of 4 slabs cached → reserve 2
+    sched.submit(8, length=12)  # fully cached → reserve 0, no prefill
+    sched.submit(9, length=5)  # cold → whole need reserved
+    admits = sched.admit(_grow(book), match=lambda r, L: cached[r])
+    assert [(r, need) for r, _, need in admits] == [(7, 2), (8, 0), (9, 2)]
+    slot = {r: s for r, s, _ in admits}
+    assert sched.phase[slot[8]] == "decode" and slot[8] not in sched.prefilling
+    assert int(sched.t0[slot[7]]) == 8 and int(sched.t0[slot[9]]) == 0
+    # the caller aliases cached slabs before chunks run; model the trie as
+    # an off-slot holder and alias into the admitted slot
+    book.grow(2)
+    cached_ids = book.alloc.claim(99, 2)  # stand-in for trie-held slabs
+    book.alias(slot[7], cached_ids)
+    tasks = _run_prefill(book, sched)
+    assert [(t.rid, t.t0, t.live, t.final) for t in tasks] == [
+        (7, 8, 6, True),  # suffix-only chunk, resumed at the cached t0
+        (9, 0, 5, True),
+    ]
+    assert sum(t.new_slabs for t in tasks if t.rid == 7) == 2
+
+
 def test_fifo_within_equal_need():
     book, sched = _mk(nslots=4)
     for rid, L in enumerate([9, 9, 9]):  # identical slab need
