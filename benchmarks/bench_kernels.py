@@ -30,7 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, emit, smoke_mode, timeit, write_json
+from benchmarks.common import (
+    Row, emit, smoke_mode, timeit, write_json, write_metrics_json,
+)
+from repro.obs import device
 from repro.core import ggarray as gg
 from repro.core import indexing
 from repro.kernels.flatten import ops as flatten_ops
@@ -143,6 +146,63 @@ def main() -> None:
             emit(f"kernels.dispatch.{disp}.m{wm}", us, f"threshold={thr}")
         for a, b in zip(jax.tree.leaves(outs["onehot"]), jax.tree.leaves(outs["mxu"])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # --- device counter plane: per-family kernel geometry (DESIGN.md §9.x) -
+    # One instrumented call per family on the inputs just timed; the derived
+    # waste/occupancy ratios land in METRICS_kernels.json for trajectory
+    # tracking next to the wall-clock rows.
+    families = {}
+    for space in SPACES:
+        _, gv = paged_ops.paged_gather(
+            pool, pages, memory_space=space, instrument=True
+        )
+        families[f"gather.{space}"] = device.as_dict(gv)
+        _, pv = pb_ops.push_back_fused(
+            arr.buckets, wsizes, b0, wave, wmask,
+            memory_space=space, instrument=True,
+        )[-2:]
+        families[f"push_back.{space}"] = device.as_dict(pv)
+        _, fv = flatten_ops.flatten_segmented(
+            farr.buckets, farr.sizes, farr.b0,
+            memory_space=space, instrument=True,
+        )
+        families[f"flatten.{space}"] = device.as_dict(fv)
+    sv = paged_ops.slab_append(
+        pool, owners, bases, sizes, elems, wave_mask, instrument=True
+    )[3]
+    families["slab_append"] = device.as_dict(sv)
+
+    def _ratio(d, num, den):
+        return d[num] / max(d[den], 1.0)
+
+    gd = families["gather.vmem"]
+    pd = families["push_back.vmem"]
+    sd = families["slab_append"]
+    derived = {
+        "gather_masked_tile_frac": gd["paged_gather.masked_tiles"]
+        / max(gd["paged_gather.tiles"] + gd["paged_gather.masked_tiles"], 1.0),
+        "push_back_occupancy": _ratio(
+            pd, "push_back.active_lanes", "push_back.lanes"
+        ),
+        "push_back_padded_lane_frac": _ratio(
+            pd, "push_back.padded_lanes", "push_back.lanes"
+        ),
+        "append_occupancy": _ratio(
+            sd, "slab_append.active_lanes", "slab_append.lanes"
+        ),
+    }
+    emit(
+        "kernels.device.push_back_occupancy_pct",
+        derived["push_back_occupancy"] * 100.0,
+        f"active/total wave lanes ({pd['push_back.active_lanes']:.0f}"
+        f"/{pd['push_back.lanes']:.0f})",
+    )
+    emit(
+        "kernels.device.gather_masked_tile_pct",
+        derived["gather_masked_tile_frac"] * 100.0,
+        "page-table entries walked without a live slab",
+    )
+    write_metrics_json("kernels", {"device": {**families, "derived": derived}})
 
 
 if __name__ == "__main__":

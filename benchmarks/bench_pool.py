@@ -280,14 +280,55 @@ def main() -> None:
         "arena slots per ggarray slot at equal live data",
     )
 
+    # --- device counter plane: see inside the pool (DESIGN.md §9.x) -------
+    # A separate instrumented engine over the same fleet (the timed engines
+    # stay uninstrumented so the wall-clocks are untouched); its in-kernel
+    # counters yield the geometry metrics check_regression.py ratchets.
+    bi = BatchEngine(params, cfg, max_batch=max_batch, instrument=True)
+    for p in prompts:
+        bi.submit(p, new_tokens)
+    bi.run()
+    dev = bi.drain_device_counters()
+    decode_tokens = nseqs * new_tokens
+    attend_lanes = max(dev["paged_attend.lanes"], 1.0)
+    append_lanes = max(dev["slab_append.lanes"], 1.0)
+    masked_waste = dev["paged_attend.masked_lanes"] / attend_lanes
+    tiles_per_token = dev["paged_attend.tiles"] / max(decode_tokens, 1)
+    occupancy = dev["slab_append.active_lanes"] / append_lanes
+    emit(
+        "pool_device_masked_lane_waste_pct",
+        masked_waste * 100.0,
+        f"attend lanes past kv_len / lanes walked "
+        f"({dev['paged_attend.masked_lanes']:.0f}/{attend_lanes:.0f})",
+    )
+    emit(
+        "pool_device_tiles_per_token",
+        tiles_per_token,
+        f"attend KV tiles per decoded token over {decode_tokens} tokens",
+    )
+    emit(
+        "pool_device_append_occupancy_pct",
+        occupancy * 100.0,
+        f"slab-append active/total lanes "
+        f"({dev['slab_append.active_lanes']:.0f}/{append_lanes:.0f})",
+    )
+
     # --- telemetry artifact: full registry snapshots of the timed engines -
-    # check_regression.py --metrics gates TTFT p95 (chunked/monolithic) and
-    # pool utilization from this file; the rest is for diagnosis.
+    # check_regression.py --metrics gates TTFT p95 (chunked/monolithic),
+    # pool utilization, and the device-counter waste ratchet from this file;
+    # the rest is for diagnosis.
     write_metrics_json(
         "pool",
         {
             "chunked": be.obs.snapshot(),
             "monolithic": bm.obs.snapshot(),
+            "device": {
+                "counters": dev,
+                "masked_lane_waste": masked_waste,
+                "tiles_per_token": tiles_per_token,
+                "append_occupancy": occupancy,
+                "decode_tokens": decode_tokens,
+            },
             "prefix": {
                 "hit_rate": hit_rate,
                 "ttft_cold_ms": ttft_cold * 1e3,

@@ -79,9 +79,9 @@ def _rows(path: str) -> dict[str, float]:
     return {r["name"]: r["us_per_call"] for r in payload["rows"]}
 
 
-def _telemetry(path: str) -> tuple[float, float, float, float] | str:
-    """(ttft_p95_ratio, utilization, prefix_hit_rate, ttft_hit_ratio) from
-    METRICS_pool.json, or an error string."""
+def _telemetry(path: str) -> tuple[float, float, float, float, float] | str:
+    """(ttft_p95_ratio, utilization, prefix_hit_rate, ttft_hit_ratio,
+    masked_lane_waste) from METRICS_pool.json, or an error string."""
     try:
         with open(path) as f:
             engines = json.load(f)["engines"]
@@ -95,9 +95,12 @@ def _telemetry(path: str) -> tuple[float, float, float, float] | str:
         prefix = engines["prefix"]
         hit_rate = float(prefix["hit_rate"])
         hit_ttft_ratio = float(prefix["ttft_hit_ratio"])
+        # device counter plane (DESIGN.md §9.x): attend masked-lane waste —
+        # a missing section fails, so the gate cannot be dodged
+        masked_waste = float(engines["device"]["masked_lane_waste"])
     except (OSError, KeyError, TypeError) as e:
         return f"{path}: {type(e).__name__}: {e}"
-    return ttft_ratio, util, hit_rate, hit_ttft_ratio
+    return ttft_ratio, util, hit_rate, hit_ttft_ratio, masked_waste
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -150,7 +153,7 @@ def main(argv: list[str] | None = None) -> int:
         print(f"check_regression: telemetry gate unreadable — {telemetry}",
               file=sys.stderr)
         return 1
-    ttft_ratio, util, hit_rate, hit_ttft_ratio = telemetry
+    ttft_ratio, util, hit_rate, hit_ttft_ratio, masked_waste = telemetry
 
     if args.update:
         os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
@@ -173,6 +176,10 @@ def main(argv: list[str] | None = None) -> int:
                         "ttft_hit_ratio": round(hit_ttft_ratio, 3),
                         "source": "METRICS_pool.json",
                     },
+                    "device": {
+                        "masked_lane_waste": round(masked_waste, 4),
+                        "source": "METRICS_pool.json",
+                    },
                     "source": "benchmarks/bench_pool.py --smoke",
                 },
                 f,
@@ -183,7 +190,8 @@ def main(argv: list[str] | None = None) -> int:
             f"check_regression: baseline updated to {ratio:.3f} "
             f"(grow-step ratio {grow_ratio:.3f}, ttft p95 ratio "
             f"{ttft_ratio:.3f}, utilization {util:.3f}, prefix hit rate "
-            f"{hit_rate:.3f}, hit/cold ttft {hit_ttft_ratio:.3f})"
+            f"{hit_rate:.3f}, hit/cold ttft {hit_ttft_ratio:.3f}, "
+            f"masked-lane waste {masked_waste:.4f})"
         )
         return 0
 
@@ -265,9 +273,26 @@ def main(argv: list[str] | None = None) -> int:
                 f"prefill: {px_verdict}"
             )
             return 1
+    # device counter plane (DESIGN.md §9.x): masked-lane waste is a ratchet —
+    # the attend walk reading lanes past kv_len may only get leaner; a jump
+    # past baseline + tolerance means the page-walk gating regressed
+    dev_verdict = f"masked-lane waste {masked_waste:.4f}"
+    dev_base = baseline.get("device")
+    if dev_base is not None:
+        waste_ceil = (1.0 + args.tolerance) * dev_base["masked_lane_waste"]
+        dev_verdict += (
+            f" (baseline {dev_base['masked_lane_waste']:.4f}, "
+            f"ceiling {waste_ceil:.4f})"
+        )
+        if masked_waste > waste_ceil:
+            print(
+                "check_regression: FAIL — attend masked-lane waste grew: "
+                f"{dev_verdict}"
+            )
+            return 1
     print(
         f"check_regression: OK — {verdict}; {grow_verdict}; {tel_verdict}; "
-        f"{px_verdict}"
+        f"{px_verdict}; {dev_verdict}"
     )
     return 0
 

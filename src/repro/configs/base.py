@@ -97,6 +97,11 @@ class ModelConfig:
     kernel_memory_space: Literal["vmem", "hbm"] | None = None
     insertion_method: str = "scan"
     remat: bool = True
+    # device counter plane (obs/device, DESIGN.md §9.x): when set, the cache
+    # ops record in-kernel/jnp counters and the step functions return an
+    # extra counter vector.  Off by default — the uninstrumented trace is
+    # byte-identical to a config without the field (compile-spy tested).
+    instrument: bool = False
 
     def __post_init__(self):
         if self.n_layers % len(self.layout):

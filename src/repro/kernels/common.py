@@ -171,6 +171,15 @@ class GridPlan:
     ``in_specs`` entries may be ``pl.BlockSpec(memory_space=pltpu.ANY)`` for
     operands the body DMAs manually (flatten's compact plane, push_back's
     bucket levels).
+
+    ``instrument=True`` appends the device counter plane's block
+    (``obs/device``: (8, 128) int32, every grid step mapped to the same
+    block — the grid-accumulator idiom) as one extra output in **both**
+    memory spaces: the body receives its ref after the declared outputs and
+    before scratch, and writes it with ``device.ctr_accum``.  Off by
+    default, and when off this dataclass field doesn't reach the
+    ``pallas_call`` — the uninstrumented plan builds the exact same program
+    as before the counter plane existed.
     """
 
     memory_space: str
@@ -181,6 +190,7 @@ class GridPlan:
     out_specs: Any
     scratch_shapes: Sequence[Any] = ()
     aliases: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    instrument: bool = False
 
     def __post_init__(self):
         if self.memory_space not in MEMORY_SPACES:
@@ -188,15 +198,31 @@ class GridPlan:
                 f"memory_space {self.memory_space!r} not in {MEMORY_SPACES}"
             )
 
+    def _with_counters(self, out_specs, out_shape):
+        """Append the counter block's spec + shape (instrumented plans)."""
+        from repro.obs import device
+
+        if not isinstance(out_specs, (list, tuple)):
+            out_specs = [out_specs]
+        if not isinstance(out_shape, (list, tuple)):
+            out_shape = [out_shape]
+        return (
+            list(out_specs) + [device.ctr_block_spec()],
+            list(out_shape) + [device.ctr_shape()],
+        )
+
     def pallas_call(self, body, out_shape, *, interpret: bool = False):
         """→ the configured ``pl.pallas_call`` (call it with tables first)."""
         aliases = {self.num_tables + i: o for i, o in self.aliases.items()}
+        out_specs = self.out_specs
+        if self.instrument:
+            out_specs, out_shape = self._with_counters(out_specs, out_shape)
         if self.memory_space == "hbm":
             grid_spec = pltpu.PrefetchScalarGridSpec(
                 num_scalar_prefetch=self.num_tables,
                 grid=self.grid,
                 in_specs=list(self.in_specs),
-                out_specs=self.out_specs,
+                out_specs=out_specs,
                 scratch_shapes=list(self.scratch_shapes),
             )
             return pl.pallas_call(
@@ -213,9 +239,9 @@ class GridPlan:
             body,
             grid=self.grid,
             in_specs=list(self.table_specs) + list(self.in_specs),
-            out_specs=self.out_specs,
+            out_specs=out_specs,
             out_shape=out_shape,
-            input_output_aliases=aliases,
             interpret=interpret,
+            input_output_aliases=aliases,
             **kwargs,
         )

@@ -44,8 +44,21 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import indexing
 from repro.kernels import common
+from repro.obs import device
 
 __all__ = ["compact_blocks_pallas", "segmented_gather_pallas"]
+
+
+def _seg_ctr(ctr_ref, t, lo, hi):
+    """One gather tile's device counters: ``rows_touched`` is this tile's
+    block span ``hi − lo`` — exactly the rows the hbm tiling DMAs (the vmem
+    tiling computes the same span from the prefix table, so the counter is
+    space-invariant)."""
+    first = t == 0
+    device.ctr_accum(ctr_ref, first, [
+        ("flatten.launches", jnp.where(first, 1, 0)),
+        ("flatten.rows_touched", hi - lo),
+    ])
 
 DEFAULT_BLOCK_TILE = 8
 DEFAULT_SEG_TILE = 256
@@ -128,7 +141,10 @@ def compact_blocks_pallas(
 # segmented gather — block-major global ordering off the prefix table.
 # --------------------------------------------------------------------------
 
-def _seg_gather_vmem(starts_ref, ends_ref, compact_ref, o_ref, *, seg_tile):
+def _seg_gather_vmem(
+    starts_ref, ends_ref, compact_ref, *refs, seg_tile, instrument=False,
+):
+    o_ref = refs[0]
     """One output tile of the block-major global order.
 
     ``starts``/``ends`` are the runtime prefix-sum table (exclusive /
@@ -152,12 +168,18 @@ def _seg_gather_vmem(starts_ref, ends_ref, compact_ref, o_ref, *, seg_tile):
     lin = blk * cap + jnp.minimum(pos, cap - 1)
     vals = jnp.take(compact_ref[...].reshape(-1), lin)
     o_ref[0, :] = jnp.where(live, vals, jnp.zeros_like(vals))
+    if instrument:
+        tbase = t * seg_tile
+        lo = jnp.maximum(jnp.sum((starts <= tbase).astype(jnp.int32)) - 1, 0)
+        hi = jnp.sum((starts <= tbase + seg_tile - 1).astype(jnp.int32))
+        _seg_ctr(refs[1], t, lo, hi)
 
 
 def _seg_gather_hbm(
-    starts_ref, ends_ref, lo_ref, hi_ref, compact_ref, o_ref, row, sem,
-    *, seg_tile,
+    starts_ref, ends_ref, lo_ref, hi_ref, compact_ref, *refs,
+    seg_tile, instrument=False,
 ):
+    o_ref, row, sem = refs[0], refs[-2], refs[-1]
     """One output tile, compact plane in HBM.
 
     The tile's block span ``[lo_t, hi_t)`` was precomputed from the prefix
@@ -181,6 +203,8 @@ def _seg_gather_hbm(
 
     zero = jnp.zeros((seg_tile,), o_ref.dtype)
     o_ref[0, :] = jax.lax.fori_loop(lo_ref[t], hi_ref[t], claim, zero)
+    if instrument:
+        _seg_ctr(refs[1], t, lo_ref[t], hi_ref[t])
 
 
 def segmented_gather_pallas(
@@ -190,13 +214,15 @@ def segmented_gather_pallas(
     *,
     seg_tile: int = DEFAULT_SEG_TILE,
     memory_space: str = "vmem",
+    instrument: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     """→ (nblocks·cap,) live elements in block-major global order, rest 0.
 
     The grid covers ``ceil(total / seg_tile)`` tiles; overhang indices in the
     last tile clamp to the final slot and fail the liveness test, so no input
-    padding is needed for non-tile-aligned capacities.
+    padding is needed for non-tile-aligned capacities.  With
+    ``instrument=True`` → (out, counter block).
     """
     nblocks, cap = compact.shape
     total = nblocks * cap
@@ -223,12 +249,17 @@ def segmented_gather_pallas(
                 pltpu.VMEM((1, cap), compact.dtype),
                 pltpu.SemaphoreType.DMA,
             ],
+            instrument=instrument,
         )
-        kernel = functools.partial(_seg_gather_hbm, seg_tile=seg_tile)
-        out = plan.pallas_call(kernel, out_shape, interpret=interpret)(
+        kernel = functools.partial(
+            _seg_gather_hbm, seg_tile=seg_tile, instrument=instrument
+        )
+        outs = plan.pallas_call(kernel, out_shape, interpret=interpret)(
             starts, ends, lo, hi, compact
         )
-        return out[0, :total]
+        if instrument:
+            return outs[0][0, :total], outs[1]
+        return outs[0, :total]
     plan = common.GridPlan(
         memory_space="vmem",
         grid=(ntiles,),
@@ -239,9 +270,14 @@ def segmented_gather_pallas(
         ],
         in_specs=[pl.BlockSpec((nblocks, cap), lambda t: (0, 0))],
         out_specs=pl.BlockSpec((1, seg_tile), lambda t: (0, t)),
+        instrument=instrument,
     )
-    kernel = functools.partial(_seg_gather_vmem, seg_tile=seg_tile)
-    out = plan.pallas_call(kernel, out_shape, interpret=interpret)(
+    kernel = functools.partial(
+        _seg_gather_vmem, seg_tile=seg_tile, instrument=instrument
+    )
+    outs = plan.pallas_call(kernel, out_shape, interpret=interpret)(
         starts.reshape(1, nblocks), ends.reshape(1, nblocks), compact
     )
-    return out[0, :total]
+    if instrument:
+        return outs[0][0, :total], outs[1]
+    return outs[0, :total]

@@ -28,8 +28,25 @@ from repro.kernels import common
 from repro.kernels.dispatch_mxu import ops as dispatch_ops
 from repro.kernels.flatten import kernel as _kernel
 from repro.kernels.flatten import ref as _ref
+from repro.obs import device
 
 __all__ = ["compact_blocks", "flatten", "flatten_segmented", "flatten_dispatch"]
+
+
+def _seg_ctr_oracle(starts, ends, nblocks: int, cap: int) -> jax.Array:
+    """jnp oracle for the segmented-gather device counters: per output tile,
+    the block span ``[lo_t, hi_t)`` the kernel walks (same prefix-table
+    arithmetic as the hbm tiling's precomputed spans)."""
+    seg_tile = _kernel.DEFAULT_SEG_TILE
+    ntiles = -(-(nblocks * cap) // seg_tile)
+    tbase = jnp.arange(ntiles, dtype=jnp.int32) * seg_tile
+    lo = jnp.maximum(jnp.sum(starts[None, :] <= tbase[:, None], axis=1) - 1, 0)
+    hi = jnp.sum(starts[None, :] <= (tbase + seg_tile - 1)[:, None], axis=1)
+    return device.pack(**{
+        "flatten.launches": 1,
+        "flatten.rows_touched": jnp.sum(hi - lo),
+        "flatten.span_rows": jnp.sum(ends - starts),
+    })
 
 
 @partial(jax.jit, static_argnames=("b0", "interpret", "use_ref", "memory_space"))
@@ -57,7 +74,10 @@ def compact_blocks(
     return out[:nblocks]
 
 
-@partial(jax.jit, static_argnames=("b0", "interpret", "use_ref", "memory_space"))
+@partial(
+    jax.jit,
+    static_argnames=("b0", "interpret", "use_ref", "memory_space", "instrument"),
+)
 def flatten_segmented(
     buckets: tuple[jax.Array, ...],
     sizes: jax.Array,
@@ -66,23 +86,40 @@ def flatten_segmented(
     interpret: bool | None = None,
     use_ref: bool = False,
     memory_space: str | None = None,
-) -> jax.Array:
-    """GGArray flatten: compact + linear-time segmented gather."""
+    instrument: bool = False,
+):
+    """GGArray flatten: compact + linear-time segmented gather.
+
+    ``instrument=True`` → (out, device counter vector): ``rows_touched``
+    from the in-kernel block (jnp oracle under ``use_ref``), ``span_rows``
+    (= Σ sizes, the information bound) from the prefix table here.
+    """
     compact = compact_blocks(
         buckets, b0, interpret=interpret, use_ref=use_ref,
         memory_space=memory_space,
     )
+    nblocks, cap = compact.shape
     starts = indexing.block_starts(sizes).astype(jnp.int32)
     ends = starts + sizes.astype(jnp.int32)
     if use_ref:
-        return _ref.gather_global(compact, starts, ends)
-    return _kernel.segmented_gather_pallas(
+        out = _ref.gather_global(compact, starts, ends)
+        if instrument:
+            return out, _seg_ctr_oracle(starts, ends, nblocks, cap)
+        return out
+    outs = _kernel.segmented_gather_pallas(
         compact,
         starts,
         ends,
         memory_space=common.resolve_memory_space(memory_space, interpret),
+        instrument=instrument,
         interpret=common.should_interpret(interpret),
     )
+    if instrument:
+        vec = device.from_block(outs[1]) + device.pack(
+            **{"flatten.span_rows": jnp.sum(ends - starts)}
+        )
+        return outs[0], vec
+    return outs
 
 
 @partial(jax.jit, static_argnames=("b0", "interpret", "use_ref", "memory_space"))
@@ -114,7 +151,9 @@ def flatten_dispatch(
 
 @partial(
     jax.jit,
-    static_argnames=("b0", "interpret", "use_ref", "impl", "memory_space"),
+    static_argnames=(
+        "b0", "interpret", "use_ref", "impl", "memory_space", "instrument",
+    ),
 )
 def flatten(
     buckets: tuple[jax.Array, ...],
@@ -125,13 +164,24 @@ def flatten(
     use_ref: bool = False,
     impl: str = "segmented",
     memory_space: str | None = None,
-) -> jax.Array:
+    instrument: bool = False,
+):
     """Full GGArray flatten on kernels → (nblocks·cap,) block-major order."""
     if impl == "segmented":
         return flatten_segmented(
             buckets, sizes, b0, interpret=interpret, use_ref=use_ref,
+            memory_space=memory_space, instrument=instrument,
+        )
+    if impl == "dispatch" and instrument:
+        # legacy matmul ordering has no in-kernel plane; report the bound
+        out = flatten_dispatch(
+            buckets, sizes, b0, interpret=interpret, use_ref=use_ref,
             memory_space=memory_space,
         )
+        return out, device.pack(**{
+            "flatten.launches": 1,
+            "flatten.span_rows": jnp.sum(sizes.astype(jnp.int32)),
+        })
     if impl == "dispatch":
         return flatten_dispatch(
             buckets, sizes, b0, interpret=interpret, use_ref=use_ref,

@@ -46,6 +46,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import common
 from repro.kernels.paged.ref import MASK_VALUE
 from repro.kernels.push_back.kernel import apply_insert_permutation
+from repro.obs import device
 
 __all__ = [
     "paged_gather_pallas",
@@ -59,11 +60,34 @@ __all__ = [
 DEFAULT_ROW_TILE = 8
 
 
+def _attend_ctr(ctr_ref, slab_live, kv_len, p, slab_tokens):
+    """Accumulate one attend grid step's device counters (§9.x).
+
+    ``visit`` mirrors the body's compute gate exactly — live slab id AND
+    page start inside the KV length; ``masked_lanes`` counts score lanes in
+    *visited* tiles that the causal-length mask then discards (the tail
+    waste of token-granularity slabs).
+    """
+    visit = jnp.where(slab_live & (p * slab_tokens < kv_len), 1, 0)
+    masked = visit * (
+        slab_tokens - jnp.clip(kv_len - p * slab_tokens, 0, slab_tokens)
+    )
+    first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0) & (p == 0)
+    device.ctr_accum(ctr_ref, first, [
+        ("paged_attend.launches", jnp.where(first, 1, 0)),
+        ("paged_attend.tiles", visit),
+        ("paged_attend.tiles_skipped", 1 - visit),
+        ("paged_attend.lanes", visit * slab_tokens),
+        ("paged_attend.masked_lanes", masked),
+    ])
+
+
 # --------------------------------------------------------------------------
 # gather — logical contiguous view through the page table.
 # --------------------------------------------------------------------------
 
-def _gather_vmem(pages_ref, pool_ref, out_ref):
+def _gather_vmem(pages_ref, pool_ref, *refs, instrument=False):
+    out_ref = refs[0]
     pages = pages_ref[...]  # (rows, P) int32
     pool = pool_ref[...]  # (S, T, D)
     rows, P = pages.shape
@@ -72,12 +96,29 @@ def _gather_vmem(pages_ref, pool_ref, out_ref):
     g = jnp.take(pool, idx, axis=0).reshape(rows, P, T, D)
     valid = (pages >= 0)[:, :, None, None]
     out_ref[...] = jnp.where(valid, g, 0).reshape(rows, P * T, D)
+    if instrument:
+        first = pl.program_id(0) == 0
+        live = jnp.sum((pages >= 0).astype(jnp.int32))
+        device.ctr_accum(refs[1], first, [
+            ("paged_gather.launches", jnp.where(first, 1, 0)),
+            ("paged_gather.tiles", live),
+            ("paged_gather.masked_tiles", rows * P - live),
+        ])
 
 
-def _gather_hbm(pages_ref, pool_ref, out_ref):
+def _gather_hbm(pages_ref, pool_ref, *refs, instrument=False):
+    out_ref = refs[0]
     n, p = pl.program_id(0), pl.program_id(1)
     slab = pages_ref[n, p]  # this step's one DMA'd tile is pool[slab]
     out_ref[...] = jnp.where(slab >= 0, pool_ref[...], 0)
+    if instrument:
+        first = (n == 0) & (p == 0)
+        live = jnp.where(slab >= 0, 1, 0)
+        device.ctr_accum(refs[1], first, [
+            ("paged_gather.launches", jnp.where(first, 1, 0)),
+            ("paged_gather.tiles", live),
+            ("paged_gather.masked_tiles", 1 - live),
+        ])
 
 
 def paged_gather_pallas(
@@ -86,13 +127,15 @@ def paged_gather_pallas(
     *,
     row_tile: int = DEFAULT_ROW_TILE,
     memory_space: str = "vmem",
+    instrument: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     """→ (N, P·T, D) contiguous logical views (zeros under page −1).
 
     Any row count works: the vmem tiling pads ``N`` up to ``row_tile`` with
     page-table rows of −1 (provably inert — every lane reads as zero) and
-    slices the result; the hbm tiling grids over rows directly.
+    slices the result; the hbm tiling grids over rows directly.  With
+    ``instrument=True`` → (out, counter block).
     """
     N, P = pages.shape
     S, T, D = pool.shape
@@ -109,12 +152,16 @@ def paged_gather_pallas(
                 )
             ],
             out_specs=pl.BlockSpec((1, T, D), lambda n, p, pages: (n, p, 0)),
+            instrument=instrument,
         )
-        return plan.pallas_call(
-            _gather_hbm,
+        outs = plan.pallas_call(
+            functools.partial(_gather_hbm, instrument=instrument),
             jax.ShapeDtypeStruct((N, P * T, D), pool.dtype),
             interpret=interpret,
         )(pages, pool)
+        if instrument:
+            return outs[0], outs[1]
+        return outs
     pages_p = common.pad_to(pages, row_tile, axis=0, value=-1)
     Np = pages_p.shape[0]
     plan = common.GridPlan(
@@ -124,13 +171,16 @@ def paged_gather_pallas(
         table_specs=[pl.BlockSpec((row_tile, P), lambda i: (i, 0))],
         in_specs=[pl.BlockSpec((S, T, D), lambda i: (0, 0, 0))],
         out_specs=pl.BlockSpec((row_tile, P * T, D), lambda i: (i, 0, 0)),
+        instrument=instrument,
     )
-    out = plan.pallas_call(
-        _gather_vmem,
+    outs = plan.pallas_call(
+        functools.partial(_gather_vmem, instrument=instrument),
         jax.ShapeDtypeStruct((Np, P * T, D), pool.dtype),
         interpret=interpret,
     )(pages_p, pool)
-    return out[:N]
+    if instrument:
+        return outs[0][:N], outs[1]
+    return outs[:N]
 
 
 # --------------------------------------------------------------------------
@@ -253,9 +303,13 @@ def _attend_step(q, k, v, kv_len, p, slab_tokens, m_ref, l_ref, acc_ref):
 
 
 def _attend_vmem(
-    len_ref, pages_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, slab_tokens, n_pages,
+    len_ref, pages_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+    slab_tokens, n_pages, instrument=False,
 ):
+    if instrument:
+        ctr_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        m_ref, l_ref, acc_ref = rest
     p = pl.program_id(2)
 
     @pl.when(p == 0)
@@ -279,11 +333,18 @@ def _attend_vmem(
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
+    if instrument:
+        _attend_ctr(ctr_ref, slab >= 0, kv_len, p, slab_tokens)
+
 
 def _attend_hbm(
-    len_ref, pages_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, slab_tokens, n_pages,
+    len_ref, pages_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+    slab_tokens, n_pages, instrument=False,
 ):
+    if instrument:
+        ctr_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        m_ref, l_ref, acc_ref = rest
     b, p = pl.program_id(0), pl.program_id(2)
 
     @pl.when(p == 0)
@@ -309,6 +370,9 @@ def _attend_hbm(
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
+    if instrument:
+        _attend_ctr(ctr_ref, slab >= 0, kv_len, p, slab_tokens)
+
 
 def paged_attend_pallas(
     q: jax.Array,  # (B, KH, G, D) f32, pre-scaled
@@ -318,8 +382,9 @@ def paged_attend_pallas(
     lengths: jax.Array,  # (B,) int32
     *,
     memory_space: str = "vmem",
+    instrument: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     B, KH, G, D = q.shape
     _, S, T, _ = k_pool.shape
     P = pages.shape[1]
@@ -350,11 +415,15 @@ def paged_attend_pallas(
                 (1, 1, G, D), lambda b, h, p, lens, pages: (b, h, 0, 0)
             ),
             scratch_shapes=scratch,
+            instrument=instrument,
         )
-        kernel = functools.partial(_attend_hbm, slab_tokens=T, n_pages=P)
-        return plan.pallas_call(kernel, out_shape, interpret=interpret)(
+        kernel = functools.partial(
+            _attend_hbm, slab_tokens=T, n_pages=P, instrument=instrument
+        )
+        outs = plan.pallas_call(kernel, out_shape, interpret=interpret)(
             lengths, pages, q, k_pool, v_pool
         )
+        return (outs[0], outs[1]) if instrument else outs
     plan = common.GridPlan(
         memory_space="vmem",
         grid=(B, KH, P),
@@ -370,11 +439,15 @@ def paged_attend_pallas(
         ],
         out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p: (b, h, 0, 0)),
         scratch_shapes=scratch,
+        instrument=instrument,
     )
-    kernel = functools.partial(_attend_vmem, slab_tokens=T, n_pages=P)
-    return plan.pallas_call(kernel, out_shape, interpret=interpret)(
+    kernel = functools.partial(
+        _attend_vmem, slab_tokens=T, n_pages=P, instrument=instrument
+    )
+    outs = plan.pallas_call(kernel, out_shape, interpret=interpret)(
         lengths.reshape(B, 1), pages, q, k_pool, v_pool
     )
+    return (outs[0], outs[1]) if instrument else outs
 
 
 def _attend_vmem_extents(

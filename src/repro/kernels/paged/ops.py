@@ -21,9 +21,42 @@ import jax.numpy as jnp
 from repro.kernels import common
 from repro.kernels.paged import kernel as _kernel
 from repro.kernels.paged import ref as _ref
+from repro.obs import device
 from repro.pool import extents as _extents
 
 __all__ = ["paged_gather", "paged_attend", "slab_append", "slab_append_donated"]
+
+
+def _gather_ctr(table: jax.Array, space: str, row_tile: int) -> jax.Array:
+    """jnp gather counters matching the in-kernel accounting: the vmem
+    tiling pads rows with −1 pages, and those walked-but-dead entries are
+    genuine masked-tile waste, so they count."""
+    N, P = table.shape
+    rows = N if space == "hbm" else N + (-N) % row_tile
+    live = jnp.sum((table >= 0).astype(jnp.int32))
+    return device.pack(**{
+        "paged_gather.launches": 1,
+        "paged_gather.tiles": live,
+        "paged_gather.masked_tiles": rows * P - live,
+    })
+
+
+def _attend_ctr(table: jax.Array, lengths: jax.Array, T: int, KH: int) -> jax.Array:
+    """jnp attend counters over a (B, P) liveness table — the per-(b, p)
+    walk the kernel grids over, times the KH head steps."""
+    B, P = table.shape
+    p_idx = jnp.arange(P, dtype=jnp.int32)[None, :]
+    kv = lengths.astype(jnp.int32)[:, None]
+    visit = ((table >= 0) & (p_idx * T < kv)).astype(jnp.int32)  # (B, P)
+    masked = visit * (T - jnp.clip(kv - p_idx * T, 0, T))
+    tiles = jnp.sum(visit)
+    return device.pack(**{
+        "paged_attend.launches": 1,
+        "paged_attend.tiles": KH * tiles,
+        "paged_attend.tiles_skipped": KH * (B * P - tiles),
+        "paged_attend.lanes": KH * tiles * T,
+        "paged_attend.masked_lanes": KH * jnp.sum(masked),
+    })
 
 
 def _flat_item(x: jax.Array, lead: int) -> tuple[jax.Array, tuple[int, ...]]:
@@ -43,7 +76,10 @@ def _as_extents(pool) -> tuple[jax.Array, ...]:
     return live or exts[:1]
 
 
-@partial(jax.jit, static_argnames=("interpret", "use_ref", "memory_space"))
+@partial(
+    jax.jit,
+    static_argnames=("interpret", "use_ref", "memory_space", "instrument"),
+)
 def paged_gather(
     pool,  # (S, T, *item) or tuple of extents (S_e, T, *item)
     pages: jax.Array,  # (N, P) int32 — global slab ids
@@ -51,28 +87,37 @@ def paged_gather(
     interpret: bool | None = None,
     use_ref: bool = False,
     memory_space: str | None = None,
-) -> jax.Array:
+    instrument: bool = False,
+) -> Any:
     """→ (N, P·T, *item) contiguous logical views (zeros under page −1).
 
     A tuple/list pool is a segmented :class:`~repro.pool.extents.ExtentPool`
     layout: the global page table is resolved through the two-level
     (extent, offset) table host-side and the kernel walks per-extent operands
     (the oracle is the same flat gather over the concatenated extents).
+    ``instrument=True`` → (out, device counter vector): in-kernel on the
+    single-extent fused path, the matching jnp oracle elsewhere.
     """
     exts = _as_extents(pool)
     T = exts[0].shape[1]
     N, P = pages.shape
+    space = common.resolve_memory_space(memory_space, interpret)
     if use_ref:
         pool3, item = _flat_item(_extents.flat_data(exts), 2)
-        return _ref.gather_pages(pool3, pages).reshape(N, P * T, *item)
-    space = common.resolve_memory_space(memory_space, interpret)
+        out = _ref.gather_pages(pool3, pages).reshape(N, P * T, *item)
+        if instrument:
+            return out, _gather_ctr(pages, space, _kernel.DEFAULT_ROW_TILE)
+        return out
     run = common.should_interpret(interpret)
     if len(exts) == 1:
         pool3, item = _flat_item(exts[0], 2)
-        out = _kernel.paged_gather_pallas(
-            pool3, pages, memory_space=space, interpret=run
+        outs = _kernel.paged_gather_pallas(
+            pool3, pages, memory_space=space,
+            instrument=instrument, interpret=run,
         )
-        return out.reshape(N, P * T, *item)
+        if instrument:
+            return outs[0].reshape(N, P * T, *item), device.from_block(outs[1])
+        return outs.reshape(N, P * T, *item)
     flat = [_flat_item(e, 2) for e in exts]
     item = flat[0][1]
     ext_tbl, off_tbl = _extents.resolve_pages(
@@ -84,11 +129,16 @@ def paged_gather(
         off_tbl,
         memory_space=space,
         interpret=run,
-    )
-    return out.reshape(N, P * T, *item)
+    ).reshape(N, P * T, *item)
+    if instrument:
+        return out, _gather_ctr(ext_tbl, space, _kernel.DEFAULT_ROW_TILE)
+    return out
 
 
-@partial(jax.jit, static_argnames=("interpret", "use_ref", "memory_space"))
+@partial(
+    jax.jit,
+    static_argnames=("interpret", "use_ref", "memory_space", "instrument"),
+)
 def paged_attend(
     q: jax.Array,  # (B, KH, G, D) f32, pre-scaled
     k_pool,  # (S, T, KH, D) token-major pool, or tuple of extents
@@ -99,37 +149,50 @@ def paged_attend(
     interpret: bool | None = None,
     use_ref: bool = False,
     memory_space: str | None = None,
-) -> jax.Array:
+    instrument: bool = False,
+) -> Any:
     """→ (B, KH, G, D) f32 attention output through the page table.
 
     Pools arrive in the cache's token-major ``(slab, slot, head, dim)``
     layout and are transposed head-major for the kernel's per-head blocking
     (a production pool would be laid out head-major to begin with).  Tuple
     pools are segmented extents; the walk resolves global slab ids through
-    the two-level (extent, offset) table.
+    the two-level (extent, offset) table.  ``instrument=True`` → (out,
+    device counter vector): in-kernel on the single-extent path, the
+    matching jnp oracle elsewhere.
     """
     k_exts = _as_extents(k_pool)
     v_exts = _as_extents(v_pool)
     kh = tuple(k.transpose(2, 0, 1, 3) for k in k_exts)  # each (KH, S_e, T, D)
     vh = tuple(v.transpose(2, 0, 1, 3) for v in v_exts)
+    KH, T = kh[0].shape[0], kh[0].shape[2]
     if use_ref:
         k1 = kh[0] if len(kh) == 1 else jnp.concatenate(kh, axis=1)
         v1 = vh[0] if len(vh) == 1 else jnp.concatenate(vh, axis=1)
-        return _ref.attend_paged(q, k1, v1, pages, lengths)
+        out = _ref.attend_paged(q, k1, v1, pages, lengths)
+        if instrument:
+            return out, _attend_ctr(pages, lengths, T, KH)
+        return out
     space = common.resolve_memory_space(memory_space, interpret)
     run = common.should_interpret(interpret)
     if len(kh) == 1:
-        return _kernel.paged_attend_pallas(
+        outs = _kernel.paged_attend_pallas(
             q, kh[0], vh[0], pages, lengths,
-            memory_space=space, interpret=run,
+            memory_space=space, instrument=instrument, interpret=run,
         )
+        if instrument:
+            return outs[0], device.from_block(outs[1])
+        return outs
     ext_tbl, off_tbl = _extents.resolve_pages(
         pages, tuple(k.shape[1] for k in kh)
     )
-    return _kernel.paged_attend_pallas_extents(
+    out = _kernel.paged_attend_pallas_extents(
         q, kh, vh, ext_tbl, off_tbl, lengths,
         memory_space=space, interpret=run,
     )
+    if instrument:
+        return out, _attend_ctr(ext_tbl, lengths, T, KH)
+    return out
 
 
 def _slab_append(
@@ -144,14 +207,16 @@ def _slab_append(
     use_ref: bool = False,
     memory_space: str | None = None,
     dispatch: str = "auto",
-) -> tuple[Any, jax.Array, jax.Array]:
+    instrument: bool = False,
+) -> tuple:
     """→ (new pool, new sizes (N,), positions (N, m) (−1 where masked)).
 
     A tuple pool comes back as a tuple with the *same structure*: the kernel
     launches once per extent against that extent's slice of the owner/base
     tables (slab ids are contiguous per extent), each launch aliasing its
     extent in place — growth never copied the pool, and neither does the
-    append.
+    append.  ``instrument=True`` appends a device counter vector (jnp wave
+    accounting — same numbers on every path/space).
     """
     if mask.dtype != jnp.bool_:
         mask = mask != 0
@@ -159,8 +224,21 @@ def _slab_append(
     exts = tuple(pool) if is_multi else (pool,)
     T = exts[0].shape[1]
     N, m = mask.shape
+
+    def ctr():
+        # the kernel pads wave lanes to MXU_LANE in both memory spaces
+        m_pad = m + (-m) % common.MXU_LANE
+        return device.pack(**{
+            "slab_append.waves": 1,
+            "slab_append.lanes": N * m_pad,
+            "slab_append.active_lanes": jnp.sum(mask.astype(jnp.int32)),
+        })
+
     if m == 0:
-        return pool, sizes, jnp.zeros((N, 0), jnp.int32)
+        pos0 = jnp.zeros((N, 0), jnp.int32)
+        if instrument:
+            return pool, sizes, pos0, device.zeros()
+        return pool, sizes, pos0
     ext_item = [_flat_item(e, 2) for e in exts]
     item = ext_item[0][1]
     elems3, _ = _flat_item(elems, 2)
@@ -170,13 +248,17 @@ def _slab_append(
             pool3, owners, bases, sizes.astype(jnp.int32), elems3, mask
         )
         if not is_multi:
-            return new_pool.reshape(pool.shape), new_sizes, pos
-        out, lo = [], 0
-        for e in exts:
-            hi = lo + e.shape[0]
-            out.append(new_pool[lo:hi].reshape(e.shape))
-            lo = hi
-        return tuple(out), new_sizes, pos
+            new_pool = new_pool.reshape(pool.shape)
+        else:
+            out, lo = [], 0
+            for e in exts:
+                hi = lo + e.shape[0]
+                out.append(new_pool[lo:hi].reshape(e.shape))
+                lo = hi
+            new_pool = tuple(out)
+        if instrument:
+            return new_pool, new_sizes, pos, ctr()
+        return new_pool, new_sizes, pos
     # positions/counts are pure mask arithmetic — recomputed in-kernel for
     # the scatter, emitted here for the caller (same exclusive scan)
     mask_i = mask.astype(jnp.int32)
@@ -221,15 +303,15 @@ def _slab_append(
     new_sizes = sizes + counts
     pos = jnp.where(mask, pos, -1)
     if not is_multi:
-        return new_exts[0].reshape(pool.shape), new_sizes, pos
-    return (
-        tuple(ne.reshape(e.shape) for ne, e in zip(new_exts, exts)),
-        new_sizes,
-        pos,
-    )
+        new_pool = new_exts[0].reshape(pool.shape)
+    else:
+        new_pool = tuple(ne.reshape(e.shape) for ne, e in zip(new_exts, exts))
+    if instrument:
+        return new_pool, new_sizes, pos, ctr()
+    return new_pool, new_sizes, pos
 
 
-_SLAB_STATICS = ("interpret", "use_ref", "memory_space", "dispatch")
+_SLAB_STATICS = ("interpret", "use_ref", "memory_space", "dispatch", "instrument")
 slab_append = partial(jax.jit, static_argnames=_SLAB_STATICS)(_slab_append)
 # The arena's hot path: the pool is donated, so together with the kernel's
 # input_output_aliases an append is O(wave) writes, not O(pool) copies.

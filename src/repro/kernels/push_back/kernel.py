@@ -53,10 +53,34 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import indexing
 from repro.kernels import common
 from repro.kernels.dispatch_mxu import kernel as dispatch_kernel
+from repro.obs import device
 
 __all__ = ["push_back_pallas", "apply_insert_permutation"]
 
 DEFAULT_BLOCK_TILE = 8
+
+
+def _ctr_pairs(mask, sizes, count, starts, bsizes):
+    """Device-counter contributions of one grid step (DESIGN.md §9.x).
+
+    ``level_writes`` is the true scatter volume: per row, the write interval
+    ``[size, size+count)`` clipped to each level's ``[start, start+width)``
+    — levels the interval misses contribute zero, so the sum equals the
+    bucket slots actually written (both memory spaces, touched or not).
+    """
+    rows, m = mask.shape
+    writes = jnp.zeros((), jnp.int32)
+    for b in range(len(bsizes)):
+        lo = jnp.maximum(sizes[:, 0], starts[b])
+        hi = jnp.minimum(sizes[:, 0] + count[:, 0], starts[b] + bsizes[b])
+        writes = writes + jnp.sum(jnp.maximum(hi - lo, 0))
+    first = pl.program_id(0) == 0
+    return first, [
+        ("push_back.waves", jnp.where(first, 1, 0)),  # 1 per launch
+        ("push_back.lanes", rows * m),
+        ("push_back.active_lanes", jnp.sum(mask)),
+        ("push_back.level_writes", writes),
+    ]
 
 
 def apply_insert_permutation(
@@ -97,13 +121,17 @@ def _level_window(gathered, sizes, count, level_tile, start, width, m):
     return jnp.where(valid[:, :, None], vals, level_tile)
 
 
-def _push_back_vmem(mask_ref, sizes_ref, *refs, starts, bsizes, ngroups, dispatches):
+def _push_back_vmem(
+    mask_ref, sizes_ref, *refs, starts, bsizes, ngroups, dispatches,
+    instrument=False,
+):
     nlev = len(bsizes)
     elems_refs = refs[:ngroups]
     level_in = refs[ngroups : ngroups + ngroups * nlev]  # group-major
     level_out = refs[ngroups + ngroups * nlev : ngroups + 2 * ngroups * nlev]
-    pos_ref = refs[-2]
-    nsz_ref = refs[-1]
+    nout = ngroups + 2 * ngroups * nlev
+    pos_ref = refs[nout]
+    nsz_ref = refs[nout + 1]
 
     mask = mask_ref[...]  # (rows, m) int32 0/1
     sizes = sizes_ref[...]  # (rows, 1) int32
@@ -127,17 +155,22 @@ def _push_back_vmem(mask_ref, sizes_ref, *refs, starts, bsizes, ngroups, dispatc
 
     pos_ref[...] = jnp.where(mask > 0, pos, -1)
     nsz_ref[...] = sizes + count
+    if instrument:
+        first, pairs = _ctr_pairs(mask, sizes, count, starts, bsizes)
+        device.ctr_accum(refs[nout + 2], first, pairs)
 
 
 def _push_back_hbm(
     touch_ref, mask_ref, sizes_ref, *refs, starts, bsizes, ngroups, dispatches,
+    instrument=False,
 ):
     nlev = len(bsizes)
     elems_refs = refs[:ngroups]
     # level inputs are aliased to the outputs — one HBM buffer; use the outs
     level_out = refs[ngroups + ngroups * nlev : ngroups + 2 * ngroups * nlev]
-    pos_ref = refs[ngroups + 2 * ngroups * nlev]
-    nsz_ref = refs[ngroups + 2 * ngroups * nlev + 1]
+    nout = ngroups + 2 * ngroups * nlev
+    pos_ref = refs[nout]
+    nsz_ref = refs[nout + 1]
     scratch = refs[-ngroups - 2 : -2]  # per group: (2, rows, max_width, d)
     sem_in, sem_out = refs[-2], refs[-1]  # (ngroups, 2) DMA semaphores
 
@@ -214,6 +247,9 @@ def _push_back_hbm(
 
     pos_ref[...] = jnp.where(mask > 0, pos, -1)
     nsz_ref[...] = sizes + count
+    if instrument:
+        first, pairs = _ctr_pairs(mask, sizes, count, starts, bsizes)
+        device.ctr_accum(refs[nout + 2], first, pairs)
 
 
 def push_back_pallas(
@@ -227,9 +263,14 @@ def push_back_pallas(
     memory_space: str = "vmem",
     dispatches: tuple[str, ...] | None = None,
     touch: jax.Array | None = None,  # (ntiles, nlev) int32 — hbm level gating
+    instrument: bool = False,
     interpret: bool = False,
-) -> tuple[tuple[tuple[jax.Array, ...], ...], jax.Array, jax.Array]:
-    """→ (new level groups, positions (−1 where masked), new sizes (nblocks, 1))."""
+) -> tuple:
+    """→ (new level groups, positions (−1 where masked), new sizes (nblocks, 1)).
+
+    With ``instrument=True`` the tuple gains a trailing (8, 128) int32
+    counter block (``obs/device`` layout) accumulated in-kernel.
+    """
     ngroups = len(elem_groups)
     nblocks, m, _ = elem_groups[0].shape
     if nblocks % block_tile:
@@ -290,10 +331,12 @@ def push_back_pallas(
                 pltpu.SemaphoreType.DMA((ngroups, 2)),
             ],
             aliases=aliases,
+            instrument=instrument,
         )
         kernel = functools.partial(
             _push_back_hbm,
             starts=starts, bsizes=bsizes, ngroups=ngroups, dispatches=dispatches,
+            instrument=instrument,
         )
         outs = plan.pallas_call(kernel, out_shape, interpret=interpret)(
             touch, mask, sizes, *elem_groups,
@@ -311,10 +354,12 @@ def push_back_pallas(
             + level_specs,
             out_specs=level_specs + [row_spec(m), row_spec(1)],
             aliases=aliases,
+            instrument=instrument,
         )
         kernel = functools.partial(
             _push_back_vmem,
             starts=starts, bsizes=bsizes, ngroups=ngroups, dispatches=dispatches,
+            instrument=instrument,
         )
         outs = plan.pallas_call(kernel, out_shape, interpret=interpret)(
             mask, sizes, *elem_groups,
@@ -323,4 +368,6 @@ def push_back_pallas(
     groups = tuple(
         tuple(outs[g * nlev : (g + 1) * nlev]) for g in range(ngroups)
     )
+    if instrument:
+        return groups, outs[nl], outs[nl + 1], outs[nl + 2]
     return groups, outs[nl], outs[nl + 1]

@@ -34,8 +34,34 @@ from repro.core import indexing
 from repro.kernels import common
 from repro.kernels.push_back import kernel as _kernel
 from repro.kernels.push_back import ref as _ref
+from repro.obs import device
 
 __all__ = ["push_back_fused", "push_back_fused_multi"]
+
+
+def _oracle_counters(mask, sizes, b0, nlev, nblocks, m):
+    """jnp device counters matching the in-kernel block's accounting: the
+    same padded-wave geometry the fused kernel runs, so the use_ref path
+    reports identical numbers (cross-checked in tests)."""
+    tile = _kernel.DEFAULT_BLOCK_TILE
+    rows_pad = nblocks + (-nblocks) % tile
+    m_pad = m + (-m) % common.MXU_LANE
+    starts = jnp.asarray(indexing.bucket_starts(b0, nlev), jnp.int32)
+    widths = jnp.asarray(indexing.bucket_sizes(b0, nlev), jnp.int32)
+    mask_i = mask.astype(jnp.int32)
+    count = jnp.sum(mask_i, axis=1)
+    lo = jnp.maximum(sizes.astype(jnp.int32)[:, None], starts[None, :])
+    hi = jnp.minimum(
+        (sizes.astype(jnp.int32) + count)[:, None], (starts + widths)[None, :]
+    )
+    writes = jnp.sum(jnp.maximum(hi - lo, 0))
+    return device.pack(**{
+        "push_back.waves": 1,
+        "push_back.lanes": rows_pad * m_pad,
+        "push_back.active_lanes": jnp.sum(mask_i),
+        "push_back.padded_lanes": rows_pad * m_pad - nblocks * m,
+        "push_back.level_writes": writes,
+    })
 
 
 def _level_touch(
@@ -54,7 +80,9 @@ def _level_touch(
 
 @partial(
     jax.jit,
-    static_argnames=("b0", "interpret", "use_ref", "memory_space", "dispatch"),
+    static_argnames=(
+        "b0", "interpret", "use_ref", "memory_space", "dispatch", "instrument",
+    ),
 )
 def push_back_fused_multi(
     bucket_groups: tuple[tuple[jax.Array, ...], ...],
@@ -67,18 +95,31 @@ def push_back_fused_multi(
     use_ref: bool = False,
     memory_space: str | None = None,
     dispatch: str = "auto",
-) -> tuple[tuple[tuple[jax.Array, ...], ...], jax.Array, jax.Array]:
-    """→ (new bucket groups, new sizes (nblocks,), positions (−1 masked))."""
+    instrument: bool = False,
+) -> tuple:
+    """→ (new bucket groups, new sizes (nblocks,), positions (−1 masked)).
+
+    ``instrument=True`` appends a device counter vector (``obs/device``
+    layout): in-kernel counts on the fused path (plus the statically known
+    padding waste), a matching jnp oracle on ``use_ref``/degenerate paths.
+    """
     if mask.dtype != jnp.bool_:
         mask = mask != 0
     nblocks, m = elem_groups[0].shape[:2]
+    nlev = len(bucket_groups[0])
     if m == 0:
-        return bucket_groups, sizes, jnp.zeros((nblocks, 0), jnp.int32)
+        pos0 = jnp.zeros((nblocks, 0), jnp.int32)
+        if instrument:
+            return bucket_groups, sizes, pos0, device.zeros()
+        return bucket_groups, sizes, pos0
     if use_ref:  # per-group oracle: positions/sizes are mask-only, identical
         groups, new_sizes, pos = [], None, None
         for buckets, elems in zip(bucket_groups, elem_groups):
             levels, new_sizes, pos = _ref.push_back(buckets, sizes, b0, elems, mask)
             groups.append(levels)
+        if instrument:
+            vec = _oracle_counters(mask, sizes, b0, nlev, nblocks, m)
+            return tuple(groups), new_sizes, pos, vec
         return tuple(groups), new_sizes, pos
 
     space = common.resolve_memory_space(memory_space, interpret)
@@ -110,13 +151,12 @@ def push_back_fused_multi(
     elems3 = [common.pad_to(e, common.MXU_LANE, axis=1) for e in elems3]
     mask = common.pad_to(mask, common.MXU_LANE, axis=1)
 
-    nlev = len(bucket_groups[0])
     touch = (
         _level_touch(sizes, mask.astype(jnp.int32), b0, nlev, tile)
         if space == "hbm"
         else None
     )
-    groups, pos, new_sizes = _kernel.push_back_pallas(
+    outs = _kernel.push_back_pallas(
         tuple(buckets3),
         sizes.reshape(-1, 1).astype(jnp.int32),
         b0,
@@ -125,8 +165,10 @@ def push_back_fused_multi(
         memory_space=space,
         dispatches=dispatches,
         touch=touch,
+        instrument=instrument,
         interpret=common.should_interpret(interpret),
     )
+    groups, pos, new_sizes = outs[:3]
     out_groups = tuple(
         tuple(
             lvl[:nblocks].reshape(nblocks, lvl.shape[1], *item)
@@ -134,12 +176,21 @@ def push_back_fused_multi(
         )
         for grp, item in zip(groups, item_shapes)
     )
+    if instrument:
+        # tile/MXU padding waste is statically known here, not in-kernel
+        pad_waste = mask.shape[0] * mask.shape[1] - nblocks * m
+        vec = device.from_block(outs[3]) + device.pack(
+            **{"push_back.padded_lanes": pad_waste}
+        )
+        return out_groups, new_sizes[:nblocks, 0], pos[:nblocks, :m], vec
     return out_groups, new_sizes[:nblocks, 0], pos[:nblocks, :m]
 
 
 @partial(
     jax.jit,
-    static_argnames=("b0", "interpret", "use_ref", "memory_space", "dispatch"),
+    static_argnames=(
+        "b0", "interpret", "use_ref", "memory_space", "dispatch", "instrument",
+    ),
 )
 def push_back_fused(
     buckets: tuple[jax.Array, ...],
@@ -152,11 +203,17 @@ def push_back_fused(
     use_ref: bool = False,
     memory_space: str | None = None,
     dispatch: str = "auto",
-) -> tuple[tuple[jax.Array, ...], jax.Array, jax.Array]:
-    """→ (new bucket levels, new sizes (nblocks,), positions (−1 masked))."""
-    groups, new_sizes, pos = push_back_fused_multi(
+    instrument: bool = False,
+) -> tuple:
+    """→ (new bucket levels, new sizes (nblocks,), positions (−1 masked));
+    with ``instrument=True`` a trailing device counter vector rides along."""
+    outs = push_back_fused_multi(
         (buckets,), sizes, b0, (elems,), mask,
         interpret=interpret, use_ref=use_ref,
-        memory_space=memory_space, dispatch=dispatch,
+        memory_space=memory_space, dispatch=dispatch, instrument=instrument,
     )
+    if instrument:
+        groups, new_sizes, pos, vec = outs
+        return groups[0], new_sizes, pos, vec
+    groups, new_sizes, pos = outs
     return groups[0], new_sizes, pos

@@ -15,6 +15,9 @@ scalars go through ``Counter.add_lazy`` and materialize only at explicit
 drain points (``snapshot()`` / metric reads), enforced by the transfer-guard
 test in ``tests/serving/test_telemetry.py``.
 """
+from repro.obs import device
+from repro.obs.device import DeviceCounterPlane
+from repro.obs.flightrec import FlightRecorder
 from repro.obs.registry import (
     Counter,
     Gauge,
@@ -28,6 +31,8 @@ from repro.obs.trace import Span, Tracer
 
 __all__ = [
     "Counter",
+    "DeviceCounterPlane",
+    "FlightRecorder",
     "Gauge",
     "GaugeFn",
     "Histogram",
@@ -36,4 +41,5 @@ __all__ = [
     "Span",
     "Tracer",
     "default_registry",
+    "device",
 ]

@@ -158,40 +158,89 @@ class GaugeFn(_Metric):
         out[self.name] = {"value": v, "hwm": v}
 
 
-def _summary(vals: list) -> dict:
+def _summary(vals: list, count: int | None = None, total: float | None = None) -> dict:
+    """Summary stats; ``count``/``total`` override the (possibly sampled)
+    raw list with the exact running values a bounded reservoir keeps."""
     arr = np.asarray(vals, np.float64)
+    n = int(arr.size) if count is None else int(count)
+    s = float(arr.sum()) if total is None else float(total)
     return {
-        "count": int(arr.size),
-        "sum": float(arr.sum()),
-        "mean": float(arr.mean()),
+        "count": n,
+        "sum": s,
+        "mean": s / n if n else 0.0,
         "p50": float(np.quantile(arr, 0.50)),
         "p95": float(np.quantile(arr, 0.95)),
         "max": float(arr.max()),
     }
 
 
+# Per-labelset sample cap: below it the histogram stores every observation
+# (exact quantiles); past it, Vitter's algorithm R keeps a uniform reservoir
+# so long serving runs hold O(1) memory per series instead of O(steps).
+RESERVOIR_CAP = 4096
+
+
 class Histogram(_Metric):
-    """Raw-sample histogram per label set (process-local, exact quantiles)."""
+    """Sampled histogram per label set with exact count/sum.
+
+    Memory per label set is bounded at :data:`RESERVOIR_CAP` samples: until
+    the cap every observation is stored (quantiles are exact); past it the
+    stored samples become a uniform reservoir (algorithm R, deterministic
+    per-metric RNG) — quantiles turn into reservoir estimates while
+    ``count``/``sum``/``mean`` stay exact running totals.
+    """
 
     kind = "histogram"
 
     def __init__(self, name: str, help: str = ""):
         super().__init__(name, help)
-        self._vals: dict[_Key, list[float]] = {}
+        self._vals: dict[_Key, list[float]] = {}  # bounded reservoirs
+        self._count: dict[_Key, int] = {}  # exact observation counts
+        self._sum: dict[_Key, float] = {}  # exact running sums
+        import random
+        import zlib
+
+        # deterministic per-metric stream (hash() is process-salted)
+        self._rng = random.Random(zlib.crc32(name.encode()))
 
     def observe(self, v: float, **labels) -> None:
-        self._vals.setdefault(_key(labels), []).append(float(v))
+        k = _key(labels)
+        v = float(v)
+        n = self._count.get(k, 0) + 1
+        self._count[k] = n
+        self._sum[k] = self._sum.get(k, 0.0) + v
+        vals = self._vals.setdefault(k, [])
+        if len(vals) < RESERVOIR_CAP:
+            vals.append(v)
+        else:  # algorithm R: keep each of the n seen with prob CAP/n
+            j = self._rng.randrange(n)
+            if j < RESERVOIR_CAP:
+                vals[j] = v
 
     def values(self, **labels) -> list[float]:
-        """Samples of one label set; with no labels, every sample merged."""
+        """Stored samples of one label set (every observation until
+        :data:`RESERVOIR_CAP`, a uniform reservoir past it); with no
+        labels, every stored sample merged."""
         if labels:
             return list(self._vals.get(_key(labels), []))
         return [v for vals in self._vals.values() for v in vals]
 
     def count(self, **labels) -> int:
-        return len(self.values(**labels))
+        """Exact observation count (not bounded by the reservoir)."""
+        if labels:
+            return self._count.get(_key(labels), 0)
+        return sum(self._count.values())
+
+    def sum(self, **labels) -> float:
+        """Exact running sum (not bounded by the reservoir)."""
+        if labels:
+            return self._sum.get(_key(labels), 0.0)
+        return sum(self._sum.values())
 
     def quantile(self, q: float, **labels) -> float:
+        """Quantile over the stored samples — exact while the label set has
+        at most :data:`RESERVOIR_CAP` observations, a uniform-reservoir
+        estimate beyond that."""
         vals = self.values(**labels)
         if not vals:
             raise ValueError(f"histogram {self.name}: no samples for {labels}")
@@ -201,10 +250,12 @@ class Histogram(_Metric):
         merged = self.values()
         if not merged:
             return
-        summary = _summary(merged)
+        summary = _summary(merged, self.count(), self.sum())
         if len(self._vals) > 1 or _key({}) not in self._vals:
             summary["series"] = {
-                _series_name(self.name, k): _summary(v)
+                _series_name(self.name, k): _summary(
+                    v, self._count.get(k, len(v)), self._sum.get(k)
+                )
                 for k, v in sorted(self._vals.items())
                 if v
             }

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import json
 
+from repro.obs.flightrec import FlightRecorder
 from repro.obs.registry import MetricsRegistry
 from repro.obs.trace import Tracer
 
@@ -33,9 +34,14 @@ class ServingTimeline:
         registry: MetricsRegistry | None = None,
         *,
         jax_annotations: bool = False,
+        flight_capacity: int = 256,
     ):
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = Tracer(jax_annotations=jax_annotations)
+        # every event also lands in the flight recorder's bounded ring, so
+        # a postmortem bundle has the recent timeline with zero extra call
+        # sites at the recording surfaces (DESIGN.md §9.y)
+        self.flight = FlightRecorder(capacity=flight_capacity)
 
     # ---- recording -------------------------------------------------------
     def span(self, name: str, **attrs):
@@ -43,6 +49,7 @@ class ServingTimeline:
 
     def event(self, name: str, **attrs) -> None:
         self.tracer.event(name, **attrs)
+        self.flight.note(name, **attrs)
 
     def gauge_sample(self, name: str, value: float) -> None:
         """Set the registry gauge and log a timeline sample (one value)."""

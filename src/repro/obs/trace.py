@@ -123,9 +123,12 @@ class Tracer:
             ev.append(
                 {
                     "name": c["name"], "ph": "C", "ts": c["ts_us"],
-                    "pid": 0, "args": {"value": c["value"]},
+                    "pid": 0, "tid": 0, "args": {"value": c["value"]},
                 }
             )
+        # one global timestamp order: every (pid, tid) stream is monotonic,
+        # which Perfetto's importer needs to thread the track correctly
+        ev.sort(key=lambda e: e["ts"])
         return {"traceEvents": ev, "displayTimeUnit": "ms"}
 
     def export_json(self, path: str, *, extra: dict | None = None) -> str:

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import indexing
 from repro.kernels import common
-from repro.obs import MetricsRegistry
+from repro.obs import DeviceCounterPlane, FlightRecorder, MetricsRegistry
 from repro.kernels.flatten import kernel as flatten_kernel
 from repro.kernels.paged import ops as paged_ops
 from repro.pool import extents as extents_mod
@@ -161,6 +161,7 @@ class SlabArena:
         memory_space: str | None = None,
         dispatch: str = "auto",
         grow_chunk: int | str = 1,
+        instrument: bool = False,
         registry: MetricsRegistry | None = None,
     ):
         """``initial_slabs`` pre-carves the pool at start (the high-water
@@ -194,6 +195,7 @@ class SlabArena:
         self.memory_space = memory_space
         self.dispatch = dispatch
         self.grow_chunk = grow_chunk
+        self.instrument = instrument
         # device mirrors of owners/bases, refreshed only when claims change
         self._tables_dev: tuple[jax.Array, jax.Array] | None = None
         # metrics (DESIGN.md §9): counters/gauges in a registry, the legacy
@@ -216,6 +218,11 @@ class SlabArena:
         reg.gauge_fn("pool.free_slabs", lambda: self.alloc.free_count)
         reg.gauge_fn("pool.reserved_slabs", lambda: self.alloc.reserved_total)
         reg.gauge_fn("pool.utilization", self.utilization)
+        # device counter plane + flight recorder (DESIGN.md §9.x/§9.y):
+        # instrumented appends hand their counter vector to the plane;
+        # invariant violations dump a postmortem bundle before raising
+        self.devctr = DeviceCounterPlane(reg)
+        self.flight = FlightRecorder()
 
     @property
     def alloc(self):
@@ -393,7 +400,7 @@ class SlabArena:
             mask_dev = jnp.asarray(mask)
             if mask_dev.dtype != jnp.bool_:
                 mask_dev = mask_dev != 0
-        data, sizes, pos = paged_ops.slab_append_donated(
+        outs = paged_ops.slab_append_donated(
             self._pool_arg(),
             owners,
             bases,
@@ -403,7 +410,11 @@ class SlabArena:
             use_ref=self.append_method in ("ref", "jnp"),
             memory_space=self.memory_space,
             dispatch=self.dispatch,
+            instrument=self.instrument,
         )
+        data, sizes, pos = outs[:3]
+        if self.instrument:
+            self.devctr.add(outs[3])  # a list append — no transfer
         new_exts = tuple(data) if isinstance(data, (tuple, list)) else (data,)
         self.pool = dataclasses.replace(self.pool, extents=new_exts)
         self.arr = dataclasses.replace(self.arr, sizes=sizes)
@@ -475,8 +486,54 @@ class SlabArena:
         return flat, total, starts
 
     # ---- verification (test/debug only: reads the device) ----------------
+    def _flight_dump(self, reason: str, error: BaseException | None = None,
+                     invariant: dict | None = None) -> None:
+        """Postmortem bundle on invariant failure; never raises or re-dumps."""
+        if error is not None and getattr(error, "_flightrec_dumped", False):
+            return
+        try:
+            state = {
+                "narrays": self.narrays,
+                "slab_size": self.slab_size,
+                "extent_sizes": list(self.pool.extent_sizes),
+                "n_slabs": self.pool.n_slabs,
+                "free_ids": np.flatnonzero(self.alloc.free).tolist(),
+                "refcounts": np.asarray(self.alloc.refcount).tolist(),
+                "npages": np.asarray(self.book.npages).tolist(),
+                "live_ub": np.asarray(self.planner.ub).tolist(),
+                "page_tables": [
+                    [int(s) for s in self.book.pages_of[i]]
+                    for i in range(self.narrays)
+                ],
+            }
+            if invariant:
+                state["invariant"] = dict(invariant)
+            self.flight.dump(
+                reason=reason, error=error, state=state,
+                metrics=self.registry.snapshot(),
+                device_counters=self.devctr.counters(),
+            )
+        except Exception:
+            return
+        if error is not None:
+            try:
+                error._flightrec_dumped = True
+            except Exception:
+                pass
+
     def check_invariants(self) -> dict:
-        """Cross-check device state against host mirrors; raises on drift."""
+        """Cross-check device state against host mirrors; raises on drift.
+
+        A failure dumps a flight-recorder bundle (offending slab ids, page
+        tables, refcounts) before the assertion propagates — DESIGN.md §9.y.
+        """
+        try:
+            return self._check_invariants_inner()
+        except AssertionError as e:
+            self._flight_dump("arena_invariant", e)
+            raise
+
+    def _check_invariants_inner(self) -> dict:
         free_dev = np.asarray(jax.device_get(self.pool.free))
         pages_dev = np.asarray(jax.device_get(self.arr.pages))
         sizes_dev = np.asarray(jax.device_get(self.arr.sizes))
@@ -505,10 +562,19 @@ class SlabArena:
         if len(claimed):
             vals, counts = np.unique(claimed, return_counts=True)
             refs[vals] = counts
-        assert (refs == self.alloc.refcount).all(), (
-            "refcounts drift from page tables: "
-            f"{np.flatnonzero(refs != self.alloc.refcount)}"
-        )
+        bad = np.flatnonzero(refs != self.alloc.refcount)
+        if len(bad):
+            err = AssertionError(f"refcounts drift from page tables: {bad}")
+            self._flight_dump(
+                "refcount_mismatch", err,
+                invariant={
+                    "check": "refcount_conservation",
+                    "offending_slabs": bad.tolist(),
+                    "expected_refcount": refs[bad].tolist(),
+                    "actual_refcount": np.asarray(self.alloc.refcount)[bad].tolist(),
+                },
+            )
+            raise err
         for i in range(self.narrays):
             npg = int(self.book.npages[i])
             assert (pages_dev[i, :npg] >= 0).all(), f"array {i}: hole in table"

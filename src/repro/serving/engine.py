@@ -49,7 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.obs import ServingTimeline
+from repro.obs import DeviceCounterPlane, ServingTimeline
 from repro.serving import kvcache, prefix as prefix_mod, scheduler as sched_mod, steps
 from repro.serving.sampler import sample
 
@@ -121,9 +121,12 @@ class Engine:
         *,
         policy: str | None = None,
         max_len: int = 4096,
+        instrument: bool = False,
         seed: int = 0,
         obs: ServingTimeline | None = None,
     ):
+        if instrument:
+            cfg = dataclasses.replace(cfg, instrument=True)
         self.params = params
         self.cfg = cfg
         self.policy = cfg.cache_policy if policy is None else policy
@@ -136,6 +139,7 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
         self.obs = obs if obs is not None else ServingTimeline()
         self.stats = EngineStats(self.obs.registry)
+        self.devctr = DeviceCounterPlane(self.obs.registry)
         self._decode_compiled: dict[Any, Any] = {}
 
     def _host_read(self, x, site: str):
@@ -263,7 +267,11 @@ class Engine:
             if max_len_host + 1 >= self._capacity(caches) and self.policy != "static":
                 caches = self._grow(caches)
             fn = self._decode_fn(caches)
-            logits, caches = fn(self.params, sampled[-1], caches, lengths)
+            if cfg.instrument:
+                logits, caches, ctr = fn(self.params, sampled[-1], caches, lengths)
+                self.devctr.add(ctr)
+            else:
+                logits, caches = fn(self.params, sampled[-1], caches, lengths)
             lengths = lengths + 1
             max_len_host += 1
             self.obs.registry.counter("engine.decode_steps").inc()
@@ -422,11 +430,17 @@ class BatchEngine:
         initial_slabs: int = 0,
         max_pages_hint: int = 0,
         prefix_cache: bool = False,
+        instrument: bool = False,
         seed: int = 0,
         obs: ServingTimeline | None = None,
     ):
         from repro.pool import PageBook, is_extent_schedule
 
+        if instrument:
+            # baked into the (frozen, hashable) config so the shared jit
+            # factories key on it: an uninstrumented engine reuses the
+            # pre-PR executables byte for byte (compile-spy tested)
+            cfg = dataclasses.replace(cfg, instrument=True)
         if cfg.n_enc_layers or cfg.n_prefix_embeds:
             raise NotImplementedError("BatchEngine serves decoder-only stacks")
         if admission not in ("chunked", "monolithic"):
@@ -452,6 +466,9 @@ class BatchEngine:
         self.key = jax.random.PRNGKey(seed)
         self.obs = obs if obs is not None else ServingTimeline()
         self.stats = BatchStats(self.obs.registry)
+        # device counter plane (DESIGN.md §9.x): step functions hand their
+        # counter vectors here; draining stays lazy (Counter.add_lazy)
+        self.devctr = DeviceCounterPlane(self.obs.registry)
         # shared host bookkeeping (same object the arena uses): allocator +
         # per-slot page counts + slab→page mapping + table-width policy
         self.book = PageBook(max_batch, quota_slabs=quota_slabs)
@@ -537,6 +554,86 @@ class BatchEngine:
         self.obs.gauge_sample("pool.live_tokens", live)
         self.obs.gauge_sample("pool.capacity_tokens", cap)
         self.obs.gauge_sample("pool.utilization", live / cap if cap else 0.0)
+
+    def drain_device_counters(self) -> dict[str, float]:
+        """Flush + materialize the device counter plane → {slot: total}.
+
+        This is a DRAIN POINT (one ``device_get`` per slot with pending
+        adds) — call it at end of run / bench report time, never per step.
+        """
+        return self.devctr.counters()
+
+    def _flightrec_state(self) -> dict:
+        """Full host-side engine snapshot for postmortem bundles.
+
+        Everything here is host bookkeeping (PageBook/allocator/scheduler
+        mirrors) — building the state dict never touches the device.
+        """
+        alloc = self.alloc
+        state: dict[str, Any] = {
+            "n_slots": self.B,
+            "slab_tokens": self.T,
+            "admission": self.admission,
+            "extent_sizes": list(self._extent_sizes),
+            "len_host": self._len_host.tolist(),
+            "slots": [
+                None
+                if r is None
+                else {"rid": r.rid, "generated": r.generated,
+                      "max_new_tokens": r.max_new_tokens, "done": r.done}
+                for r in self._slots
+            ],
+            "allocator": {
+                "n_slabs": alloc.n_slabs,
+                "free_slabs": int(np.sum(alloc.free)),
+                "free_ids": np.flatnonzero(alloc.free).tolist(),
+                "refcounts": np.asarray(alloc.refcount).tolist(),
+                "refcount_sum": int(np.sum(alloc.refcount)),
+            },
+            "page_tables": [
+                [int(s) for s in self.book.pages_of[slot]]
+                for slot in range(self.B)
+            ],
+            "reserved_total": int(self.book.reserved_total),
+            "scheduler": self.sched.describe() if self.sched is not None else None,
+            "prefix": (
+                {"cached_slabs": [int(s) for s in self.prefix.cached_slabs()]}
+                if self.prefix is not None
+                else None
+            ),
+            "pinned": {rid: ids.tolist() for rid, ids in self._matched.items()},
+        }
+        return state
+
+    def _flight_dump(self, reason: str, error: BaseException | None = None,
+                     invariant: dict | None = None) -> None:
+        """Dump a postmortem bundle; never raises, never dumps twice for
+        the same exception (nested failure paths re-raise through step())."""
+        if error is not None and getattr(error, "_flightrec_dumped", False):
+            return
+        try:
+            state = self._flightrec_state()
+            if invariant:
+                state["invariant"] = dict(invariant)
+            try:
+                metrics = self.obs.snapshot()  # lazy-counter drain point
+            except Exception:
+                metrics = None
+            try:
+                device_counters = self.devctr.counters()
+            except Exception:
+                device_counters = None
+            self.obs.flight.dump(
+                reason=reason, error=error, state=state,
+                metrics=metrics, device_counters=device_counters,
+            )
+        except Exception:
+            return  # the recorder must not mask the original failure
+        if error is not None:
+            try:
+                error._flightrec_dumped = True
+            except Exception:
+                pass
 
     def _note_admitted(self, req: Request, slot: int) -> None:
         req.queue_wait = time.time() - req.submit_t
@@ -907,11 +1004,16 @@ class BatchEngine:
         with self.obs.span(
             "prefill_chunk", rid=task.rid, t0=task.t0, width=task.width
         ):
-            logits, self.caches = _prefill_chunk_fn(self.cfg)(
+            outs = _prefill_chunk_fn(self.cfg)(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(slot, jnp.int32), jnp.asarray(task.t0, jnp.int32),
                 jnp.asarray(task.live, jnp.int32), jnp.asarray(row), first=first,
             )
+            if self.cfg.instrument:
+                logits, self.caches, ctr = outs
+                self.devctr.add(ctr)
+            else:
+                logits, self.caches = outs
         self.obs.registry.counter("serve.prefill_chunks").inc()
         self.sched.chunk_done(task)
         self._sample_live()
@@ -1045,8 +1147,12 @@ class BatchEngine:
                     self._ensure_free_slabs,
                     match=self._match_prefix if self.prefix is not None else None,
                 )
-            except BaseException:
+            except BaseException as e:
                 self._drop_pins()
+                from repro.pool import QuotaExceeded
+
+                if isinstance(e, QuotaExceeded):
+                    self._flight_dump("quota_exceeded", e)
                 raise
             for rid, slot, need in admits:
                 req = self._requests[rid]
@@ -1074,7 +1180,18 @@ class BatchEngine:
         ``max_chunks_per_step`` prefill chunks *and then* decodes the slots
         already in the decode phase — admitted sequences keep generating
         while new prompts stream in.
+
+        Any failure inside the step dumps a flight-recorder postmortem
+        bundle (event ring + engine state + drained counters) before the
+        exception propagates — DESIGN.md §9.y.
         """
+        try:
+            return self._step_inner()
+        except BaseException as e:
+            self._flight_dump("step_failure", e)
+            raise
+
+    def _step_inner(self) -> bool:
         self._admit_pending()
         tasks = self.sched.next_chunks() if self.sched is not None else []
         for task in tasks:
@@ -1121,10 +1238,17 @@ class BatchEngine:
         with self.obs.span(
             "decode_step", step=len(self._stream), active=len(active)
         ):
-            logits, self.caches = self._decode(
-                self.params, self.cur_tok, self.caches, self.lengths,
-                active=active_mask,
-            )
+            if self.cfg.instrument:
+                logits, self.caches, ctr = self._decode(
+                    self.params, self.cur_tok, self.caches, self.lengths,
+                    active=active_mask,
+                )
+                self.devctr.add(ctr)  # a list append — no transfer
+            else:
+                logits, self.caches = self._decode(
+                    self.params, self.cur_tok, self.caches, self.lengths,
+                    active=active_mask,
+                )
             self.key, k = jax.random.split(self.key)
             sampled = sample(k, logits, 0.0)
         step_dt = time.perf_counter() - step_t0
@@ -1205,9 +1329,26 @@ class BatchEngine:
         slab is exactly one page-table entry, one prefix-cache node, or one
         in-flight admission pin — Σ references == ``alloc.refcount`` per
         slab, and a slab is live iff someone references it.
+
+        A violation dumps a flight-recorder postmortem bundle naming the
+        offending slab ids before the assertion propagates.
         """
+        try:
+            self._check_free_list_inner()
+        except AssertionError as e:
+            self._flight_dump("engine_invariant", e)  # no-op if already dumped
+            raise
+
+    def _check_free_list_inner(self) -> None:
         free = np.asarray(self._host_read(self.free_dev, "free_list_debug"))
-        assert (free == self.alloc.free).all(), "device free bitmap drifted"
+        if not (free == self.alloc.free).all():
+            bad = np.flatnonzero(free != self.alloc.free)
+            err = AssertionError(f"device free bitmap drifted: slabs {bad}")
+            self._flight_dump(
+                "free_bitmap_drift", err,
+                invariant={"check": "free_bitmap", "offending_slabs": bad.tolist()},
+            )
+            raise err
         self.alloc.check()
         refs = np.zeros((self.alloc.n_slabs,), np.int64)
         for slot in range(self.B):
@@ -1219,13 +1360,34 @@ class BatchEngine:
         for ids in self._matched.values():
             for s in ids:
                 refs[s] += 1
-        assert (refs == self.alloc.refcount).all(), (
-            "refcounts drift from page tables + prefix cache: "
-            f"{np.flatnonzero(refs != self.alloc.refcount)}"
-        )
-        assert ((refs > 0) == ~self.alloc.free).all(), (
-            "slab freed while referenced (or live without references)"
-        )
+        bad = np.flatnonzero(refs != self.alloc.refcount)
+        if len(bad):
+            err = AssertionError(
+                f"refcounts drift from page tables + prefix cache: {bad}"
+            )
+            self._flight_dump(
+                "refcount_mismatch", err,
+                invariant={
+                    "check": "refcount_conservation",
+                    "offending_slabs": bad.tolist(),
+                    "expected_refcount": refs[bad].tolist(),
+                    "actual_refcount": np.asarray(
+                        self.alloc.refcount
+                    )[bad].tolist(),
+                },
+            )
+            raise err
+        bad = np.flatnonzero((refs > 0) == self.alloc.free)
+        if len(bad):
+            err = AssertionError(
+                "slab freed while referenced (or live without references): "
+                f"{bad}"
+            )
+            self._flight_dump(
+                "liveness_drift", err,
+                invariant={"check": "liveness", "offending_slabs": bad.tolist()},
+            )
+            raise err
         for i in self._attn_slots():
             pages = np.asarray(
                 self._host_read(self.caches[i]["pages"], "free_list_debug")

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import indexing
 from repro.models.attention import MASK_VALUE
+from repro.obs import device
 
 __all__ = [
     "init_cache",
@@ -415,6 +416,13 @@ def append(
         slab = cache["pages"][rows, pidx]
         slab = jnp.where((slab >= 0) & (pos < maxp * T), slab, -1)  # ⇒ drop
         slot = pos % T
+        if cfg is not None and cfg.instrument:
+            # one decode token per lane; a −1 slab is a dropped (wasted) lane
+            device.record(device.pack(**{
+                "slab_append.waves": 1,
+                "slab_append.lanes": int(k.shape[0]),
+                "slab_append.active_lanes": jnp.sum((slab >= 0).astype(jnp.int32)),
+            }))
         out = dict(cache)
         out["k_pool"] = _scatter_pool(cache["k_pool"], slab, slot, k[:, 0])
         out["v_pool"] = _scatter_pool(cache["v_pool"], slab, slot, v[:, 0])
@@ -452,11 +460,16 @@ def append(
     bucket_groups = tuple(
         tuple(cache[f"{base}{lvl}"] for lvl in range(n)) for base in bases
     )
-    groups, _, _ = push_back_ops.push_back_fused_multi(
+    inst = cfg is not None and cfg.instrument
+    outs = push_back_ops.push_back_fused_multi(
         bucket_groups, pos, b0, tuple(payloads), lane,
         use_ref=resolve_push_back_method("auto", k.shape[1]) != "fused",
         memory_space=cfg.kernel_memory_space if cfg is not None else None,
+        instrument=inst,
     )
+    groups = outs[0]
+    if inst:
+        device.record(outs[3])
     out = dict(cache)
     for base, levels in zip(bases, groups):
         for lvl in range(n):
@@ -563,6 +576,39 @@ def _gather_pool(pool, grp: jax.Array) -> jax.Array:
     return out.reshape(B, w * T, *exts[0].shape[2:])
 
 
+def _levels_walk_ctr(pages, length, T: int, npools: int) -> jax.Array:
+    """Device counters for the jnp geometric-levels walk: every level is
+    gathered at its padded-to-power-of-two width (−1 pages included — the
+    walk masks them in softmax, it does not skip them), so ``masked_lanes``
+    is the real over-read this path pays vs the gated Pallas kernel."""
+    from repro.pool.arena import geometric_page_groups
+
+    B = pages.shape[0]
+    tiles = 0
+    lanes = 0
+    live_pages = jnp.zeros((), jnp.int32)
+    masked = jnp.zeros((), jnp.int32)
+    kv = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    for lo, hi in geometric_page_groups(pages.shape[-1]):
+        full = 1
+        while full < hi - lo:
+            full *= 2
+        tiles += B * full
+        lanes += B * full * T
+        live_pages = live_pages + jnp.sum((pages[:, lo:hi] >= 0).astype(jnp.int32))
+        live_lanes = jnp.clip(kv - lo * T, 0, full * T)
+        masked = masked + jnp.sum(full * T - live_lanes)
+    return device.pack(**{
+        "paged_gather.launches": npools,
+        "paged_gather.tiles": npools * live_pages,
+        "paged_gather.masked_tiles": npools * (tiles - live_pages),
+        "paged_attend.launches": 1,
+        "paged_attend.tiles": tiles,
+        "paged_attend.lanes": lanes,
+        "paged_attend.masked_lanes": masked,
+    })
+
+
 def _attend_paged(cache, qf, length, cfg, state, _kv):
     """The paged walk: geometric page groups, or the flash-decode kernel."""
     from repro.pool.arena import geometric_page_groups
@@ -572,9 +618,20 @@ def _attend_paged(cache, qf, length, cfg, state, _kv):
     if cfg.paged_attend_impl == "pallas" and not _is_quant(cache):
         from repro.kernels.paged import ops as paged_ops
 
+        if cfg.instrument:
+            out, vec = paged_ops.paged_attend(
+                qf, cache["k_pool"], cache["v_pool"], pages, length,
+                memory_space=cfg.kernel_memory_space, instrument=True,
+            )
+            device.record(vec)
+            return out
         return paged_ops.paged_attend(
             qf, cache["k_pool"], cache["v_pool"], pages, length,
             memory_space=cfg.kernel_memory_space,
+        )
+    if cfg.instrument:
+        device.record(
+            _levels_walk_ctr(pages, length, T, 4 if _is_quant(cache) else 2)
         )
     for lo, hi in geometric_page_groups(pages.shape[-1]):
         width = hi - lo
@@ -670,6 +727,15 @@ def chunk_attend(
     T = _pool_first(cache["k_pool"]).shape[-3]
     Skv = pages_row.shape[0] * T
     if Skv and not first:
+        if cfg.instrument:
+            # fixed-width prefix gather: every page slot walked, −1 = waste
+            np_ = 4 if quant else 2
+            live_p = jnp.sum((pages_row >= 0).astype(jnp.int32))
+            device.record(device.pack(**{
+                "paged_gather.launches": np_,
+                "paged_gather.tiles": np_ * live_p,
+                "paged_gather.masked_tiles": np_ * (pages_row.shape[0] - live_p),
+            }))
         grp = pages_row[None]  # (1, maxp)
         pk, pv_ = _kv(
             _gather_pool(cache["k_pool"], grp),
@@ -743,6 +809,12 @@ def scatter_chunk(
     ok = (jnp.arange(Cb) < live) & (slab >= 0) & (pos < maxp * T)
     slab = jnp.where(ok, slab, -1)  # dead lanes ⇒ mode="drop"
     slot = pos % T
+    if cfg.instrument:
+        device.record(device.pack(**{
+            "slab_append.waves": 1,
+            "slab_append.lanes": Cb,
+            "slab_append.active_lanes": jnp.sum(ok.astype(jnp.int32)),
+        }))
     out = dict(cache)
     out["k_pool"] = _scatter_pool(cache["k_pool"], slab, slot, k)
     out["v_pool"] = _scatter_pool(cache["v_pool"], slab, slot, v)

@@ -265,3 +265,24 @@ class Scheduler:
         self.rid_of_slot[slot] = None
         self.t0[slot] = 0
         self.length[slot] = 0
+
+    def describe(self) -> dict:
+        """Full host state → JSON-ready dict (flight-recorder bundles)."""
+        return {
+            "tick": self.tick,
+            "phase": list(self.phase),
+            "rid_of_slot": list(self.rid_of_slot),
+            "t0": self.t0.tolist(),
+            "length": self.length.tolist(),
+            "prefilling": list(self._prefillq),
+            "pending": [
+                {
+                    "rid": w.rid, "length": w.length, "skips": w.skips,
+                    "submit_tick": w.submit_tick,
+                }
+                for w in self.pending
+            ],
+            "buckets": list(self.buckets),
+            "chunk": self.C,
+            "max_chunks_per_step": self.max_chunks,
+        }

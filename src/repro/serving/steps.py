@@ -7,6 +7,7 @@ cells lower: one new token against a cache filled to seq_len.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, NamedTuple
 
@@ -21,6 +22,7 @@ from repro.models.mlp import mlp_block
 from repro.models.moe import moe_block
 from repro.models.modules import embed, rms_norm, unembed
 
+from repro.obs import device
 from repro.serving import kvcache
 
 __all__ = [
@@ -154,7 +156,8 @@ def prefill_chunk(
     cfg: ModelConfig,
     first: bool = True,  # STATIC: t0 == 0 (fresh state, no prefix to attend)
 ) -> tuple[jax.Array, list]:
-    """→ (last-live-position logits (1, V), updated caches).
+    """→ (last-live-position logits (1, V), updated caches) — plus the
+    summed device counter vector when ``cfg.instrument`` is set.
 
     The engine's device page table stays −1 for the slot until the final
     chunk (prefilling slots are inert under concurrent decode steps), so the
@@ -173,53 +176,71 @@ def prefill_chunk(
     positions = (t0 + jnp.arange(Cb))[None, :]  # (1, Cb) global positions
 
     def period_body(carry, xs):
-        x, caches = carry
+        if cfg.instrument:
+            x, caches, ctr = carry
+        else:
+            x, caches = carry
         x = constrain(x, ("batch", None, None))
         period_params, idx = xs
-        for lslot, kind in enumerate(cfg.layout):
-            sp = period_params[lslot]
-            c = _cache_get(caches[lslot], idx)
-            h = rms_norm(x, sp["norm1"], cfg.norm_eps)
-            if kind == "mamba":
-                st = (
-                    None
-                    if first
-                    else ssm_mod.MambaState(
-                        conv=c["conv"][slot][None], ssd=c["ssd"][slot][None]
+        # the tape is opened per scan-body iteration so recorded vectors
+        # never escape their trace level (device.tape docstring)
+        scope = device.tape() if cfg.instrument else contextlib.nullcontext()
+        with scope as t:
+            for lslot, kind in enumerate(cfg.layout):
+                sp = period_params[lslot]
+                c = _cache_get(caches[lslot], idx)
+                h = rms_norm(x, sp["norm1"], cfg.norm_eps)
+                if kind == "mamba":
+                    st = (
+                        None
+                        if first
+                        else ssm_mod.MambaState(
+                            conv=c["conv"][slot][None], ssd=c["ssd"][slot][None]
+                        )
                     )
+                    y, st = ssm_mod.mamba_block(
+                        sp["mamba"], h, cfg, state=st, return_state=True
+                    )
+                    x = x + y
+                    caches[lslot] = _cache_put(
+                        caches[lslot],
+                        {
+                            "conv": c["conv"].at[slot].set(
+                                st.conv[0].astype(c["conv"].dtype)
+                            ),
+                            "ssd": c["ssd"].at[slot].set(st.ssd[0]),
+                        },
+                        idx,
+                    )
+                    continue
+                q, k, v = project_qkv(sp["attn"], h, cfg, positions)
+                att = kvcache.chunk_attend(
+                    c, pages_row, q, k, v, t0, live, cfg, first=first
                 )
-                y, st = ssm_mod.mamba_block(
-                    sp["mamba"], h, cfg, state=st, return_state=True
-                )
-                x = x + y
-                caches[lslot] = _cache_put(
-                    caches[lslot],
-                    {
-                        "conv": c["conv"].at[slot].set(
-                            st.conv[0].astype(c["conv"].dtype)
-                        ),
-                        "ssd": c["ssd"].at[slot].set(st.ssd[0]),
-                    },
-                    idx,
-                )
-                continue
-            q, k, v = project_qkv(sp["attn"], h, cfg, positions)
-            att = kvcache.chunk_attend(
-                c, pages_row, q, k, v, t0, live, cfg, first=first
-            )
-            x = x + project_out(sp["attn"], att)
-            c2 = kvcache.scatter_chunk(c, pages_row, k, v, t0, live, cfg)
-            x = _mlp_or_moe(sp, x, lslot, cfg)
-            caches[lslot] = _cache_put(caches[lslot], c2, idx)
+                x = x + project_out(sp["attn"], att)
+                c2 = kvcache.scatter_chunk(c, pages_row, k, v, t0, live, cfg)
+                x = _mlp_or_moe(sp, x, lslot, cfg)
+                caches[lslot] = _cache_put(caches[lslot], c2, idx)
+        if cfg.instrument:
+            return (x, caches, ctr + t.total()), None
         return (x, caches), None
 
-    (x, new_caches), _ = jax.lax.scan(
-        period_body,
-        (x, list(caches)),
-        (params["layers"], jnp.arange(cfg.n_periods)),
-    )
+    if cfg.instrument:
+        (x, new_caches, ctr), _ = jax.lax.scan(
+            period_body,
+            (x, list(caches), device.zeros()),
+            (params["layers"], jnp.arange(cfg.n_periods)),
+        )
+    else:
+        (x, new_caches), _ = jax.lax.scan(
+            period_body,
+            (x, list(caches)),
+            (params["layers"], jnp.arange(cfg.n_periods)),
+        )
     last = jax.lax.dynamic_index_in_dim(x[0], live - 1, 0, keepdims=False)
     logits = logits_from_hidden(params, last[None], cfg)
+    if cfg.instrument:
+        return logits, new_caches, ctr
     return logits, new_caches
 
 
@@ -274,6 +295,10 @@ def decode_step(
     ``active`` masks *state writes* for rows mid-chunked-prefill: their KV
     appends already drop (page table −1) but Mamba conv/SSD rows would be
     clobbered by the batch-wide recurrence without the gate.
+
+    With ``cfg.instrument`` the return gains a third element: the summed
+    device counter vector (obs/device) recorded by the cache ops across all
+    periods — device data, no transfer.
     """
     token = token.reshape(token.shape[0], 1)
     x = embed(params["embed"], token).astype(jnp.dtype(cfg.dtype))
@@ -285,49 +310,67 @@ def decode_step(
         # caches ride the CARRY and are updated in place (dynamic-update-
         # slice) — the xs→ys formulation double-buffers the whole KV cache
         # (2× HBM on a 32k×128 cache; caught by the dry-run memory analysis).
-        x, caches = carry
+        if cfg.instrument:
+            x, caches, ctr = carry
+        else:
+            x, caches = carry
         x = constrain(x, ("batch", None, None))
         period_params, idx = xs
-        for slot, kind in enumerate(cfg.layout):
-            sp = period_params[slot]
-            c = _cache_get(caches[slot], idx)
-            h = rms_norm(x, sp["norm1"], cfg.norm_eps)
-            if kind == "mamba":
-                y, st = ssm_mod.mamba_decode_step(
-                    sp["mamba"], h, ssm_mod.MambaState(c["conv"], c["ssd"]), cfg
-                )
-                x = x + y
-                new_conv, new_ssd = st.conv, st.ssd
-                if active is not None:
-                    keep = active[:, None, None]
-                    new_conv = jnp.where(keep, new_conv, c["conv"])
-                    new_ssd = jnp.where(keep[..., None], new_ssd, c["ssd"])
-                caches[slot] = _cache_put(
-                    caches[slot], {"conv": new_conv, "ssd": new_ssd}, idx
-                )
-                continue
-            q, k, v = project_qkv(sp["attn"], h, cfg, positions)
-            kv_only = {key: val for key, val in c.items() if not key.startswith("cross")}
-            c2 = kvcache.append(kv_only, k, v, pos, cfg)
-            att = kvcache.attend(c2, q, pos + 1, cfg)
-            x = x + project_out(sp["attn"], att)
-            if "cross_k" in c:
-                hc = rms_norm(x, sp["cross_norm"], cfg.norm_eps)
-                qc = jnp.einsum("bsd,dhk->bshk", hc, sp["cross"]["wq"])
-                enc_len = c["cross_k"].shape[-3]
-                attc = kvcache.attend(
-                    {"k": c["cross_k"], "v": c["cross_v"]}, qc,
-                    jnp.full((B,), enc_len, jnp.int32), cfg,
-                )
-                x = x + project_out(sp["cross"], attc)
-            x = _mlp_or_moe(sp, x, slot, cfg)
-            caches[slot] = _cache_put(caches[slot], c2, idx)
+        # per-iteration tape: kvcache records land here and fold into the
+        # scan carry, so the counter vector rides the step as device data
+        scope = device.tape() if cfg.instrument else contextlib.nullcontext()
+        with scope as t:
+            for slot, kind in enumerate(cfg.layout):
+                sp = period_params[slot]
+                c = _cache_get(caches[slot], idx)
+                h = rms_norm(x, sp["norm1"], cfg.norm_eps)
+                if kind == "mamba":
+                    y, st = ssm_mod.mamba_decode_step(
+                        sp["mamba"], h, ssm_mod.MambaState(c["conv"], c["ssd"]), cfg
+                    )
+                    x = x + y
+                    new_conv, new_ssd = st.conv, st.ssd
+                    if active is not None:
+                        keep = active[:, None, None]
+                        new_conv = jnp.where(keep, new_conv, c["conv"])
+                        new_ssd = jnp.where(keep[..., None], new_ssd, c["ssd"])
+                    caches[slot] = _cache_put(
+                        caches[slot], {"conv": new_conv, "ssd": new_ssd}, idx
+                    )
+                    continue
+                q, k, v = project_qkv(sp["attn"], h, cfg, positions)
+                kv_only = {key: val for key, val in c.items() if not key.startswith("cross")}
+                c2 = kvcache.append(kv_only, k, v, pos, cfg)
+                att = kvcache.attend(c2, q, pos + 1, cfg)
+                x = x + project_out(sp["attn"], att)
+                if "cross_k" in c:
+                    hc = rms_norm(x, sp["cross_norm"], cfg.norm_eps)
+                    qc = jnp.einsum("bsd,dhk->bshk", hc, sp["cross"]["wq"])
+                    enc_len = c["cross_k"].shape[-3]
+                    attc = kvcache.attend(
+                        {"k": c["cross_k"], "v": c["cross_v"]}, qc,
+                        jnp.full((B,), enc_len, jnp.int32), cfg,
+                    )
+                    x = x + project_out(sp["cross"], attc)
+                x = _mlp_or_moe(sp, x, slot, cfg)
+                caches[slot] = _cache_put(caches[slot], c2, idx)
+        if cfg.instrument:
+            return (x, caches, ctr + t.total()), None
         return (x, caches), None
 
-    (x, new_caches), _ = jax.lax.scan(
-        period_body,
-        (x, list(caches)),
-        (params["layers"], jnp.arange(cfg.n_periods)),
-    )
+    if cfg.instrument:
+        (x, new_caches, ctr), _ = jax.lax.scan(
+            period_body,
+            (x, list(caches), device.zeros()),
+            (params["layers"], jnp.arange(cfg.n_periods)),
+        )
+    else:
+        (x, new_caches), _ = jax.lax.scan(
+            period_body,
+            (x, list(caches)),
+            (params["layers"], jnp.arange(cfg.n_periods)),
+        )
     logits = logits_from_hidden(params, x[:, 0], cfg)
+    if cfg.instrument:
+        return logits, new_caches, ctr
     return logits, new_caches

@@ -12,6 +12,35 @@ assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
     "tests must see the real device count; dryrun.py owns XLA_FLAGS"
 )
 
+# Flight-recorder bundles (DESIGN.md §9.y): route postmortem dumps from
+# engine-test failures to a known directory so CI can upload them as an
+# artifact (ci.yml overrides this with a workspace-relative path).  The
+# directory is only created when a failure actually dumps a bundle.
+os.environ.setdefault(
+    "REPRO_FLIGHTREC_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "test-artifacts", "flightrec"),
+)
+
+import gc
+
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_executables_per_module():
+    """Release each module's jit executables once the module finishes.
+
+    Every XLA:CPU compile mmaps JIT code pages and the suite never unloads
+    test modules, so a full run accumulates memory maps until it crosses the
+    kernel's vm.max_map_count (65530 by default) and LLVM's allocator
+    segfaults mid-compile.  Clearing per module keeps the peak bounded by the
+    largest single module while leaving intra-module warm-cache assertions
+    (compile spies, shared engine fixtures) untouched.
+    """
+    yield
+    gc.collect()
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,192 @@
+"""Flight recorder (ISSUE 10): bounded event ring, postmortem bundles, the
+offline loader, and the acceptance scenario — an engineered refcount
+violation in a live ``BatchEngine`` must produce a bundle that round-trips
+through ``repro.obs.dump`` and names the offending slab id.
+"""
+import json
+
+import jax
+import pytest
+
+from repro.obs import FlightRecorder, ServingTimeline
+from repro.obs import dump as dump_mod
+from repro.obs.flightrec import SCHEMA
+
+
+# --------------------------------------------------------------------------
+# ring + bundle mechanics
+# --------------------------------------------------------------------------
+
+def test_ring_is_bounded_and_keeps_the_most_recent_events():
+    fr = FlightRecorder(capacity=4)
+    for i in range(10):
+        fr.note("tick", i=i)
+    assert len(fr) == 4
+    b = fr.bundle(reason="test")
+    assert b["events_recorded"] == 10
+    assert [e["attrs"]["i"] for e in b["events"]] == [6, 7, 8, 9]
+    seqs = [e["seq"] for e in b["events"]]
+    assert seqs == sorted(seqs)
+
+
+def test_timeline_events_feed_the_ring_automatically():
+    tl = ServingTimeline(flight_capacity=8)
+    tl.event("admit", rid=3)
+    tl.event("complete", rid=3)
+    names = [e["name"] for e in tl.flight.events]
+    assert names == ["admit", "complete"]
+    assert tl.flight.events[0]["attrs"]["rid"] == 3
+
+
+def test_bundle_round_trips_through_loader(tmp_path):
+    fr = FlightRecorder(capacity=8)
+    fr.note("grow", slabs=2)
+    err = AssertionError("refcounts drift from page tables: [5]")
+    path = fr.dump(
+        reason="refcount_mismatch",
+        error=err,
+        state={"invariant": {"offending_slabs": [5]}, "n_slabs": 8},
+        metrics={"counters": {"serve.admitted": 1}},
+        device_counters={"slab_append.waves": 3.0},
+        directory=str(tmp_path),
+    )
+    assert path is not None and path.startswith(str(tmp_path))
+    b = dump_mod.load_bundle(path)
+    assert b["schema"] == SCHEMA
+    assert b["reason"] == "refcount_mismatch"
+    assert b["error"]["type"] == "AssertionError"
+    assert b["state"]["invariant"]["offending_slabs"] == [5]
+    assert b["device_counters"]["slab_append.waves"] == 3.0
+    assert fr.last_bundle["reason"] == "refcount_mismatch"
+    # the pretty-printer runs end to end and surfaces the headline facts
+    text = dump_mod.summarize(b)
+    assert "refcount_mismatch" in text
+    assert "5" in text
+
+
+def test_dump_without_directory_keeps_bundle_in_process(monkeypatch):
+    monkeypatch.delenv("REPRO_FLIGHTREC_DIR", raising=False)
+    fr = FlightRecorder()
+    assert fr.dump(reason="x", state={}) is None
+    assert fr.last_bundle["reason"] == "x"
+
+
+def test_dump_env_var_directory(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FLIGHTREC_DIR", str(tmp_path / "artifacts"))
+    fr = FlightRecorder()
+    path = fr.dump(reason="env_target", state={})
+    assert path is not None
+    assert json.load(open(path))["reason"] == "env_target"
+
+
+def test_dump_main_cli_smoke(tmp_path, capsys):
+    fr = FlightRecorder()
+    fr.note("admit", rid=0)
+    path = fr.dump(reason="smoke", state={"n_slots": 2}, directory=str(tmp_path))
+    assert dump_mod.main([path]) == 0
+    out = capsys.readouterr().out
+    assert "smoke" in out and "admit" in out
+
+
+def test_loader_rejects_non_bundles(tmp_path):
+    p = tmp_path / "junk.json"
+    p.write_text(json.dumps({"schema": "other/1"}))
+    with pytest.raises(ValueError):
+        dump_mod.load_bundle(str(p))
+
+
+def test_jsonable_handles_numpy_state():
+    import numpy as np
+
+    fr = FlightRecorder()
+    fr.note("ev", ids=np.asarray([1, 2]), val=np.float32(0.5))
+    b = fr.bundle(reason="np", state={"refs": np.asarray([0, 1])})
+    json.dumps(b)  # fully serializable
+    assert b["events"][0]["attrs"]["ids"] == [1, 2]
+    assert b["state"]["refs"] == [0, 1]
+
+
+# --------------------------------------------------------------------------
+# acceptance: engineered invariant violation → named offending slab
+# --------------------------------------------------------------------------
+
+def _engine():
+    from repro.configs import reduced
+    from repro.models import transformer
+    from repro.serving.engine import BatchEngine
+
+    cfg = reduced("qwen2.5-3b", cache_b0=4)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return BatchEngine(params, cfg, max_batch=2, instrument=True)
+
+
+def test_refcount_violation_dumps_bundle_naming_offending_slab(
+    tmp_path, monkeypatch
+):
+    monkeypatch.setenv("REPRO_FLIGHTREC_DIR", str(tmp_path))
+    be = _engine()
+    be.submit(list(range(1, 10)), 8)
+    for _ in range(3):
+        be.step()
+    claimed = [s for s in range(be.alloc.n_slabs) if not be.alloc.free[s]]
+    assert claimed, "the request must hold at least one slab"
+    be.alloc.refcount[claimed[0]] += 1  # engineered corruption
+    with pytest.raises(AssertionError):
+        be.check_free_list()
+    assert be.obs.flight.last_path is not None
+    b = dump_mod.load_bundle(be.obs.flight.last_path)
+    assert b["reason"] == "refcount_mismatch"
+    inv = b["state"]["invariant"]
+    assert inv["check"] == "refcount_conservation"
+    assert inv["offending_slabs"] == [claimed[0]]
+    exp = inv["expected_refcount"][claimed[0]]
+    act = inv["actual_refcount"][claimed[0]]
+    assert act == exp + 1
+    # the bundle carries live context: scheduler state, events, counters
+    assert b["state"]["scheduler"]["phase"].count("decode") == 1
+    assert b["events"], "ring must hold the admit/step events"
+    assert any(v > 0 for v in (b["device_counters"] or {}).values())
+    # the postmortem renderer names the slab too
+    assert str(claimed[0]) in dump_mod.summarize(b)
+
+
+def test_engine_step_failure_is_dumped_once(monkeypatch, tmp_path):
+    """A failure inside step() writes one bundle; nested handlers must not
+    double-dump the same exception."""
+    monkeypatch.setenv("REPRO_FLIGHTREC_DIR", str(tmp_path))
+    be = _engine()
+    be.submit([1, 2, 3], 4)
+    boom = RuntimeError("injected")
+
+    def explode():
+        raise boom
+
+    monkeypatch.setattr(be, "_step_inner", explode)
+    with pytest.raises(RuntimeError):
+        be.step()
+    first = be.obs.flight.last_path
+    assert first is not None
+    assert dump_mod.load_bundle(first)["reason"] == "step_failure"
+    with pytest.raises(RuntimeError):
+        be.step()  # same exception object re-raised → already marked
+    assert be.obs.flight.last_path == first
+
+
+def test_arena_invariant_violation_dumps_bundle(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FLIGHTREC_DIR", str(tmp_path))
+    import jax.numpy as jnp
+
+    from repro.pool.arena import SlabArena
+
+    import numpy as np
+
+    ar = SlabArena(3, 4, initial_slabs=2, instrument=True)
+    elems = jnp.arange(6, dtype=jnp.float32).reshape(3, 2)
+    ar.append(elems, np.ones((3, 2), bool))  # claim slabs first
+    ar.check_invariants()  # clean arena passes
+    ar.alloc.refcount[0] += 1
+    with pytest.raises(AssertionError):
+        ar.check_invariants()
+    b = dump_mod.load_bundle(ar.flight.last_path)
+    assert b["reason"] == "refcount_mismatch"
+    assert b["state"]["invariant"]["offending_slabs"] == [0]

@@ -97,3 +97,52 @@ def test_snapshot_is_json_safe():
     reg.gauge("g").set(1.5)
     reg.histogram("h").observe(3.0)
     json.dumps(reg.snapshot())  # must not raise (no numpy scalars leak)
+
+
+def test_histogram_is_exact_below_the_reservoir_cap():
+    from repro.obs.registry import RESERVOIR_CAP
+
+    reg = MetricsRegistry()
+    h = reg.histogram("exact")
+    vals = [float(i) for i in range(100)]
+    for v in vals:
+        h.observe(v)
+    assert h.values() == vals  # every observation stored, in order
+    assert h.count() == 100 and h.sum() == sum(vals)
+    assert h.quantile(0.0) == 0.0 and h.quantile(1.0) == 99.0
+    assert 100 < RESERVOIR_CAP
+
+
+def test_histogram_memory_is_bounded_past_the_cap():
+    """Satellite 1: per-labelset storage caps at RESERVOIR_CAP while
+    count/sum/mean stay exact running totals."""
+    from repro.obs.registry import RESERVOIR_CAP
+
+    reg = MetricsRegistry()
+    h = reg.histogram("bounded")
+    n = RESERVOIR_CAP + 500
+    for i in range(n):
+        h.observe(float(i), rid=0)
+    assert len(h.values(rid=0)) == RESERVOIR_CAP
+    assert h.count(rid=0) == n
+    assert h.sum(rid=0) == float(n * (n - 1) // 2)
+    # the reservoir holds real observations and a sane spread
+    kept = h.values(rid=0)
+    assert all(0 <= v < n for v in kept)
+    q = h.quantile(0.5, rid=0)
+    assert 0 <= q < n
+    # other label sets are independent reservoirs
+    h.observe(1.0, rid=1)
+    assert h.values(rid=1) == [1.0]
+
+
+def test_histogram_reservoir_is_deterministic_per_metric_name():
+    from repro.obs.registry import RESERVOIR_CAP
+
+    def fill(reg):
+        h = reg.histogram("det")
+        for i in range(RESERVOIR_CAP + 200):
+            h.observe(float(i))
+        return h.values()
+
+    assert fill(MetricsRegistry()) == fill(MetricsRegistry())

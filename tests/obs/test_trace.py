@@ -76,6 +76,52 @@ def test_exports_round_trip_through_files(tmp_path):
     }
 
 
+def test_chrome_trace_timestamps_are_monotonic_per_tid():
+    """Perfetto importer contract (ISSUE 10 satellite): every (pid, tid)
+    stream is emitted in nondecreasing ts order, complete durations are
+    non-negative, and every event names a track."""
+    tr = Tracer()
+    with tr.span("outer"):
+        with tr.span("inner"):
+            pass
+        tr.event("mid")
+        with tr.span("inner2"):
+            pass
+    tr.sample("pool.utilization", 0.5)
+    tr.event("late")
+    tr.sample("pool.utilization", 0.75)
+    doc = tr.to_chrome()
+    streams = {}
+    for e in doc["traceEvents"]:
+        assert "tid" in e and "pid" in e, f"{e['ph']} event lost its track"
+        assert e["ts"] >= 0
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+        streams.setdefault((e["pid"], e["tid"]), []).append(e["ts"])
+    for ts in streams.values():
+        assert ts == sorted(ts), "per-tid timestamps must be monotonic"
+
+
+def test_chrome_counter_samples_match_registry_series(tmp_path):
+    """Every ``ph: C`` event is one recorded gauge sample, value-for-value,
+    and the final sample agrees with the registry's current gauge value."""
+    import json as _json
+
+    tl = ServingTimeline()
+    recorded = [0.25, 0.5, 0.125]
+    for v in recorded:
+        tl.gauge_sample("pool.utilization", v)
+    tl.gauge_sample("pool.live_tokens", 7)
+    cpath = tl.export_chrome(str(tmp_path / "trace.json"))
+    te = _json.loads(open(cpath).read())["traceEvents"]
+    util = [e for e in te if e["ph"] == "C" and e["name"] == "pool.utilization"]
+    assert [e["args"]["value"] for e in util] == recorded
+    assert [e["ts"] for e in util] == sorted(e["ts"] for e in util)
+    assert util[-1]["args"]["value"] == tl.registry.gauge("pool.utilization").value()
+    live = [e for e in te if e["ph"] == "C" and e["name"] == "pool.live_tokens"]
+    assert [e["args"]["value"] for e in live] == [7]
+
+
 def test_jax_annotation_passthrough_smoke():
     """jax_annotations=True wraps span bodies in jax.profiler.TraceAnnotation
     without changing the recorded spans."""

@@ -174,6 +174,88 @@ def test_peak_live_tokens_sees_inflight_chunked_prefill():
     assert len(out[rid]) == len(prompt) + 2
 
 
+def test_instrumented_decode_hot_path_stays_zero_sync(monkeypatch):
+    """ISSUE 10 acceptance: with the device counter plane ON, steady-state
+    decode still issues zero device→host transfers — counter vectors ride
+    the step as device data and pend in the plane until an explicit drain."""
+    cfg, params = _setup()
+    be = BatchEngine(params, cfg, max_batch=4, instrument=True)
+    for p in RAGGED_PROMPTS[:4]:
+        be.submit(p, 30)
+    while be.sched.prefilling or be.sched.pending:
+        be.step()
+    be.drain_device_counters()  # flush prefill-era pends before the guard
+
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    pend0 = be.devctr.pending
+    with jax.transfer_guard_device_to_host("disallow"):
+        for _ in range(5):
+            be.step()
+    assert calls == [], "instrumented decode must not read the device"
+    assert be.devctr.pending == pend0 + 5, "each step pends one vector"
+    # the drain point works and actually saw the steps
+    monkeypatch.undo()
+    got = be.drain_device_counters()
+    assert be.devctr.pending == 0
+    assert any(v > 0 for v in got.values())
+
+
+def test_instrumentation_is_bit_exact_and_counts_kernel_work():
+    cfg, params = _setup()
+    prompts = RAGGED_PROMPTS[:5]
+    plain = BatchEngine(params, cfg, max_batch=4)
+    inst = BatchEngine(params, cfg, max_batch=4, instrument=True)
+    out_plain = plain.run_all(prompts, 6)
+    out_inst = inst.run_all(prompts, 6)
+    assert out_inst == out_plain, "counters must not perturb the tokens"
+    ctr = inst.drain_device_counters()
+    # the paged serving path exercises gather + attend + slab appends
+    assert ctr["paged_attend.lanes"] > 0
+    assert ctr["paged_gather.launches"] > 0
+    assert ctr["slab_append.active_lanes"] > 0
+    # drained values land in the shared registry under the device. prefix
+    snap = inst.obs.snapshot()["counters"]
+    assert snap["device.paged_attend.lanes"] == ctr["paged_attend.lanes"]
+    # an uninstrumented engine records nothing on the plane
+    assert all(v == 0 for v in plain.drain_device_counters().values())
+
+
+def test_instrument_off_compiles_nothing_after_instrumented_runs():
+    """The instrument flag rides the frozen config into the shared jit
+    factories: an instrumented fleet must not evict or fracture the plain
+    engine's traces (OFF stays provably free)."""
+    import jax.monitoring
+
+    from test_trace_count import COMPILE_EVENT
+
+    cfg, params = _setup()
+    prompts = RAGGED_PROMPTS[:3]
+    kw = dict(max_batch=2, initial_slabs=32, max_pages_hint=16)
+    first = BatchEngine(params, cfg, **kw).run_all(prompts, 3)
+    BatchEngine(params, cfg, instrument=True, **kw).run_all(prompts, 3)
+
+    compiles: list[str] = []
+
+    def spy(event, duration, **attrs):
+        if event == COMPILE_EVENT:
+            compiles.append(event)
+
+    jax.monitoring.register_event_duration_secs_listener(spy)
+    try:
+        warm = BatchEngine(params, cfg, **kw).run_all(prompts, 3)
+    finally:
+        from jax._src import monitoring as _mon
+
+        _mon._unregister_event_duration_listener_by_callback(spy)
+    assert warm == first
+    assert not compiles, (
+        f"plain engine recompiled {len(compiles)} traces after an "
+        "instrumented engine ran — the instrument flag leaked into the key"
+    )
+
+
 def test_views_share_one_registry():
     """The legacy stats views are reads of the same registry the timeline
     snapshots — not copies that can drift."""
